@@ -1,0 +1,67 @@
+"""Kernel shape sweeps: Pallas vs oracle wall time + allclose verification.
+
+Interpret-mode timings are for regression tracking; the allclose checks are
+the correctness payload (mirrored by tests/test_kernels_sweep.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(f, *args, reps: int = 2) -> float:
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main() -> list[tuple[str, float, str]]:
+    from repro.kernels.secded import kernel as sk, ref as sr
+    from repro.kernels.ecc_matmul import kernel as mk, ref as mr
+    from repro.kernels.flash_attention import kernel as fk, ref as fr
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    for n, d in [(16, 1024), (64, 2048), (128, 4096)]:
+        data = jnp.asarray(rng.integers(0, 2**32, size=(n, d),
+                                        dtype=np.uint32))
+        ck = sk.encode(data)
+        assert (ck == sr.encode(data)).all()
+        rows.append((f"secded_encode_{n}x{d}", _time(sk.encode, data),
+                     f"ref_us={_time(sr.encode, data):.1f},allclose=1"))
+
+    for m, k, n in [(128, 256, 128), (256, 512, 256)]:
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.bfloat16)
+        bits, codes = mr.protect(a)
+        yk = mk.ecc_matmul(bits, codes, b)
+        yr = mr.ecc_matmul(bits, codes, b)
+        ok = bool(jnp.allclose(yk, yr, rtol=1e-5, atol=1e-5))
+        rows.append((f"ecc_matmul_{m}x{k}x{n}",
+                     _time(mk.ecc_matmul, bits, codes, b),
+                     f"ref_us={_time(mr.ecc_matmul, bits, codes, b):.1f},"
+                     f"allclose={int(ok)}"))
+
+    for b, hq, hkv, s, d in [(1, 4, 2, 128, 64), (2, 8, 2, 256, 64)]:
+        q = jnp.asarray(rng.standard_normal((b, hq, s, d)), jnp.float32)
+        kk = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+        yk = fk.attention(q, kk, v)
+        yr = fr.attention(q, kk, v)
+        ok = bool(jnp.allclose(yk, yr, rtol=2e-5, atol=2e-5))
+        rows.append((f"flash_attn_b{b}h{hq}s{s}",
+                     _time(fk.attention, q, kk, v),
+                     f"ref_us={_time(fr.attention, q, kk, v):.1f},"
+                     f"allclose={int(ok)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in main():
+        print(f"{name},{val:.1f},{derived}")

@@ -1,0 +1,104 @@
+"""Figs. 9–11 reproduction: 40 multiprogrammed workloads on the DRAM model.
+
+Sweeps the number of memory-intensive applications per 4-core workload from
+0 to 4 (the paper's 0–100%), eight random mixes each = 40 workloads. Reports
+per configuration:
+  * weighted speedup, normalised to Baseline   (Fig. 9)
+  * memory requests, normalised               (Fig. 10a)
+  * average concurrent requests, normalised   (Fig. 10b)
+  * row-buffer hit rate, normalised           (Fig. 11a)
+  * average memory latency, normalised        (Fig. 11b)
+
+Weighted speedup = Σ_c (T_alone_c / T_shared_c), with T_alone measured on
+Baseline with the core running by itself (paper §5).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.dram_sim import NUM_BANKS, Core, DRAMSim, make_core
+from repro.core.layouts import Layout
+
+CONFIGS = [
+    ("Baseline", Layout.BASELINE_ECC),
+    ("Packed", Layout.PACKED),
+    ("Packed+RS", Layout.RANK_SUBSET),
+    ("Inter-Wrap", Layout.INTERWRAP),
+]
+
+NUM_ROWS = 256
+N_REQ = 700
+N_MIXES = 8
+
+
+def _cores_for(seed: int, n_intensive: int, layout: Layout) -> list[Core]:
+    rng = np.random.default_rng(seed)
+    return [make_core(rng, layout, NUM_ROWS, N_REQ,
+                      memory_intensive=(i < n_intensive))
+            for i in range(4)]
+
+
+def _finish_times(cores: list[Core]) -> list[int]:
+    return [getattr(c, "done_at", 0) for c in cores]
+
+
+def run() -> dict:
+    out: dict = {c[0]: {"ws": [], "reqs": [], "conc": [], "hits": [],
+                        "lat": []} for c in CONFIGS}
+    sweep = []
+    for n_int in range(5):
+        for mix in range(N_MIXES):
+            seed = 1000 * n_int + mix
+            # alone runs (Baseline, single core) for weighted speedup
+            alone = []
+            for i in range(4):
+                cores = _cores_for(seed, n_int, Layout.BASELINE_ECC)
+                solo = [cores[i]]
+                DRAMSim(Layout.BASELINE_ECC, NUM_ROWS).run(solo)
+                alone.append(max(getattr(solo[0], "done_at", 1), 1))
+            for name, layout in CONFIGS:
+                cores = _cores_for(seed, n_int, layout)
+                stats = DRAMSim(layout, NUM_ROWS).run(cores)
+                shared = _finish_times(cores)
+                ws = sum(a / max(s, 1) for a, s in zip(alone, shared))
+                out[name]["ws"].append(ws)
+                out[name]["reqs"].append(stats.device_ops)
+                out[name]["conc"].append(stats.blp)
+                out[name]["hits"].append(stats.row_hit_rate)
+                out[name]["lat"].append(stats.avg_latency)
+            sweep.append((n_int, mix))
+
+    base = out["Baseline"]
+    summary = {}
+    for name, _ in CONFIGS:
+        r = out[name]
+        summary[name] = {
+            "weighted_speedup_norm": float(np.mean(np.asarray(r["ws"])
+                                                   / np.asarray(base["ws"]))),
+            "requests_norm": float(np.mean(np.asarray(r["reqs"])
+                                           / np.asarray(base["reqs"]))),
+            "concurrency_norm": float(np.mean(np.asarray(r["conc"])
+                                              / np.asarray(base["conc"]))),
+            "row_hit_norm": float(np.mean(np.asarray(r["hits"])
+                                          / np.asarray(base["hits"]))),
+            "latency_norm": float(np.mean(np.asarray(r["lat"])
+                                          / np.asarray(base["lat"]))),
+        }
+    return summary
+
+
+def main() -> list[tuple[str, float, str]]:
+    rows = []
+    paper = {"Packed": 0.701, "Packed+RS": 0.839, "Inter-Wrap": 1.024}
+    for name, s in run().items():
+        ref = f",paper={paper[name]:.3f}" if name in paper else ""
+        rows.append((f"fig9_ws_{name}", s["weighted_speedup_norm"],
+                     f"reqs={s['requests_norm']:.2f},conc="
+                     f"{s['concurrency_norm']:.2f},hit={s['row_hit_norm']:.2f},"
+                     f"lat={s['latency_norm']:.2f}{ref}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in main():
+        print(f"{name},{val:.3f},{derived}")

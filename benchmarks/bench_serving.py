@@ -1,0 +1,51 @@
+"""Beyond-paper: the JAX serving engine under CREAM vs SECDED pool modes.
+
+The end-to-end analogue of Fig. 8 on the real stack: a small LM serves
+multi-turn requests whose parked decode states overflow the device pool.
+CREAM mode (+12.5% pages) keeps more sequences device-resident -> fewer
+host round-trips -> higher token throughput. Measured, not modelled.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve.engine import Engine, Request
+from repro.serve.kv_cache import SequenceCache
+
+
+def run(num_rows: int = 48, n_requests: int = 10, max_new: int = 10,
+        seed: int = 0) -> dict[str, dict]:
+    cfg = ModelConfig(name="serve-bench", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256, head_dim=16, dtype="float32")
+    out = {}
+    for mode in ("secded", "cream"):
+        rng = np.random.default_rng(seed)
+        reqs = [Request(f"s{i}", rng.integers(0, 256, size=24).astype(
+            np.int32), max_new) for i in range(n_requests)]
+        cache = SequenceCache(num_rows=num_rows, mode=mode)
+        eng = Engine(cfg, batch_size=4, max_len=64, cache=cache)
+        out[mode] = eng.serve(reqs, steps_per_turn=4)
+    out["cream"]["speedup_vs_secded"] = (
+        out["secded"]["wall_s"] / out["cream"]["wall_s"])
+    out["cream"]["capacity_gain"] = (
+        out["cream"]["device_pages"] / out["secded"]["device_pages"] - 1)
+    return out
+
+
+def main() -> list[tuple[str, float, str]]:
+    r = run()
+    rows = []
+    for mode in ("secded", "cream"):
+        s = r[mode]
+        rows.append((f"serving_{mode}", s["tokens_per_s"],
+                     f"faults={s['fault_rate']:.3f},pages={s['device_pages']}"))
+    rows.append(("serving_cream_speedup", r["cream"]["speedup_vs_secded"],
+                 f"capacity_gain={r['cream']['capacity_gain']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in main():
+        print(f"{name},{val:.3f},{derived}")

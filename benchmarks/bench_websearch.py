@@ -1,0 +1,113 @@
+"""Fig. 4 reproduction: WebSearch percentile latency vs load vs capacity.
+
+An interactive index-serving queue: queries touch a DRAM-cached index whose
+*hot working set is slightly larger than the smallest DRAM size* — the
+regime the paper's WebSearch lives in (each +12.5% capacity step absorbs a
+big slice of the residual hot-set misses, so the p95-vs-load curve crosses
+the queue-saturation knee; paper: 67%/24% latency drops per step, 2× load
+at iso-latency). Misses pay the 500µs fault penalty; a 4-server M/G/c-style
+discrete simulation sweeps offered load for four sizes w < x < y < z.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import cache_sim
+
+HOT_PAGES = 2700               # hot index set: just above capacity "w"
+COLD_PAGES = 40_000            # long-tail index pages
+HOT_FRAC = 0.95
+TOUCHES = 4                    # index pages per query
+SERVICE_US = 120.0             # CPU cost per query
+N_QUERIES = 12_000
+SERVERS = 4
+BASE_CAPACITY = 2048           # "w"
+LOADS = [0.5, 0.7, 0.9, 1.0]
+
+
+def _trace(rng: np.random.Generator, n: int) -> np.ndarray:
+    hot = rng.integers(0, HOT_PAGES, size=n)
+    cold = HOT_PAGES + rng.integers(0, COLD_PAGES, size=n)
+    return np.where(rng.random(n) < HOT_FRAC, hot, cold)
+
+
+def _steady_service(capacity: int, seed: int = 0) -> float:
+    """Mean per-query service at steady state (for arrival calibration)."""
+    rng = np.random.default_rng(seed)
+    cache = cache_sim.TwoQPageCache(capacity)
+    tr = _trace(rng, 30_000)
+    misses = sum(0 if cache.access(int(p)) else 1 for p in tr[15_000:])
+    frate = misses / 15_000
+    return SERVICE_US + TOUCHES * frate * cache_sim.FAULT_PENALTY_US
+
+
+def _percentile_latency(rng: np.random.Generator, capacity: int, load: float,
+                        base_service: float) -> float:
+    cache = cache_sim.TwoQPageCache(capacity)
+    arrival_rate = load * SERVERS / base_service
+    inter = rng.exponential(1.0 / arrival_rate, N_QUERIES)
+    arrive = np.cumsum(inter)
+    trace = _trace(rng, N_QUERIES * TOUCHES).reshape(N_QUERIES, TOUCHES)
+    free = np.zeros(SERVERS)
+    lat = np.empty(N_QUERIES)
+    for i in range(N_QUERIES):
+        svc = SERVICE_US
+        for pg in trace[i]:
+            if not cache.access(int(pg)):
+                svc += cache_sim.FAULT_PENALTY_US
+        k = int(np.argmin(free))
+        start = max(arrive[i], free[k])
+        free[k] = start + svc
+        lat[i] = free[k] - arrive[i]
+    return float(np.percentile(lat, 95))
+
+
+def run(seed: int = 0) -> dict:
+    sizes = {"w": BASE_CAPACITY,
+             "x": int(BASE_CAPACITY * 1.125),
+             "y": int(BASE_CAPACITY * 1.125 ** 2),
+             "z": int(BASE_CAPACITY * 1.125 ** 3)}
+    # arrival calibrated so the LARGEST size is near-critical at load 1.0 —
+    # smaller sizes then sit past the knee, as in the paper's figure.
+    base_service = _steady_service(sizes["z"]) * 1.05
+    curves = {}
+    for name, cap in sizes.items():
+        curves[name] = [
+            _percentile_latency(np.random.default_rng(seed + 17 * i), cap,
+                                ld, base_service)
+            for i, ld in enumerate(LOADS)]
+    imps = []
+    names = list(sizes)
+    for a, b in zip(names[:-1], names[1:]):
+        hi_a, hi_b = curves[a][-1], curves[b][-1]
+        imps.append((hi_a - hi_b) / hi_a)
+    thresh = 2.0 * min(min(c) for c in curves.values())
+
+    def max_load(curve):
+        ok = [ld for ld, l in zip(LOADS, curve) if l <= thresh]
+        return max(ok) if ok else LOADS[0]
+
+    load_gain = max_load(curves["x"]) / max_load(curves["w"])
+    return {"loads": LOADS, "curves": curves,
+            "p95_improvement_per_step": imps,
+            "mean_p95_improvement": float(np.mean(imps)),
+            "iso_latency_load_gain": load_gain}
+
+
+def main() -> list[tuple[str, float, str]]:
+    r = run()
+    rows = []
+    for name, curve in r["curves"].items():
+        rows.append((f"fig4_websearch_p95_{name}", curve[-1],
+                     "p95_us_at_full_load"))
+    steps = ",".join(f"{x*100:.0f}%" for x in r["p95_improvement_per_step"])
+    rows.append(("fig4_websearch_p95_improvement",
+                 r["mean_p95_improvement"] * 100,
+                 f"pct_per_step=[{steps}](paper:67/24),load_gain="
+                 f"{r['iso_latency_load_gain']:.2f}(paper:2.0)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in main():
+        print(f"{name},{val:.1f},{derived}")

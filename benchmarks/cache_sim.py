@@ -1,0 +1,93 @@
+"""Page-cache / page-fault model (paper §5: Linux-style active+inactive lists).
+
+Drives the capacity-sensitive experiments: memcached (Fig. 8) and WebSearch
+(Fig. 4). DRAM is a page cache over a larger dataset; a miss costs the
+paper's 500µs fault penalty (300µs SSD + 200µs software). Replacement is a
+2Q approximation of the Linux VM: pages enter the inactive list, promote to
+active on re-reference, and eviction drains the inactive tail (refilling it
+from the active tail to keep the ~2:1 ratio).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+FAULT_PENALTY_US = 500.0
+HIT_COST_US = 0.1          # DRAM service incl. controller (order of magnitude)
+
+
+@dataclass
+class CacheResult:
+    accesses: int
+    faults: int
+    total_us: float
+
+    @property
+    def fault_rate(self) -> float:
+        return self.faults / max(self.accesses, 1)
+
+    @property
+    def avg_us(self) -> float:
+        return self.total_us / max(self.accesses, 1)
+
+
+class TwoQPageCache:
+    """Active/inactive-list page cache (capacity in pages)."""
+
+    def __init__(self, capacity: int, active_frac: float = 2 / 3):
+        self.capacity = max(capacity, 2)
+        self.active_cap = max(1, int(self.capacity * active_frac))
+        self.active: OrderedDict[int, None] = OrderedDict()
+        self.inactive: OrderedDict[int, None] = OrderedDict()
+
+    def __contains__(self, page: int) -> bool:
+        return page in self.active or page in self.inactive
+
+    def access(self, page: int) -> bool:
+        """Returns True on hit."""
+        if page in self.active:
+            self.active.move_to_end(page)
+            return True
+        if page in self.inactive:
+            del self.inactive[page]
+            self.active[page] = None
+            self._balance()
+            return True
+        self.inactive[page] = None
+        self._evict()
+        return False
+
+    def _balance(self) -> None:
+        while len(self.active) > self.active_cap:
+            pg, _ = self.active.popitem(last=False)
+            self.inactive[pg] = None
+
+    def _evict(self) -> None:
+        while len(self.active) + len(self.inactive) > self.capacity:
+            if self.inactive:
+                self.inactive.popitem(last=False)
+            else:
+                self.active.popitem(last=False)
+
+
+def run_trace(capacity_pages: int, trace: np.ndarray,
+              fault_penalty_us: float = FAULT_PENALTY_US) -> CacheResult:
+    cache = TwoQPageCache(capacity_pages)
+    faults = 0
+    for page in trace:
+        if not cache.access(int(page)):
+            faults += 1
+    total = faults * fault_penalty_us + (len(trace) - faults) * HIT_COST_US
+    return CacheResult(len(trace), faults, total)
+
+
+def zipf_trace(rng: np.random.Generator, n_pages: int, n_accesses: int,
+               alpha: float = 0.99) -> np.ndarray:
+    """Zipfian page popularity (hot keys), shuffled page ids."""
+    ranks = np.arange(1, n_pages + 1, dtype=np.float64)
+    probs = ranks ** (-alpha)
+    probs /= probs.sum()
+    perm = rng.permutation(n_pages)
+    return perm[rng.choice(n_pages, size=n_accesses, p=probs)]

@@ -1,0 +1,253 @@
+"""Compact DRAM timing model — the paper's Ramulator substitute (Figs. 9–11).
+
+Event-driven over 72 bank-slices (8 banks × 9 chips) of one DDR3-1333H rank:
+
+  * every logical line access expands to DRAM operations via
+    ``repro.core.layouts.plan_line_access`` — the SAME address translation
+    the JAX pool and Pallas kernels use, so layout behaviour (packed RMWs,
+    rank-subset op counts, inter-wrap single-op access) is identical by
+    construction;
+  * each op occupies its (row, lane) slices in lockstep: row miss pays
+    tRP+tRCD+tCL, hit pays tCL, +1 bridge cycle for CREAM layouts
+    (paper §5); the shared 72-bit data bus serialises transfers (tBL);
+  * FR-FCFS: a lookahead window prefers row-buffer hits (paper's scheduler);
+  * cores: 4-wide issue with a bounded MLP window — a request issues only
+    when a slot frees, which is what couples memory latency back to IPC.
+
+Faithfulness targets (checked in EXPERIMENTS.md §Benchmarks): the op-count
+ratios (Fig. 10a: Packed ≈ 2.0×, Packed+RS ≈ 1.77×, InterWrap 1.0×) are
+exact; concurrency/latency/weighted-speedup reproduce the paper's ordering
+Packed < Packed+RS < Baseline < InterWrap.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.layouts import (GROUP_ROWS, LANES, Layout, extra_page_count,
+                                plan_line_access, total_pages)
+
+
+@dataclass(frozen=True)
+class Timing:
+    tCK_ns: float = 1.5
+    tRCD: int = 9
+    tRP: int = 9
+    tCL: int = 9
+    tBL: int = 4          # 8 beats, DDR
+    bridge: int = 1       # CREAM bridge-chip translation (paper §4.4)
+
+
+NUM_BANKS = 8
+
+
+@dataclass
+class Slice:
+    open_row: int = -1
+    free_at: int = 0
+
+
+@dataclass
+class SimStats:
+    requests: int = 0
+    device_ops: int = 0
+    row_hits: int = 0
+    row_misses: int = 0
+    total_latency: int = 0
+    finish_cycle: int = 0
+    concurrent_sum: float = 0.0
+    concurrent_samples: int = 0
+    service_cycles: int = 0      # Σ op occupancy — drives the BLP metric
+
+    @property
+    def row_hit_rate(self) -> float:
+        t = self.row_hits + self.row_misses
+        return self.row_hits / t if t else 0.0
+
+    @property
+    def avg_latency(self) -> float:
+        return self.total_latency / max(self.requests, 1)
+
+    @property
+    def avg_concurrent(self) -> float:
+        return self.concurrent_sum / max(self.concurrent_samples, 1)
+
+    @property
+    def blp(self) -> float:
+        """Average concurrently-serviced requests (paper Fig. 10b): total
+        op occupancy over the makespan — low when expansions serialise on a
+        bank, high when 9 independent slice groups overlap."""
+        return self.service_cycles / max(self.finish_cycle, 1)
+
+
+def _bank_of(row: int) -> tuple[int, int]:
+    """Pool row -> (bank, dram_row): consecutive rows hit different banks
+    (paper Fig. 3's page->bank interleaving)."""
+    return row % NUM_BANKS, row // NUM_BANKS
+
+
+@dataclass
+class Core:
+    """A request stream with an MLP window; gaps model non-memory work."""
+    requests: list            # [(page, write, gap_cycles), ...]
+    window: int = 8
+    next_idx: int = 0
+    inflight: list = field(default_factory=list)   # completion cycles (heap)
+    ready_at: int = 0         # when the next request may issue
+
+
+class DRAMSim:
+    def __init__(self, layout: Layout, num_rows: int, timing: Timing = Timing(),
+                 window: int = 16):
+        self.layout = layout
+        self.num_rows = num_rows
+        self.t = timing
+        self.window = window
+        self.slices = [[Slice() for _ in range(LANES)]
+                       for _ in range(NUM_BANKS)]
+        self.bus_free = 0
+        self.stats = SimStats()
+        self._bridge = 0 if layout == Layout.BASELINE_ECC else timing.bridge
+
+    # -- single op ------------------------------------------------------------
+    def _op_time(self, access, now: int) -> int:
+        """Issue one lockstep op at/after `now`; returns completion cycle."""
+        t = self.t
+        start = now
+        slice_objs = []
+        for lane, row in access.slices:
+            bank, drow = _bank_of(row)
+            s = self.slices[bank][lane]
+            slice_objs.append((s, drow))
+            start = max(start, s.free_at)
+        # row hit iff every touched slice has the row open
+        hit = all(s.open_row == drow for s, drow in slice_objs)
+        lat = t.tCL + (0 if hit else t.tRP + t.tRCD) + self._bridge
+        self.stats.row_hits += 1 if hit else 0
+        self.stats.row_misses += 0 if hit else 1
+        # data bus: serialise the burst
+        burst_start = max(start + lat, self.bus_free)
+        done = burst_start + t.tBL
+        self.bus_free = done
+        for s, drow in slice_objs:
+            s.open_row = drow
+            s.free_at = done
+        n_ops = 2 if access.rmw else 1
+        service = lat + t.tBL
+        if access.rmw:      # read-before-write: second pass on the bus
+            done += t.tCL + t.tBL
+            service += t.tCL + t.tBL
+            self.bus_free = done
+            for s, _ in slice_objs:
+                s.free_at = done
+        self.stats.device_ops += n_ops
+        self.stats.service_cycles += service
+        return done
+
+    def _request_time(self, page: int, write: bool, now: int) -> int:
+        ops = plan_line_access(self.layout, self.num_rows, page, write)
+        done = now
+        for i, acc in enumerate(ops):
+            done = self._op_time(acc, now if i == 0 else done)
+        return done
+
+    # -- multiprogrammed run -----------------------------------------------------
+    def run(self, cores: list[Core]) -> SimStats:
+        """Interleave core request streams FR-FCFS-ish; returns stats."""
+        now = 0
+        active = [c for c in cores if c.next_idx < len(c.requests)]
+        while active:
+            # sample concurrency
+            inflight = sum(len(c.inflight) for c in cores)
+            self.stats.concurrent_sum += inflight
+            self.stats.concurrent_samples += 1
+
+            # pick among issuable heads: prefer row-hit requests (FR-FCFS)
+            candidates = []
+            for c in active:
+                while c.inflight and c.inflight[0] <= now:
+                    heapq.heappop(c.inflight)
+                if len(c.inflight) >= c.window:
+                    continue
+                if c.ready_at > now:
+                    continue
+                page, write, gap = c.requests[c.next_idx]
+                first = plan_line_access(self.layout, self.num_rows, page,
+                                         write)[0]
+                hit = True
+                for lane, row in first.slices:
+                    bank, drow = _bank_of(row)
+                    if self.slices[bank][lane].open_row != drow:
+                        hit = False
+                        break
+                candidates.append((0 if hit else 1, c.ready_at, id(c), c))
+            if not candidates:
+                # advance time to the next event
+                nxt = []
+                for c in active:
+                    if c.inflight:
+                        nxt.append(c.inflight[0])
+                    if c.ready_at > now:
+                        nxt.append(c.ready_at)
+                now = min(nxt) if nxt else now + 1
+                active = [c for c in cores if c.next_idx < len(c.requests)]
+                continue
+            candidates.sort()
+            _, _, _, c = candidates[0]
+            page, write, gap = c.requests[c.next_idx]
+            done = self._request_time(page, write, now)
+            heapq.heappush(c.inflight, done)
+            self.stats.requests += 1
+            self.stats.total_latency += done - now
+            c.next_idx += 1
+            c.ready_at = now + max(gap, 1)
+            if c.next_idx >= len(c.requests):
+                c.done_at = done
+            active = [c for c in cores if c.next_idx < len(c.requests)]
+            now += 2  # command-bus arbitration: one issue per 2 cycles
+        finish = max((getattr(c, "done_at", 0) for c in cores), default=0)
+        for c in cores:
+            if c.inflight:
+                finish = max(finish, max(c.inflight))
+        self.stats.finish_cycle = finish
+        return self.stats
+
+
+# ---------------------------------------------------------------------------
+# Workload generation (paper §5: SPEC/TPC-like mixes by MPKI class)
+# ---------------------------------------------------------------------------
+
+
+def make_core(rng: np.random.Generator, layout: Layout, num_rows: int,
+              n_requests: int, memory_intensive: bool,
+              use_extra_pages: bool = True, window: int = 8) -> Core:
+    """Synthetic request stream with page- and line-level locality.
+
+    A core walks pages randomly but issues a *run* of sequential line
+    accesses within each page (geometric, mean ~8), the standard locality
+    structure row-buffer policies are designed around. Memory-intensive
+    cores (MPKI>10 class) have short compute gaps; others long.
+    """
+    n_pages = total_pages(layout, num_rows) if use_extra_pages else num_rows
+    gap = 4 if memory_intensive else 60          # cycles of non-mem work
+    reqs = []
+    while len(reqs) < n_requests:
+        page = int(rng.integers(0, n_pages))
+        run = min(1 + rng.geometric(1.0 / 8.0), n_requests - len(reqs))
+        write = rng.random() < 0.3
+        for _ in range(run):
+            reqs.append((page, write, gap))
+    return Core(requests=reqs, window=window)
+
+
+def run_workload(layout: Layout, num_rows: int, rng_seed: int,
+                 n_mem_intensive: int, n_cores: int = 4,
+                 n_requests: int = 1500) -> SimStats:
+    rng = np.random.default_rng(rng_seed)
+    cores = [make_core(rng, layout, num_rows, n_requests,
+                       memory_intensive=(i < n_mem_intensive))
+             for i in range(n_cores)]
+    return DRAMSim(layout, num_rows).run(cores)

@@ -1,0 +1,45 @@
+"""Benchmark harness: one entry per paper table/figure + beyond-paper runs.
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract). Figure map:
+  fig4_*   WebSearch latency vs capacity        (paper Fig. 4)
+  fig8_*   memcached speedups                   (paper Fig. 8)
+  fig9_*   multiprogrammed weighted speedup     (paper Figs. 9, 10a/b, 11a/b)
+  fig12_*  SECDED-fraction sensitivity vs SoftECC (paper Fig. 12)
+  ops_* / kernel_*  layout + kernel overheads   (paper §4.4 analogue)
+  serving_*         CREAM-pool serving engine   (beyond paper)
+"""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_capacity, bench_kernels, bench_overheads,
+                            bench_parallelism, bench_sensitivity,
+                            bench_serving, bench_websearch)
+    suites = [
+        ("fig4", bench_websearch.main),
+        ("fig8", bench_capacity.main),
+        ("fig9-11", bench_parallelism.main),
+        ("fig12", bench_sensitivity.main),
+        ("overheads", bench_overheads.main),
+        ("kernels", bench_kernels.main),
+        ("serving", bench_serving.main),
+    ]
+    failed = 0
+    for suite, fn in suites:
+        t0 = time.time()
+        try:
+            for name, val, derived in fn():
+                print(f"{name},{val:.3f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{suite},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {suite} done in {time.time()-t0:.1f}s", flush=True)
+    if failed:
+        raise SystemExit(f"{failed} suites failed")
+
+
+if __name__ == '__main__':
+    main()

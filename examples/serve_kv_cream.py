@@ -1,0 +1,30 @@
+"""Serving with a CREAM-expanded sequence cache: the paper's capacity win, live.
+
+Serves the same multi-turn request mix twice — once with the pool in SECDED
+mode, once in CREAM (Inter-Wrap) mode with +12.5% device pages — and prints
+page-fault rates and throughput. The CREAM run keeps more parked sequences
+device-resident.
+
+Run: PYTHONPATH=src python examples/serve_kv_cream.py
+"""
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve.engine import Engine, Request
+from repro.serve.kv_cache import SequenceCache
+
+cfg = ModelConfig(name="serve-demo", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=256, head_dim=16, dtype="float32")
+
+for mode in ("secded", "cream"):
+    rng = np.random.default_rng(0)
+    reqs = [Request(f"s{i}", rng.integers(0, 256, size=24).astype(np.int32),
+                    max_new=10) for i in range(10)]
+    cache = SequenceCache(num_rows=48, mode=mode)
+    eng = Engine(cfg, batch_size=4, max_len=64, cache=cache)
+    out = eng.serve(reqs, steps_per_turn=4)
+    print(f"{mode:7s}: pages={out['device_pages']:3d} "
+          f"fault_rate={out['fault_rate']:.3f} "
+          f"tokens/s={out['tokens_per_s']:.1f} "
+          f"evictions={out['evictions']}")

@@ -1,0 +1,8 @@
+"""Assigned architecture configs + shape registry."""
+from repro.configs.base import (SHAPES, BlockKind, InputShape, MixerKind,
+                                ModelConfig, TrainConfig, shape_applicable)
+from repro.configs.registry import ARCH_IDS, get_config, get_shape, iter_cells
+
+__all__ = ["SHAPES", "BlockKind", "InputShape", "MixerKind", "ModelConfig",
+           "TrainConfig", "shape_applicable", "ARCH_IDS", "get_config",
+           "get_shape", "iter_cells"]

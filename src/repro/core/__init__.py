@@ -1,0 +1,26 @@
+"""CREAM core — Capacity- and Reliability-Adaptive Memory in JAX.
+
+The paper's contribution as a composable library:
+
+  * :mod:`repro.core.secded`    — Hsiao SECDED(72,64), vectorised jnp
+  * :mod:`repro.core.parity8`   — 8-bit-per-line detection code
+  * :mod:`repro.core.layouts`   — Solutions 1–3 + parity address translation
+  * :mod:`repro.core.pool`      — the ECC-DRAM-module analogue w/ boundary register
+  * :mod:`repro.core.scrubber`  — in-place repair sweeps
+  * :mod:`repro.core.monitor`   — health tracking + protection recommendations
+  * :mod:`repro.core.regions`   — named reliability domains, adaptation loop
+  * :mod:`repro.core.softecc`   — the Virtualized-ECC comparison baseline
+  * :mod:`repro.core.injection` — fault models for tests/experiments
+"""
+from repro.core.layouts import Layout
+from repro.core.pool import (PoolState, make_pool, read_page, read_pages_batch,
+                             repartition, write_page, write_pages_batch)
+from repro.core.protection import Protection, RegionSpec
+from repro.core.regions import Region, RegionManager
+from repro.core.scrubber import ScrubStats, scrub
+
+__all__ = [
+    "Layout", "PoolState", "make_pool", "read_page", "write_page",
+    "read_pages_batch", "write_pages_batch", "repartition", "Protection",
+    "RegionSpec", "Region", "RegionManager", "ScrubStats", "scrub",
+]

@@ -1,0 +1,91 @@
+"""Bit-flip fault injection — drives reliability tests and the health monitor.
+
+Models DRAM soft/hard errors (paper §2.2): soft = uniform random single-bit
+flips at a configurable rate; hard = a sticky set of (row, lane, word, bit)
+cells that re-flip after every scrub, concentrated in a few rows (matching
+field studies [1,8]: errors cluster within a small fraction of devices).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FlipRecord:
+    row: int
+    lane: int
+    word: int
+    bit: int
+
+
+def inject_flips(storage: jnp.ndarray, rng: np.random.Generator, n_flips: int,
+                 row_range: tuple[int, int] | None = None,
+                 lanes: tuple[int, ...] | None = None,
+                 ) -> tuple[jnp.ndarray, list[FlipRecord]]:
+    """Flip ``n_flips`` uniformly random bits. Returns (storage', ground truth).
+
+    Distinct (row, lane, word, bit) cells are guaranteed, so the flip count is
+    exact (needed when asserting corrected==injected).
+    """
+    R, L, W = storage.shape
+    r0, r1 = row_range or (0, R)
+    lanes = lanes or tuple(range(L))
+    arr = np.asarray(storage).copy()
+    seen: set[tuple[int, int, int, int]] = set()
+    records: list[FlipRecord] = []
+    while len(records) < n_flips:
+        cell = (int(rng.integers(r0, r1)), int(rng.choice(lanes)),
+                int(rng.integers(0, W)), int(rng.integers(0, 32)))
+        if cell in seen:
+            continue
+        seen.add(cell)
+        row, lane, word, bit = cell
+        arr[row, lane, word] ^= np.uint32(1 << bit)
+        records.append(FlipRecord(row, lane, word, bit))
+    return jnp.asarray(arr), records
+
+
+@dataclass
+class FaultModel:
+    """Stateful injector: soft error rate + sticky hard-fault cells."""
+    rng: np.random.Generator
+    soft_rate_per_gb_per_step: float = 0.0
+    hard_cells: list[FlipRecord] = field(default_factory=list)
+
+    @staticmethod
+    def make(seed: int, soft_rate: float = 0.0, n_hard: int = 0,
+             shape: tuple[int, int, int] | None = None,
+             hard_row_fraction: float = 0.05) -> "FaultModel":
+        rng = np.random.default_rng(seed)
+        hard: list[FlipRecord] = []
+        if n_hard:
+            R, L, W = shape
+            # hard faults cluster in a few rows (field-study behaviour)
+            bad_rows = rng.choice(R, size=max(1, int(R * hard_row_fraction)),
+                                  replace=False)
+            for _ in range(n_hard):
+                hard.append(FlipRecord(int(rng.choice(bad_rows)),
+                                       int(rng.integers(0, L)),
+                                       int(rng.integers(0, W)),
+                                       int(rng.integers(0, 32))))
+        return FaultModel(rng, soft_rate, hard)
+
+    def step(self, storage: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+        """Apply one step of faults; returns (storage', flips applied)."""
+        arr = np.asarray(storage).copy()
+        count = 0
+        gb = arr.nbytes / 2**30
+        n_soft = self.rng.poisson(self.soft_rate_per_gb_per_step * gb)
+        R, L, W = arr.shape
+        for _ in range(int(n_soft)):
+            arr[self.rng.integers(0, R), self.rng.integers(0, L),
+                self.rng.integers(0, W)] ^= np.uint32(
+                    1 << self.rng.integers(0, 32))
+            count += 1
+        for c in self.hard_cells:
+            arr[c.row, c.lane, c.word] |= np.uint32(1 << c.bit)  # stuck-at-1
+            count += 1
+        return jnp.asarray(arr), count

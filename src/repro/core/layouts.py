@@ -1,0 +1,301 @@
+"""CREAM data layouts — address translation for the paper's Solutions 1–3 + parity.
+
+This module is the single source of truth for *where bytes live* under each
+CREAM layout. It is consumed by:
+
+  * ``repro.core.pool``       — page-granularity jnp gather/scatter,
+  * ``repro.kernels.interwrap`` — the Pallas S3 re-striping kernel,
+  * ``benchmarks.dram_sim``   — line-granularity access plans for the
+                                 Ramulator-style timing model (Figs. 9–12).
+
+Geometry (DESIGN.md §2.1): a pool region is ``(R, 9, W)`` uint32 — R rows,
+9 lanes (8 data + 1 code, the DIMM's chips), W words per lane per row
+(default 256 → 8KB data + 1KB code per row, one "OS page" per row as in the
+paper's simplified figures). A cache line is 64B = 16 words; each row holds
+``8W/16 = W/2`` lines (128 for W=256).
+
+Layout catalogue
+----------------
+BASELINE_ECC   paper Fig. 3 — data lanes 0–7, SECDED codes in lane 8.
+PACKED         paper §4.1.1 (Solution 1) — extra pages packed into lane 8
+               across 8 consecutive rows; every write is a read-modify-write.
+RANK_SUBSET    paper §4.1.2 (Solution 2) — same placement, but lane 8 is an
+               independently addressable plane: no RMWs, extra reads still 8 ops.
+INTERWRAP      paper §4.1.3 (Solution 3) — within each 8-row group the
+               72 (row×lane) slices are linearised ℓ = row·9 + lane and page
+               p ∈ [0,9) owns slices [8p, 8p+8): every access is one operation
+               touching 8 lanes (skipping lane (8−p) mod 9 — the paper's bridge
+               formula) and 9 pages are independently accessible.
+PARITY         paper §4.2 — lane 8 holds an 8-bit-parity table (1B per 64B
+               line; one code row covers 8 pages) plus packed extra pages.
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field
+
+LANES = 9
+DATA_LANES = 8
+CODE_LANE = 8
+DEFAULT_ROW_WORDS = 256          # uint32 words per lane per row (1KB)
+WORDS_PER_LINE = 16              # 64-byte cache line
+GROUP_ROWS = 8                   # packing / wrap-around group (paper's 8 banks)
+
+
+class Layout(enum.Enum):
+    BASELINE_ECC = "baseline_ecc"
+    PACKED = "packed"
+    RANK_SUBSET = "rank_subset"
+    INTERWRAP = "interwrap"
+    PARITY = "parity"
+
+
+#: Extra effective capacity per layout, as a fraction of the 8-lane data
+#: capacity (paper: +12.5% correction-free, +10.7% detection-only).
+CAPACITY_GAIN = {
+    Layout.BASELINE_ECC: 0.0,
+    Layout.PACKED: 1.0 / 8.0,
+    Layout.RANK_SUBSET: 1.0 / 8.0,
+    Layout.INTERWRAP: 1.0 / 8.0,
+    Layout.PARITY: (9.0 / 8.0) / (1.0 + 1.0 / 64.0) - 1.0,  # ≈ 10.77%
+}
+
+
+def lines_per_row(row_words: int = DEFAULT_ROW_WORDS) -> int:
+    return DATA_LANES * row_words // WORDS_PER_LINE
+
+
+# ---------------------------------------------------------------------------
+# Capacity accounting
+# ---------------------------------------------------------------------------
+
+
+def parity_table_rows(num_rows: int, extra_pages: int, row_words: int) -> int:
+    """Code-lane rows reserved for parity tables (regular + extra pages).
+
+    One code-lane row (``row_words`` words) holds parity for
+    ``row_words / (row_words // 8)`` = 8 pages (W/8 words per page) — the
+    paper's "each row of parity in Chip 8 contains the parity data for eight
+    pages".
+    """
+    pages_per_parity_row = 8
+    return math.ceil(num_rows / pages_per_parity_row) + math.ceil(
+        extra_pages / pages_per_parity_row
+    )
+
+
+def extra_page_count(layout: Layout, num_rows: int,
+                     row_words: int = DEFAULT_ROW_WORDS) -> int:
+    """Number of extra (reclaimed-capacity) pages a region of `num_rows` offers."""
+    if layout == Layout.BASELINE_ECC:
+        return 0
+    if layout in (Layout.PACKED, Layout.RANK_SUBSET, Layout.INTERWRAP):
+        return num_rows // GROUP_ROWS
+    if layout == Layout.PARITY:
+        # Iterate: extra pages consume 8 code rows each, plus parity tables.
+        extra = 0
+        while True:
+            used = parity_table_rows(num_rows, extra + 1, row_words)
+            if used + (extra + 1) * GROUP_ROWS > num_rows:
+                return extra
+            extra += 1
+    raise ValueError(layout)
+
+
+def total_pages(layout: Layout, num_rows: int,
+                row_words: int = DEFAULT_ROW_WORDS) -> int:
+    return num_rows + extra_page_count(layout, num_rows, row_words)
+
+
+# ---------------------------------------------------------------------------
+# Physical access plans (line granularity — DRAM-sim / overhead accounting)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Access:
+    """One DRAM operation: a lockstep fetch/store of ≤9 (row, lane) slices.
+
+    ``slices`` maps lane -> row. For all layouts except INTERWRAP every touched
+    lane reads the same row; INTERWRAP ops may straddle two adjacent rows
+    (the paper's two banks opened by the bridge chip).
+    """
+    slices: tuple[tuple[int, int], ...]  # ((lane, row), ...)
+    write: bool = False
+    rmw: bool = False                    # requires read-before-write
+
+    @property
+    def rows(self) -> tuple[int, ...]:
+        return tuple(sorted({r for _, r in self.slices}))
+
+    @property
+    def lanes(self) -> tuple[int, ...]:
+        return tuple(sorted({l for l, _ in self.slices}))
+
+    def num_device_ops(self) -> int:
+        """DRAM command count this access expands to (RMW = read + write)."""
+        return 2 if self.rmw else 1
+
+
+def _full_row(row: int, lanes: range | tuple, write: bool, rmw: bool = False
+              ) -> Access:
+    return Access(tuple((l, row) for l in lanes), write=write, rmw=rmw)
+
+
+def interwrap_slices(page_slot: int) -> tuple[tuple[int, int], ...]:
+    """(lane, group-relative row) slices owned by page slot s ∈ [0, 9).
+
+    Paper §4.1.3: linear slice ℓ = row·9 + lane; slot s owns ℓ ∈ [8s, 8s+8).
+    The skipped lane is (8 − s) mod 9.
+    """
+    if not 0 <= page_slot < 9:
+        raise ValueError(page_slot)
+    out = []
+    for k in range(8):
+        linear = 8 * page_slot + k
+        out.append((linear % LANES, linear // LANES))
+    return tuple(out)
+
+
+def plan_line_access(layout: Layout, num_rows: int, page: int, write: bool,
+                     row_words: int = DEFAULT_ROW_WORDS) -> list[Access]:
+    """Access plan for one 64B line of logical ``page`` in a CREAM region.
+
+    Page id space: [0, num_rows) are regular pages; [num_rows, total) are
+    extra pages. Line index within the page does not change op structure
+    (only column addresses), so it is not a parameter.
+    """
+    n_extra = extra_page_count(layout, num_rows, row_words)
+    if not 0 <= page < num_rows + n_extra:
+        raise ValueError(f"page {page} out of range for {layout} x {num_rows}")
+    is_extra = page >= num_rows
+    e = page - num_rows
+
+    if layout == Layout.BASELINE_ECC:
+        # One lockstep op across all 9 chips, for reads and writes alike.
+        return [_full_row(page, range(LANES), write)]
+
+    if layout == Layout.PACKED:
+        if not is_extra:
+            # Reads fetch all 9 lanes (lane-8 data ignored); writes must RMW
+            # because lane 8 holds another page's data (paper §4.1.1).
+            return [_full_row(page, range(LANES), write, rmw=write)]
+        # Extra page: line lives in lane 8 of one row, split over 8 column
+        # segments -> 8 back-to-back ops, same row (≤1 row miss).
+        row = GROUP_ROWS * e + 0  # part index affects the row; one line maps
+        # to part (line // 16); callers that care pass per-line rows via
+        # plan_extra_line_row(). For op counting the row is representative.
+        return [_full_row(row, range(LANES), write, rmw=write)
+                for _ in range(8)]
+
+    if layout == Layout.RANK_SUBSET:
+        if not is_extra:
+            return [_full_row(page, range(DATA_LANES), write)]
+        row = GROUP_ROWS * e
+        return [_full_row(row, (CODE_LANE,), write) for _ in range(8)]
+
+    if layout == Layout.INTERWRAP:
+        group, slot = (page // GROUP_ROWS, page % GROUP_ROWS) if not is_extra \
+            else (e, GROUP_ROWS)
+        rel = interwrap_slices(slot)
+        slices = tuple((lane, GROUP_ROWS * group + r) for lane, r in rel)
+        return [Access(slices, write=write)]
+
+    if layout == Layout.PARITY:
+        # Rank-subset base + parity ops on lane 8 (paper §4.2).
+        parity_row = _parity_row_of_page(layout, num_rows, page, row_words)
+        parity_op = Access(((CODE_LANE, parity_row),), write=write, rmw=write)
+        if not is_extra:
+            return [_full_row(page, range(DATA_LANES), write), parity_op]
+        data_row0 = _parity_extra_data_row0(num_rows, n_extra, e, row_words)
+        ops = [_full_row(data_row0, (CODE_LANE,), write) for _ in range(8)]
+        return ops + [parity_op]
+
+    raise ValueError(layout)
+
+
+def _parity_row_of_page(layout: Layout, num_rows: int, page: int,
+                        row_words: int) -> int:
+    """Code-lane row holding ``page``'s parity. Regular table first, then extra.
+
+    Note: the paper additionally stores the parity for bank i in bank
+    (i+4) mod 8 to dodge row-buffer conflicts — a *timing* placement detail.
+    The pool keeps tables contiguous; ``benchmarks.dram_sim`` applies the
+    bank swap when mapping rows to banks.
+    """
+    if page < num_rows:
+        return page // 8
+    return math.ceil(num_rows / 8) + (page - num_rows) // 8
+
+
+def _parity_extra_data_row0(num_rows: int, n_extra: int, e: int,
+                            row_words: int) -> int:
+    tables = parity_table_rows(num_rows, n_extra, row_words)
+    return tables + GROUP_ROWS * e
+
+
+def count_device_ops(layout: Layout, num_rows: int, page: int, write: bool,
+                     row_words: int = DEFAULT_ROW_WORDS) -> int:
+    """Total DRAM commands for one line access (the paper's Fig. 10a metric)."""
+    return sum(a.num_device_ops()
+               for a in plan_line_access(layout, num_rows, page, write, row_words))
+
+
+def parallelism_groups(layout: Layout) -> int:
+    """Independently accessible page groups per 8-row group (Fig. 10b driver).
+
+    Baseline/packed: the 8 rows (banks). Rank-subset: 8 + the lane-8 subset.
+    Interwrap: 9 — all 72 lane-slices form nine independent groups (paper
+    §4.1.3 "we are able to sustain nine concurrent requests at any time").
+    """
+    return {Layout.BASELINE_ECC: 8, Layout.PACKED: 8, Layout.RANK_SUBSET: 9,
+            Layout.INTERWRAP: 9, Layout.PARITY: 9}[layout]
+
+
+# ---------------------------------------------------------------------------
+# Page-granularity placement (jnp pool gather/scatter)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PagePlacement:
+    """Where a logical page's 8KB of data lives, as dense slice descriptors.
+
+    kind:
+      'rows'      data = region[row, 0:8, :]               (one row, 8 lanes)
+      'codelane'  data = region[row0:row0+8, 8, :]          (8 rows of lane 8)
+      'wrap'      data = 8 (lane, row) slices, lane-rotated (interwrap)
+    """
+    kind: str
+    row0: int
+    slices: tuple[tuple[int, int], ...] = field(default=())
+
+
+def place_page(layout: Layout, num_rows: int, page: int,
+               row_words: int = DEFAULT_ROW_WORDS) -> PagePlacement:
+    n_extra = extra_page_count(layout, num_rows, row_words)
+    if not 0 <= page < num_rows + n_extra:
+        raise ValueError(f"page {page} out of range")
+    is_extra = page >= num_rows
+    e = page - num_rows
+
+    if layout == Layout.BASELINE_ECC:
+        return PagePlacement("rows", page)
+    if layout in (Layout.PACKED, Layout.RANK_SUBSET):
+        if not is_extra:
+            return PagePlacement("rows", page)
+        return PagePlacement("codelane", GROUP_ROWS * e)
+    if layout == Layout.INTERWRAP:
+        group, slot = (page // GROUP_ROWS, page % GROUP_ROWS) if not is_extra \
+            else (e, GROUP_ROWS)
+        rel = interwrap_slices(slot)
+        return PagePlacement(
+            "wrap", GROUP_ROWS * group,
+            tuple((lane, GROUP_ROWS * group + r) for lane, r in rel))
+    if layout == Layout.PARITY:
+        if not is_extra:
+            return PagePlacement("rows", page)
+        return PagePlacement(
+            "codelane", _parity_extra_data_row0(num_rows, n_extra, e, row_words))
+    raise ValueError(layout)

@@ -1,0 +1,85 @@
+"""Health monitor + adaptive protection policy (paper §3.1, §3.3).
+
+Consumes scrub statistics per region, keeps windowed error-rate estimates,
+and recommends protection transitions:
+
+  * rate above ``upgrade_threshold``  -> strengthen (NONE -> PARITY -> SECDED)
+    ("As the health of the memory degrades, the protection can be upgraded")
+  * rate below ``downgrade_threshold`` for ``downgrade_patience`` consecutive
+    windows -> weaken, reclaiming capacity ("healthy DIMMs may initially be
+    provisioned with parity protection")
+
+Pure-python control plane: decisions happen between steps, never in jit.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.core.protection import Protection, stronger, weaker
+from repro.core.scrubber import ScrubStats
+
+
+@dataclass
+class MonitorConfig:
+    window: int = 8                      # scrub sweeps per estimate
+    upgrade_threshold: float = 1e-7      # errors per beat per sweep
+    downgrade_threshold: float = 1e-9
+    downgrade_patience: int = 4
+
+
+@dataclass
+class RegionHealth:
+    rates: deque = field(default_factory=lambda: deque(maxlen=64))
+    quiet_windows: int = 0
+    uncorrectable_seen: int = 0
+
+    def rate(self, window: int) -> float:
+        recent = list(self.rates)[-window:]
+        return sum(recent) / len(recent) if recent else 0.0
+
+
+class ErrorMonitor:
+    """Tracks per-region error rates and recommends protection levels."""
+
+    def __init__(self, config: MonitorConfig | None = None):
+        self.config = config or MonitorConfig()
+        self._health: dict[str, RegionHealth] = {}
+
+    def record(self, region: str, stats: ScrubStats) -> None:
+        h = self._health.setdefault(region, RegionHealth())
+        h.rates.append(stats.error_rate)
+        h.uncorrectable_seen += stats.detected_uncorrectable + \
+            stats.parity_corrupt_lines
+        if stats.error_rate <= self.config.downgrade_threshold:
+            h.quiet_windows += 1
+        else:
+            h.quiet_windows = 0
+
+    def rate(self, region: str) -> float:
+        h = self._health.get(region)
+        return h.rate(self.config.window) if h else 0.0
+
+    def recommend(self, region: str, current: Protection,
+                  floor: Protection = Protection.NONE,
+                  ceiling: Protection = Protection.SECDED) -> Protection:
+        """Next protection level for ``region`` (clamped to [floor, ceiling])."""
+        from repro.core.protection import _ORDER  # stable ordering
+        h = self._health.get(region)
+        if h is None:
+            return current
+        rate = h.rate(self.config.window)
+        target = current
+        if rate > self.config.upgrade_threshold or h.uncorrectable_seen:
+            target = stronger(current)
+        elif h.quiet_windows >= self.config.downgrade_patience:
+            target = weaker(current)
+        lo, hi = _ORDER.index(floor), _ORDER.index(ceiling)
+        return _ORDER[min(max(_ORDER.index(target), lo), hi)]
+
+    def acknowledge_transition(self, region: str) -> None:
+        """Reset hysteresis after a repartition takes effect."""
+        h = self._health.get(region)
+        if h:
+            h.quiet_windows = 0
+            h.uncorrectable_seen = 0

@@ -1,0 +1,337 @@
+"""CREAMPool — the ECC-DRAM module analogue, with the paper's boundary register.
+
+A pool is a single uint32 buffer of shape ``(R, 9, W)`` (rows × lanes × words;
+DESIGN.md §2.1). Rows ``[0, boundary)`` form the CREAM region (layout = one of
+PACKED / RANK_SUBSET / INTERWRAP / PARITY); rows ``[boundary, R)`` keep the
+conventional SECDED layout — the paper's §4.3.1 partitioning, with the same
+page-id convention:
+
+    pages [0, boundary)        CREAM-region regular pages (lanes 0–7 / wrap)
+    pages [boundary, R)        SECDED-protected pages
+    pages [R, R + extra)       extra pages reclaimed from the code lane
+
+All state transforms are functional (old state in, new state out). Page-level
+reads/writes with *static* page ids compose under jit; batched dynamic access
+for hot paths (KV cache) is in :func:`read_pages_batch` /
+:func:`write_pages_batch`, restricted to single-mode pools.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import parity8, secded
+from repro.core.layouts import (CODE_LANE, DATA_LANES, DEFAULT_ROW_WORDS,
+                                GROUP_ROWS, LANES, Layout, PagePlacement,
+                                extra_page_count, place_page,
+                                _parity_row_of_page)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PoolState:
+    """Functional pool state. ``storage`` is the only traced leaf."""
+    storage: jax.Array  # (R, 9, W) uint32
+    boundary: int = dataclasses.field(metadata=dict(static=True))
+    layout: Layout = dataclasses.field(metadata=dict(static=True))
+    row_words: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_rows(self) -> int:
+        return self.storage.shape[0]
+
+    @property
+    def page_words(self) -> int:
+        return DATA_LANES * self.row_words
+
+    @property
+    def page_bytes(self) -> int:
+        return 4 * self.page_words
+
+    @property
+    def num_extra_pages(self) -> int:
+        return extra_page_count(self.layout, self.boundary, self.row_words)
+
+    @property
+    def num_pages(self) -> int:
+        """Effective page capacity = R regular + reclaimed extras."""
+        return self.num_rows + self.num_extra_pages
+
+    @property
+    def raw_bytes(self) -> int:
+        return self.storage.size * 4
+
+    @property
+    def effective_bytes(self) -> int:
+        return self.num_pages * self.page_bytes
+
+    def capacity_gain(self) -> float:
+        """Fraction of baseline (all-SECDED) capacity reclaimed."""
+        return self.num_extra_pages / self.num_rows
+
+
+def make_pool(num_rows: int, layout: Layout = Layout.INTERWRAP,
+              boundary: int | None = None,
+              row_words: int = DEFAULT_ROW_WORDS) -> PoolState:
+    """Create a zeroed pool. ``boundary=None`` puts the whole pool in CREAM mode."""
+    if num_rows % GROUP_ROWS:
+        raise ValueError(f"num_rows must be a multiple of {GROUP_ROWS}")
+    boundary = num_rows if boundary is None else boundary
+    if boundary % GROUP_ROWS or not 0 <= boundary <= num_rows:
+        raise ValueError(f"bad boundary {boundary}")
+    if layout == Layout.BASELINE_ECC and boundary != 0:
+        boundary = 0  # whole pool SECDED
+    storage = jnp.zeros((num_rows, LANES, row_words), dtype=jnp.uint32)
+    return PoolState(storage, boundary, layout, row_words)
+
+
+# ---------------------------------------------------------------------------
+# Placement → jnp gather/scatter
+# ---------------------------------------------------------------------------
+
+
+def _placement(state: PoolState, page: int) -> PagePlacement:
+    if page < state.boundary:
+        return place_page(state.layout, state.boundary, page, state.row_words)
+    if page < state.num_rows:
+        return PagePlacement("rows", page)  # SECDED region
+    # extra page: ids relative to the CREAM region
+    rel = state.boundary + (page - state.num_rows)
+    return place_page(state.layout, state.boundary, rel, state.row_words)
+
+
+def _gather(state: PoolState, pl: PagePlacement) -> jax.Array:
+    W = state.row_words
+    if pl.kind == "rows":
+        return state.storage[pl.row0, :DATA_LANES, :].reshape(-1)
+    if pl.kind == "codelane":
+        return state.storage[pl.row0:pl.row0 + GROUP_ROWS, CODE_LANE, :].reshape(-1)
+    if pl.kind == "wrap":
+        parts = [state.storage[row, lane, :] for lane, row in pl.slices]
+        return jnp.concatenate(parts)
+    raise ValueError(pl.kind)
+
+
+def _scatter(state: PoolState, pl: PagePlacement, data: jax.Array) -> jax.Array:
+    W = state.row_words
+    s = state.storage
+    if pl.kind == "rows":
+        return s.at[pl.row0, :DATA_LANES, :].set(data.reshape(DATA_LANES, W))
+    if pl.kind == "codelane":
+        return s.at[pl.row0:pl.row0 + GROUP_ROWS, CODE_LANE, :].set(
+            data.reshape(GROUP_ROWS, W))
+    if pl.kind == "wrap":
+        chunks = data.reshape(DATA_LANES, W)
+        for k, (lane, row) in enumerate(pl.slices):
+            s = s.at[row, lane, :].set(chunks[k])
+        return s
+    raise ValueError(pl.kind)
+
+
+# ---------------------------------------------------------------------------
+# Page read / write (static page id)
+# ---------------------------------------------------------------------------
+
+
+def read_page(state: PoolState, page: int) -> tuple[jax.Array, jax.Array]:
+    """Read one 8KB page. Returns (data[8W], status[int32 scalar]).
+
+    status: max SECDED/parity status over the page (0 clean, 1/2 corrected,
+    3 detected-uncorrectable). Corrections are *reported*, not persisted —
+    use :func:`scrub` to repair storage in place.
+    """
+    pl = _placement(state, page)
+    data = _gather(state, pl)
+    if page >= state.boundary and page < state.num_rows:
+        codes = state.storage[pl.row0, CODE_LANE, :]
+        data, _, st = secded.decode_block(data, codes)
+        return data, jnp.max(st)
+    if state.layout == Layout.PARITY and page < state.num_rows:
+        prow = _parity_row_of_page(state.layout, state.boundary, page,
+                                   state.row_words)
+        off = (page % 8) * (state.row_words // 8)
+        packed = jax.lax.dynamic_slice(
+            state.storage[prow, CODE_LANE, :], (off,), (state.row_words // 8,))
+        st = parity8.check_lines_packed(data, packed)
+        return data, jnp.max(st) * 3  # corrupt -> DETECTED_UNCORRECTABLE
+    if state.layout == Layout.PARITY and page >= state.num_rows:
+        rel = state.boundary + (page - state.num_rows)
+        prow = _parity_row_of_page(state.layout, state.boundary, rel,
+                                   state.row_words)
+        off = (rel % 8) * (state.row_words // 8)
+        packed = jax.lax.dynamic_slice(
+            state.storage[prow, CODE_LANE, :], (off,), (state.row_words // 8,))
+        st = parity8.check_lines_packed(data, packed)
+        return data, jnp.max(st) * 3
+    return data, jnp.zeros((), jnp.int32)
+
+
+def write_page(state: PoolState, page: int, data: jax.Array) -> PoolState:
+    """Write one 8KB page, maintaining codes for protected pages."""
+    data = data.astype(jnp.uint32).reshape(-1)
+    if data.shape[0] != state.page_words:
+        raise ValueError(f"page data must be {state.page_words} words")
+    pl = _placement(state, page)
+    storage = _scatter(state, pl, data)
+    if page >= state.boundary and page < state.num_rows:
+        codes = secded.encode_block(data)
+        storage = storage.at[pl.row0, CODE_LANE, :].set(codes)
+    elif state.layout == Layout.PARITY:
+        rel = page if page < state.num_rows else \
+            state.boundary + (page - state.num_rows)
+        prow = _parity_row_of_page(state.layout, state.boundary, rel,
+                                   state.row_words)
+        off = (rel % 8) * (state.row_words // 8)
+        packed = parity8.encode_lines_packed(data)
+        storage = jax.lax.dynamic_update_slice(
+            storage, packed[None, None, :],
+            (prow, CODE_LANE, off))[..., :]  # update within the code lane
+    return dataclasses.replace(state, storage=storage)
+
+
+# ---------------------------------------------------------------------------
+# Batched dynamic access (hot path: paged KV cache).
+# Restricted to pools whose CREAM region covers everything and whose layout
+# gives uniform single-op placement (INTERWRAP) or uniform row placement.
+# ---------------------------------------------------------------------------
+
+
+def _wrap_index_tables(boundary: int) -> tuple[np.ndarray, np.ndarray]:
+    """lane/row tables: for slot s (0..8), the 8 (lane, rel_row) slices."""
+    lanes = np.empty((9, 8), np.int32)
+    rows = np.empty((9, 8), np.int32)
+    for s in range(9):
+        for k in range(8):
+            linear = 8 * s + k
+            lanes[s, k] = linear % LANES
+            rows[s, k] = linear // LANES
+    return lanes, rows
+
+
+_WRAP_LANES, _WRAP_ROWS = _wrap_index_tables(0)
+
+
+def page_to_wrap_coords(state: PoolState, pages: jax.Array
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Vectorised (group, slot) -> (rows[n,8], lanes[n,8]) for INTERWRAP pools."""
+    nr = state.num_rows
+    is_extra = pages >= nr
+    e = pages - nr
+    group = jnp.where(is_extra, e, pages // GROUP_ROWS)
+    slot = jnp.where(is_extra, GROUP_ROWS, pages % GROUP_ROWS)
+    lanes = jnp.asarray(_WRAP_LANES)[slot]                  # (n, 8)
+    rows = GROUP_ROWS * group[:, None] + jnp.asarray(_WRAP_ROWS)[slot]
+    return rows, lanes
+
+
+def read_pages_batch(state: PoolState, pages: jax.Array) -> jax.Array:
+    """Gather a batch of pages -> (n, 8W) uint32.
+
+    Fast paths: whole-pool INTERWRAP (the Pallas ``interwrap`` kernel's
+    access; this jnp version is its oracle and the CPU path) and whole-pool
+    SECDED (decode+correct on load).
+    """
+    if state.layout == Layout.INTERWRAP and state.boundary == state.num_rows:
+        rows, lanes = page_to_wrap_coords(state, pages)
+        return state.storage[rows, lanes, :].reshape(pages.shape[0], -1)
+    if state.boundary == 0:  # whole pool conventional SECDED
+        data = state.storage[pages, :DATA_LANES, :].reshape(
+            pages.shape[0], -1)
+        codes = state.storage[pages, CODE_LANE, :]
+        fixed, _, _ = secded.decode_block(data, codes)
+        return fixed
+    raise ValueError("batched access requires a single-mode pool")
+
+
+def read_pages_batch_status(state: PoolState, pages: jax.Array
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Batched read + worst decode status (0 clean .. 3 uncorrectable)."""
+    if state.boundary == 0:
+        data = state.storage[pages, :DATA_LANES, :].reshape(
+            pages.shape[0], -1)
+        codes = state.storage[pages, CODE_LANE, :]
+        fixed, _, status = secded.decode_block(data, codes)
+        return fixed, jnp.max(status)
+    return read_pages_batch(state, pages), jnp.zeros((), jnp.int32)
+
+
+def write_pages_batch(state: PoolState, pages: jax.Array,
+                      data: jax.Array) -> PoolState:
+    """Scatter a batch of pages (n, 8W). Single-mode pools only."""
+    data = data.astype(jnp.uint32)
+    if state.layout == Layout.INTERWRAP and state.boundary == state.num_rows:
+        rows, lanes = page_to_wrap_coords(state, pages)
+        chunks = data.reshape(pages.shape[0], DATA_LANES, -1)
+        storage = state.storage.at[rows, lanes, :].set(chunks)
+        return dataclasses.replace(state, storage=storage)
+    if state.boundary == 0:
+        chunks = data.reshape(pages.shape[0], DATA_LANES, state.row_words)
+        storage = state.storage.at[pages, :DATA_LANES, :].set(chunks)
+        codes = secded.encode_block(data.reshape(pages.shape[0], -1))
+        storage = storage.at[pages, CODE_LANE, :].set(codes)
+        return dataclasses.replace(state, storage=storage)
+    raise ValueError("batched access requires a single-mode pool")
+
+
+# ---------------------------------------------------------------------------
+# Repartitioning — the paper's dynamic boundary moves (§3.3, §4.3.1)
+# ---------------------------------------------------------------------------
+
+
+def repartition(state: PoolState, new_boundary: int
+                ) -> tuple[PoolState, dict]:
+    """Move the CREAM/SECDED boundary, re-encoding affected rows.
+
+    Growing the SECDED region (boundary shrinks) evicts extra pages whose
+    storage lived in reclaimed code lanes — their ids are returned so the
+    owner (e.g. the KV-cache) can refetch/drop them, mirroring the OS-visible
+    capacity change in the paper. Growing the CREAM region re-purposes code
+    lanes into extra-page storage (zeroed).
+
+    Page *contents* of regular pages are preserved across the move: rows
+    entering the SECDED region get fresh codes; rows leaving it keep data and
+    (for PARITY) get parity entries.
+    """
+    if new_boundary % GROUP_ROWS or not 0 <= new_boundary <= state.num_rows:
+        raise ValueError(f"bad boundary {new_boundary}")
+    old = state.boundary
+    info = {"old_boundary": old, "new_boundary": new_boundary,
+            "evicted_extra_pages": [], "pages_reencoded": 0}
+    if new_boundary == old:
+        return state, info
+
+    old_extra = state.num_extra_pages
+    storage = state.storage
+
+    if new_boundary < old:  # CREAM region shrinks -> protect more rows
+        # 1) All extra pages with storage above the new CREAM span are lost.
+        new_extra = extra_page_count(state.layout, new_boundary, state.row_words)
+        info["evicted_extra_pages"] = list(
+            range(state.num_rows + new_extra, state.num_rows + old_extra))
+        # 2) Rows [new_boundary, old) need SECDED codes over their current data.
+        for row in range(new_boundary, old):
+            # Under INTERWRAP the row's data may be wrap-striped: read the
+            # logical page first, then rewrite in conventional layout.
+            data, _ = read_page(state, row)
+            storage = storage.at[row, :DATA_LANES, :].set(
+                data.reshape(DATA_LANES, state.row_words))
+            storage = storage.at[row, CODE_LANE, :].set(secded.encode_block(data))
+            info["pages_reencoded"] += 1
+        new_state = PoolState(storage, new_boundary, state.layout,
+                              state.row_words)
+    else:  # CREAM region grows -> reclaim code lanes
+        tmp = PoolState(storage, new_boundary, state.layout, state.row_words)
+        for row in range(old, new_boundary):
+            data = state.storage[row, :DATA_LANES, :].reshape(-1)
+            # decode once with the outgoing codes (last chance to correct)
+            data, _, _ = secded.decode_block(data, state.storage[row, CODE_LANE, :])
+            tmp = write_page(tmp, row, data)   # re-place under CREAM layout
+            info["pages_reencoded"] += 1
+        # zero reclaimed code lanes that are now extra-page storage
+        new_state = tmp
+    return new_state, info

@@ -1,0 +1,111 @@
+"""Memory scrubbing — periodic sweep that repairs single-bit errors in place.
+
+Data centers scrub DRAM in the background; CREAM's health monitor (paper
+§3.1) consumes the per-sweep error statistics to drive protection upgrades/
+downgrades. Here the sweep is a vectorised jnp pass (oracle) with a Pallas
+fast path (``repro.kernels.scrub``) selectable via ``use_kernel=True``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import parity8, secded
+from repro.core.layouts import CODE_LANE, DATA_LANES, Layout
+from repro.core.pool import PoolState
+
+
+@dataclass(frozen=True)
+class ScrubStats:
+    """Per-sweep error census (python ints; host-side control plane)."""
+    beats_checked: int = 0
+    corrected_data: int = 0
+    corrected_code: int = 0
+    detected_uncorrectable: int = 0
+    parity_lines_checked: int = 0
+    parity_corrupt_lines: int = 0
+    corrupt_rows: tuple[int, ...] = ()
+
+    @property
+    def corrected(self) -> int:
+        return self.corrected_data + self.corrected_code
+
+    @property
+    def error_rate(self) -> float:
+        checked = self.beats_checked + self.parity_lines_checked
+        errors = self.corrected + self.detected_uncorrectable + \
+            self.parity_corrupt_lines
+        return errors / checked if checked else 0.0
+
+
+def _scrub_secded_rows(storage: jax.Array, start: int) -> tuple[
+        jax.Array, jax.Array, jax.Array]:
+    """Decode+correct rows [start, R). Returns (storage', status, row_bad)."""
+    data = storage[start:, :DATA_LANES, :].reshape(storage.shape[0] - start, -1)
+    codes = storage[start:, CODE_LANE, :]
+    data2, codes2, status = secded.decode_block(data, codes)
+    storage = storage.at[start:, :DATA_LANES, :].set(
+        data2.reshape(-1, DATA_LANES, storage.shape[2]))
+    storage = storage.at[start:, CODE_LANE, :].set(codes2)
+    row_bad = jnp.max(status, axis=-1) == secded.DETECTED_UNCORRECTABLE
+    return storage, status, row_bad
+
+
+@jax.jit
+def _scrub_secded_jit(storage: jax.Array, start: int):
+    return _scrub_secded_rows(storage, start)
+
+
+def scrub(state: PoolState, use_kernel: bool = False
+          ) -> tuple[PoolState, ScrubStats]:
+    """One full scrub sweep. SECDED rows are repaired in place; parity rows
+    are checked (detection only) and reported via ``corrupt_rows`` so the
+    owner can restore them from a checkpoint (targeted recovery, DESIGN §2.4).
+    """
+    storage = state.storage
+    B, R = state.boundary, state.num_rows
+    kw: dict = {}
+
+    corrected_data = corrected_code = detected = 0
+    beats = 0
+    corrupt_rows: list[int] = []
+
+    if B < R:  # SECDED region
+        if use_kernel:
+            from repro.kernels.scrub import ops as scrub_ops
+            storage, status, row_bad = scrub_ops.scrub_secded(storage, B)
+        else:
+            storage, status, row_bad = _scrub_secded_rows(storage, B)
+        beats = int(status.size)
+        corrected_data = int(jnp.sum(status == secded.CORRECTED_DATA))
+        corrected_code = int(jnp.sum(status == secded.CORRECTED_CODE))
+        detected = int(jnp.sum(status == secded.DETECTED_UNCORRECTABLE))
+        corrupt_rows += [B + i for i in jnp.where(row_bad)[0].tolist()]
+
+    parity_lines = parity_corrupt = 0
+    if state.layout == Layout.PARITY and B > 0:
+        # Check regular CREAM pages against the parity table (vectorised).
+        W = state.row_words
+        data = storage[:B, :DATA_LANES, :].reshape(B, -1)
+        table_rows = (B + 7) // 8
+        table = storage[:table_rows, CODE_LANE, :].reshape(-1)[: B * (W // 8)]
+        packed = table.reshape(B, W // 8)
+        st = parity8.check_lines_packed(data, packed)
+        parity_lines = int(st.size)
+        parity_corrupt = int(jnp.sum(st))
+        bad = jnp.max(st, axis=-1) == parity8.LINE_CORRUPT
+        corrupt_rows += [int(i) for i in jnp.where(bad)[0].tolist()]
+
+    new_state = dataclasses.replace(state, storage=storage)
+    return new_state, ScrubStats(
+        beats_checked=beats,
+        corrected_data=corrected_data,
+        corrected_code=corrected_code,
+        detected_uncorrectable=detected,
+        parity_lines_checked=parity_lines,
+        parity_corrupt_lines=parity_corrupt,
+        corrupt_rows=tuple(corrupt_rows),
+    )

@@ -1,0 +1,210 @@
+"""Hsiao SECDED(72,64) code — the error-correcting code stored on "chip 8".
+
+The paper's ECC DRAM stores an 8-bit SECDED code for every 64-bit data burst
+(Hsiao, "A Class of Optimal Minimum Odd-Weight-Column SEC-DED Codes", 1970).
+We implement the same (72,64) code in vectorised JAX:
+
+  * 64 data bits are carried as a pair of uint32 words ``(lo, hi)`` — our
+    TPU-adapted "beat" (see DESIGN.md §2.1: the bit-interleaved DDR burst is
+    re-bound to two consecutive uint32 within one lane; the 64:8 ratio and all
+    SECDED guarantees are unchanged).
+  * The 8 parity bits are each the XOR of an odd-weight subset of data bits.
+    Columns of the parity-check matrix H are distinct odd-weight 8-bit vectors
+    (56 of weight 3 + 8 of weight 5), so any single-bit error yields a syndrome
+    equal to that bit's (odd-weight) column — correctable — while any double
+    error yields a nonzero even-weight syndrome — detected, never miscorrected.
+
+Everything here is pure jnp (usable inside Pallas kernels and as the oracle
+for ``repro.kernels.secded``).
+"""
+from __future__ import annotations
+
+from itertools import combinations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NUM_DATA_BITS = 64
+NUM_CODE_BITS = 8
+
+# Per-beat decode status codes (also used by the scrubber / monitor).
+CLEAN = 0                     # syndrome zero — no error
+CORRECTED_DATA = 1            # single-bit error in the data bits, corrected
+CORRECTED_CODE = 2            # single-bit error in the code bits, corrected
+DETECTED_UNCORRECTABLE = 3    # even-weight / unmatched syndrome — ≥2 bit errors
+
+
+def _build_hsiao_code() -> tuple[np.ndarray, np.ndarray]:
+    """Construct H-matrix data columns and the 256-entry syndrome action table.
+
+    Returns:
+      columns: (64,) uint16 — syndrome value produced by an error in data bit i.
+      table:   (256,) int32 — action per syndrome:
+                 -1        -> clean
+                 0..63     -> flip data bit
+                 64..71    -> flip code bit (value - 64)
+                 -2        -> detected uncorrectable
+    """
+    cols: list[int] = []
+    for weight in (3, 5):
+        for combo in combinations(range(NUM_CODE_BITS), weight):
+            col = 0
+            for b in combo:
+                col |= 1 << b
+            cols.append(col)
+            if len(cols) == NUM_DATA_BITS:
+                break
+        if len(cols) == NUM_DATA_BITS:
+            break
+    assert len(cols) == NUM_DATA_BITS and len(set(cols)) == NUM_DATA_BITS
+
+    table = np.full(256, -2, dtype=np.int32)
+    table[0] = -1
+    for i, col in enumerate(cols):
+        table[col] = i
+    for p in range(NUM_CODE_BITS):
+        table[1 << p] = 64 + p
+    return np.asarray(cols, dtype=np.uint16), table
+
+
+_COLUMNS, _SYNDROME_TABLE = _build_hsiao_code()
+
+# Per-parity-bit masks over the 64 data bits, split into the (lo, hi) words.
+_MASK_LO = np.zeros(NUM_CODE_BITS, dtype=np.uint32)
+_MASK_HI = np.zeros(NUM_CODE_BITS, dtype=np.uint32)
+for _i, _col in enumerate(_COLUMNS):
+    for _p in range(NUM_CODE_BITS):
+        if (_col >> _p) & 1:
+            if _i < 32:
+                _MASK_LO[_p] |= np.uint32(1 << _i)
+            else:
+                _MASK_HI[_p] |= np.uint32(1 << (_i - 32))
+
+# jnp constants (captured as literals inside jit/pallas traces).
+MASK_LO = jnp.asarray(_MASK_LO)
+MASK_HI = jnp.asarray(_MASK_HI)
+SYNDROME_TABLE = jnp.asarray(_SYNDROME_TABLE)
+H_COLUMNS = jnp.asarray(_COLUMNS.astype(np.int32))
+
+
+def encode_words(lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """SECDED code for 64-bit beats given as two uint32 planes.
+
+    Args:
+      lo, hi: uint32 arrays of identical shape (bits 0..31 / 32..63).
+    Returns:
+      uint32 array, same shape, values in [0, 256): the 8-bit Hsiao code.
+    """
+    lo = lo.astype(jnp.uint32)
+    hi = hi.astype(jnp.uint32)
+    code = jnp.zeros_like(lo)
+    for p in range(NUM_CODE_BITS):
+        ones = jax.lax.population_count(lo & MASK_LO[p]) + jax.lax.population_count(
+            hi & MASK_HI[p]
+        )
+        code = code | ((ones & jnp.uint32(1)) << p)
+    return code
+
+
+def decode_words(
+    lo: jax.Array, hi: jax.Array, code: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Check + correct 64-bit beats against their stored SECDED codes.
+
+    Args:
+      lo, hi: uint32 data planes (any shape).
+      code:   uint32 stored codes in [0, 256), same shape.
+    Returns:
+      (lo', hi', code', status) — corrected planes/codes and a per-beat status
+      in {CLEAN, CORRECTED_DATA, CORRECTED_CODE, DETECTED_UNCORRECTABLE}.
+    """
+    lo = lo.astype(jnp.uint32)
+    hi = hi.astype(jnp.uint32)
+    code = code.astype(jnp.uint32) & jnp.uint32(0xFF)
+    syndrome = (encode_words(lo, hi) ^ code) & jnp.uint32(0xFF)
+    action = jnp.take(SYNDROME_TABLE, syndrome.astype(jnp.int32), axis=0)
+
+    is_data = (action >= 0) & (action < 64)
+    is_code_bit = action >= 64
+    bit = jnp.where(action >= 0, action, 0).astype(jnp.uint32)
+
+    flip_lo = jnp.where(is_data & (bit < 32), jnp.uint32(1) << (bit & 31), 0)
+    flip_hi = jnp.where(is_data & (bit >= 32), jnp.uint32(1) << (bit & 31), 0)
+    flip_code = jnp.where(is_code_bit, jnp.uint32(1) << ((bit - 64) & 7), 0)
+
+    status = jnp.where(
+        action == -1,
+        CLEAN,
+        jnp.where(
+            is_data,
+            CORRECTED_DATA,
+            jnp.where(is_code_bit, CORRECTED_CODE, DETECTED_UNCORRECTABLE),
+        ),
+    ).astype(jnp.int32)
+    return lo ^ flip_lo, hi ^ flip_hi, code ^ flip_code, status
+
+
+# ---------------------------------------------------------------------------
+# Block-level helpers: pool rows move 64-bit beats as pairs of consecutive
+# uint32 words; codes are packed 4-per-uint32 ("chip 8" storage format).
+# ---------------------------------------------------------------------------
+
+
+def split_beats(data: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(..., 2k) uint32 -> (lo, hi) each (..., k): beat j = words (2j, 2j+1)."""
+    if data.shape[-1] % 2:
+        raise ValueError(f"last dim must be even, got {data.shape}")
+    pairs = data.reshape(*data.shape[:-1], data.shape[-1] // 2, 2)
+    return pairs[..., 0], pairs[..., 1]
+
+
+def merge_beats(lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Inverse of :func:`split_beats`."""
+    return jnp.stack([lo, hi], axis=-1).reshape(*lo.shape[:-1], lo.shape[-1] * 2)
+
+
+def pack_codes(codes: jax.Array) -> jax.Array:
+    """(..., k) uint32 byte values -> (..., k//4) uint32, 4 codes per word."""
+    if codes.shape[-1] % 4:
+        raise ValueError(f"code count must be divisible by 4, got {codes.shape}")
+    grouped = codes.reshape(*codes.shape[:-1], codes.shape[-1] // 4, 4).astype(
+        jnp.uint32
+    )
+    shifts = jnp.asarray([0, 8, 16, 24], dtype=jnp.uint32)
+    return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_codes(packed: jax.Array) -> jax.Array:
+    """(..., m) uint32 -> (..., 4m) uint32 byte values."""
+    shifts = jnp.asarray([0, 8, 16, 24], dtype=jnp.uint32)
+    codes = (packed[..., None] >> shifts) & jnp.uint32(0xFF)
+    return codes.reshape(*packed.shape[:-1], packed.shape[-1] * 4)
+
+
+def encode_block(data: jax.Array) -> jax.Array:
+    """Encode a data block into its packed SECDED code plane.
+
+    Args:
+      data: uint32 (..., 2k) with k % 4 == 0 — e.g. a pool row's 8 data lanes
+            flattened to 2048 words encodes to a 256-word code lane (8KB:1KB,
+            the paper's chip-8 ratio).
+    Returns:
+      uint32 (..., k//4) packed codes.
+    """
+    lo, hi = split_beats(data)
+    return pack_codes(encode_words(lo, hi))
+
+
+def decode_block(
+    data: jax.Array, packed_codes: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Check + correct a data block against its packed code plane.
+
+    Returns:
+      (data', packed_codes', status) — status is per-beat (..., k) int32.
+    """
+    lo, hi = split_beats(data)
+    codes = unpack_codes(packed_codes)
+    lo2, hi2, codes2, status = decode_words(lo, hi, codes)
+    return merge_beats(lo2, hi2), pack_codes(codes2), status

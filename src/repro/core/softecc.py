@@ -1,0 +1,173 @@
+"""SoftECC — the Virtualized-ECC baseline the paper compares against (§6.3).
+
+Virtualized ECC [Yoon & Erez, ASPLOS'10] provides SECDED on *non-ECC* DRAM by
+storing the codes inside ordinary physical pages: every group of 9 rows holds
+8 data pages + 1 code page (8 pages × 1KB codes = one 8KB page), lowering
+effective capacity by 1/9 ≈ 11.1%. Each protected access needs a second
+access for the code page, partially hidden by caching recently-used code
+lines in the LLC — which the paper shows *increases cache contention* and
+costs up to 25.1% performance at high memory intensity.
+
+We model both faces:
+  * functional jnp pool (read/write/scrub) used by the comparison tests, and
+  * access accounting (`plan_line_access`) incl. the code cache, consumed by
+    ``benchmarks/bench_sensitivity.py`` to reproduce Fig. 12.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import secded
+
+GROUP = 9  # 8 data pages + 1 code page
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SoftECCState:
+    """Non-ECC pool (R, 8, W) with in-band code pages."""
+    storage: jax.Array  # (R, 8, W) uint32 — NOTE: 8 lanes, no ECC chip
+    row_words: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_rows(self) -> int:
+        return self.storage.shape[0]
+
+    @property
+    def num_pages(self) -> int:
+        """Effective data capacity: 8 of every 9 rows."""
+        return self.num_rows - self.num_code_rows
+
+    @property
+    def num_code_rows(self) -> int:
+        return self.num_rows // GROUP
+
+    @property
+    def page_words(self) -> int:
+        return 8 * self.row_words
+
+
+def make_softecc(num_rows: int, row_words: int = 256) -> SoftECCState:
+    if num_rows % GROUP:
+        raise ValueError(f"num_rows must be a multiple of {GROUP}")
+    return SoftECCState(jnp.zeros((num_rows, 8, row_words), jnp.uint32),
+                        row_words)
+
+
+def _locate(state: SoftECCState, page: int) -> tuple[int, int, int]:
+    """logical page -> (data_row, code_row, code_word_offset).
+
+    Group g occupies rows [9g, 9g+9): rows 9g..9g+7 are data pages, row 9g+8
+    is the code page; page p's codes fill words [(p%8)·W/8·... ] — one data
+    page (8W words = 4W beats) needs W code words, i.e. 1/8 of the code page.
+    """
+    g, k = divmod(page, 8)
+    data_row = GROUP * g + k
+    code_row = GROUP * g + 8
+    return data_row, code_row, k * state.row_words // 8
+
+
+def read_page(state: SoftECCState, page: int) -> tuple[jax.Array, jax.Array]:
+    data_row, code_row, off = _locate(state, page)
+    data = state.storage[data_row].reshape(-1)
+    # Codes for one page (8W words = 4W beats = 4W bytes) pack into W words;
+    # page k of the group owns lane k of the code page (8 × W = full page).
+    codes = _code_slice(state, page)
+    data2, _, status = secded.decode_block(data, codes)
+    return data2, jnp.max(status)
+
+
+def _code_slice(state: SoftECCState, page: int) -> jax.Array:
+    g, k = divmod(page, 8)
+    code_row = GROUP * g + 8
+    W = state.row_words
+    # one page's packed codes = page_words/8 = W words... (8W words data ->
+    # 4W beats -> 4W bytes -> W words packed). Page k's codes live in lane k.
+    return state.storage[code_row, k, :]
+
+
+def write_page(state: SoftECCState, page: int, data: jax.Array) -> SoftECCState:
+    data = data.astype(jnp.uint32).reshape(-1)
+    if data.shape[0] != state.page_words:
+        raise ValueError("bad page size")
+    data_row, code_row, _ = _locate(state, page)
+    g, k = divmod(page, 8)
+    storage = state.storage.at[data_row].set(
+        data.reshape(8, state.row_words))
+    storage = storage.at[code_row, k, :].set(secded.encode_block(data))
+    return dataclasses.replace(state, storage=storage)
+
+
+def scrub(state: SoftECCState) -> tuple[SoftECCState, dict]:
+    """Decode+correct every data page; returns stats like the CREAM scrubber."""
+    st = state
+    corrected = detected = 0
+    for page in range(state.num_pages):
+        data, status = read_page(st, page)
+        s = int(status)
+        if s in (secded.CORRECTED_DATA, secded.CORRECTED_CODE):
+            st = write_page(st, page, data)
+            corrected += 1
+        elif s == secded.DETECTED_UNCORRECTABLE:
+            detected += 1
+    return st, {"corrected_pages": corrected, "uncorrectable_pages": detected}
+
+
+# ---------------------------------------------------------------------------
+# Access accounting with an LLC-resident code cache (Fig. 12 driver)
+# ---------------------------------------------------------------------------
+
+
+class CodeCache:
+    """LRU over (code_row, line) entries — the LLC space VECC borrows.
+
+    ``capacity_lines`` models how many 64B code lines fit in the borrowed LLC
+    space; the sensitivity benchmark charges the displaced cache capacity to
+    the application, reproducing the paper's contention effect.
+    """
+
+    def __init__(self, capacity_lines: int):
+        self.capacity = capacity_lines
+        self._lru: OrderedDict[tuple[int, int], None] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def access(self, key: tuple[int, int]) -> bool:
+        if self.capacity <= 0:
+            self.misses += 1
+            return False
+        if key in self._lru:
+            self._lru.move_to_end(key)
+            self.hits += 1
+            return True
+        self.misses += 1
+        self._lru[key] = None
+        if len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+        return False
+
+
+def plan_line_ops(page: int, line: int, write: bool,
+                  cache: CodeCache | None) -> int:
+    """DRAM operations for one 64B line access under SoftECC.
+
+    Data op + code op; the code op is elided on a code-cache hit. Writes
+    must read-modify-write the code line (codes for 8 lines share one 64B).
+    """
+    g, k = divmod(page, 8)
+    code_row = GROUP * g + 8
+    code_line = (k * 64 + line // 8) % 128  # which 64B of the code page
+    ops = 1  # the data access itself
+    hit = cache.access((code_row, code_line)) if cache else False
+    if not hit:
+        ops += 1          # fetch code line
+    if write and not hit:
+        ops += 1          # RMW write-back of the merged code line
+    elif write:
+        ops += 1          # dirty write-back eventually; charge one op
+    return ops

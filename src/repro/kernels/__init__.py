@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package has three files:
+  * ``kernel.py`` — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target),
+  * ``ops.py``    — jit'd public wrapper with kernel/ref dispatch,
+  * ``ref.py``    — pure-jnp oracle used by the allclose test sweeps.
+
+Kernels run natively on TPU and in interpret mode elsewhere
+(``repro.kernels.common.use_interpret``).
+
+Catalogue:
+  secded           Hsiao(72,64) encode / fused check+correct
+  parity8          8-bit-per-line detection code
+  interwrap        Solution-3 wrap-around page gather/scatter (scalar prefetch)
+  scrub            fused scrub sweep: decode + correct + census, one pass
+  ecc_matmul       beyond-paper: SECDED decode-on-load fused into a matmul
+  flash_attention  causal GQA flash attention for long-context serving
+"""

@@ -1,0 +1,35 @@
+"""Shared kernel utilities: interpret-mode selection, tiling helpers."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+@functools.cache
+def use_interpret() -> bool:
+    """Pallas kernels run in interpret mode off-TPU (this container is CPU).
+
+    On TPU the kernels lower natively; ``REPRO_FORCE_INTERPRET=1`` forces
+    interpret mode for debugging on hardware.
+    """
+    if os.environ.get("REPRO_FORCE_INTERPRET") == "1":
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def pick_block(n: int, preferred: int) -> int:
+    """Largest divisor of n that is <= preferred (keeps grids exact)."""
+    b = min(preferred, n)
+    while n % b:
+        b -= 1
+    return b

@@ -1,0 +1,16 @@
+"""Public entry points for the fused ECC matmul with kernel/ref dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ecc_matmul import kernel, ref
+
+protect = ref.protect
+unprotect = ref.unprotect
+
+
+def ecc_matmul(a_bits: jax.Array, a_codes: jax.Array, b: jax.Array,
+               use_kernel: bool = True) -> jax.Array:
+    if use_kernel:
+        return kernel.ecc_matmul(a_bits, a_codes, b)
+    return ref.ecc_matmul(a_bits, a_codes, b)

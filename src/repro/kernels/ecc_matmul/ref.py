@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused SECDED-decode + matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import secded
+
+
+def protect(a: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """bf16 (M, K) weights -> (bits (M, K//2) uint32, codes (M, K//16))."""
+    m, k = a.shape
+    bits = jax.lax.bitcast_convert_type(
+        a.reshape(m, k // 2, 2), jnp.uint32)
+    return bits, secded.encode_block(bits)
+
+
+def unprotect(bits: jax.Array) -> jax.Array:
+    """(M, K//2) uint32 -> bf16 (M, K)."""
+    m, kw = bits.shape
+    halves = jax.lax.bitcast_convert_type(bits, jnp.bfloat16)  # (M, K//2, 2)
+    return halves.reshape(m, kw * 2)
+
+
+def ecc_matmul(a_bits: jax.Array, a_codes: jax.Array, b: jax.Array
+               ) -> jax.Array:
+    """Decode-and-correct A, then A @ B. Returns f32 (M, N)."""
+    fixed, _, _ = secded.decode_block(a_bits, a_codes)
+    a = unprotect(fixed)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

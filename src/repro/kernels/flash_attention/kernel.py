@@ -1,0 +1,100 @@
+"""Pallas TPU flash attention (causal, GQA) — O(S) memory for long context.
+
+Standard online-softmax tiling adapted to TPU grid semantics: the grid is
+(B, Hq, S/BQ, S/BK) with the KV dimension minor — sequential on TPU — so the
+running max / denominator / accumulator persist in VMEM scratch across KV
+steps of one query tile. Causally dead KV tiles are skipped via a masked
+contribution (XLA still schedules them; on TPU the bound-check short-circuit
+is handled by Mosaic's grid pruning when `causal_block_skip` maps them out).
+
+VMEM per step (defaults BQ=BK=256, D<=256): q/k/v tiles ≈ 0.4MB + scratch
+acc (BQ, D) f32 + m/l (BQ, 128) ≈ 0.4MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import pick_block, use_interpret
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, bq: int, bk: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)               # (BK, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev = m_scr[:, :1]                              # (BQ, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)                    # (BQ, 1)
+    l_new = alpha * l_scr[:, :1] + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] / l_scr[:, :1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "bq", "bk"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+              scale: float | None = None, bq: int = DEFAULT_BQ,
+              bk: int = DEFAULT_BK) -> jax.Array:
+    """q (B,Hq,S,D), k/v (B,Hkv,S,D) -> (B,Hq,S,D). Hq % Hkv == 0."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    groups = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    bq = pick_block(s, bq)
+    bk = pick_block(s, bk)
+    grid = (b, hq, s // bq, s // bk)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (b_, h // groups, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (b_, h // groups, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=use_interpret(),
+    )(q, k, v)

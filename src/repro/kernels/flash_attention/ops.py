@@ -1,0 +1,13 @@
+"""Public entry point for flash attention with kernel/ref dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import kernel, ref
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+              scale: float | None = None, use_kernel: bool = True) -> jax.Array:
+    if use_kernel:
+        return kernel.attention(q, k, v, causal=causal, scale=scale)
+    return ref.attention(q, k, v, causal=causal, scale=scale)

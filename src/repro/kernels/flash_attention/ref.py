@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (causal, GQA-aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True, scale: float | None = None) -> jax.Array:
+    """Reference attention.
+
+    q: (B, Hq, S, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0.
+    Returns (B, Hq, S, D) in q.dtype; softmax math in f32.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    groups = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kx = jnp.repeat(k, groups, axis=1)
+    vx = jnp.repeat(v, groups, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,20 @@
+"""Public entry points for InterWrap gather/scatter with kernel/ref dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.interwrap import kernel, ref
+
+
+def gather(storage: jax.Array, pages: jax.Array, num_rows: int,
+           use_kernel: bool = True) -> jax.Array:
+    if use_kernel:
+        return kernel.gather(storage, pages, num_rows)
+    return ref.gather(storage, pages, num_rows)
+
+
+def scatter(storage: jax.Array, pages: jax.Array, data: jax.Array,
+            num_rows: int, use_kernel: bool = True) -> jax.Array:
+    if use_kernel:
+        return kernel.scatter(storage, pages, data, num_rows)
+    return ref.scatter(storage, pages, data, num_rows)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the InterWrap (Solution 3) gather/scatter."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layouts import GROUP_ROWS, LANES
+
+_LANES_TBL = np.empty((9, 8), np.int32)
+_ROWS_TBL = np.empty((9, 8), np.int32)
+for _s in range(9):
+    for _k in range(8):
+        _linear = 8 * _s + _k
+        _LANES_TBL[_s, _k] = _linear % LANES
+        _ROWS_TBL[_s, _k] = _linear // LANES
+
+
+def wrap_coords(pages: jax.Array, num_rows: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """(n,) page ids -> (rows (n,8), lanes (n,8)) under inter-bank wrap-around."""
+    is_extra = pages >= num_rows
+    e = pages - num_rows
+    group = jnp.where(is_extra, e, pages // GROUP_ROWS)
+    slot = jnp.where(is_extra, GROUP_ROWS, pages % GROUP_ROWS)
+    lanes = jnp.asarray(_LANES_TBL)[slot]
+    rows = GROUP_ROWS * group[:, None] + jnp.asarray(_ROWS_TBL)[slot]
+    return rows, lanes
+
+
+def gather(storage: jax.Array, pages: jax.Array, num_rows: int) -> jax.Array:
+    """(R,9,W), (n,) -> (n, 8W): read n wrap-striped pages."""
+    rows, lanes = wrap_coords(pages, num_rows)
+    return storage[rows, lanes, :].reshape(pages.shape[0], -1)
+
+
+def scatter(storage: jax.Array, pages: jax.Array, data: jax.Array,
+            num_rows: int) -> jax.Array:
+    """Write n wrap-striped pages; data (n, 8W) -> updated storage."""
+    rows, lanes = wrap_coords(pages, num_rows)
+    chunks = data.astype(jnp.uint32).reshape(pages.shape[0], 8, -1)
+    return storage.at[rows, lanes, :].set(chunks)

@@ -1,0 +1,15 @@
+"""Public entry points for parity8 with kernel/ref dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.parity8 import kernel, ref
+
+
+def encode(data: jax.Array, use_kernel: bool = True) -> jax.Array:
+    return kernel.encode(data) if use_kernel else ref.encode(data)
+
+
+def check(data: jax.Array, parity: jax.Array, use_kernel: bool = True
+          ) -> jax.Array:
+    return kernel.check(data, parity) if use_kernel else ref.check(data, parity)

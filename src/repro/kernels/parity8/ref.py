@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the parity8 kernels — delegates to repro.core.parity8."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import parity8 as _p
+
+
+def encode(data: jax.Array) -> jax.Array:
+    """(N, D) uint32, D % 64 == 0 -> (N, D//64) packed parity bytes."""
+    return _p.encode_lines_packed(data)
+
+
+def check(data: jax.Array, parity: jax.Array) -> jax.Array:
+    """(N, D), (N, D//64) -> per-line status (N, D//16)."""
+    return _p.check_lines_packed(data, parity)

@@ -1,0 +1,29 @@
+"""Public entry points for the fused scrub kernel, plus the pool adapter."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.secded import DETECTED_UNCORRECTABLE
+from repro.kernels.scrub import kernel, ref
+
+
+def scrub_rows(storage: jax.Array, use_kernel: bool = True
+               ) -> tuple[jax.Array, jax.Array]:
+    if use_kernel:
+        return kernel.scrub_rows(storage)
+    return ref.scrub_rows(storage)
+
+
+def scrub_secded(storage: jax.Array, start: int
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Adapter matching repro.core.scrubber's internal signature.
+
+    Scrubs rows [start, R) of a pool buffer; returns (storage', status,
+    row_bad).
+    """
+    region = storage[start:]
+    fixed, status = scrub_rows(region)
+    storage = storage.at[start:].set(fixed)
+    row_bad = jnp.max(status, axis=-1) == DETECTED_UNCORRECTABLE
+    return storage, status, row_bad

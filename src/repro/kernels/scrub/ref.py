@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused scrub kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import secded
+from repro.core.layouts import CODE_LANE, DATA_LANES
+
+
+def scrub_rows(storage: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Decode+correct SECDED rows. (R, 9, W) -> (storage', status (R, 4W))."""
+    R, _, W = storage.shape
+    data = storage[:, :DATA_LANES, :].reshape(R, -1)
+    codes = storage[:, CODE_LANE, :]
+    data2, codes2, status = secded.decode_block(data, codes)
+    out = jnp.concatenate(
+        [data2.reshape(R, DATA_LANES, W), codes2[:, None, :]], axis=1)
+    return out, status

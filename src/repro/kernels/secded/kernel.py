@@ -1,0 +1,136 @@
+"""Pallas TPU kernels for Hsiao SECDED(72,64) encode / decode-correct.
+
+TPU mapping (DESIGN.md §2.2): SECDED is pure VPU work — per-beat popcounts
+against 8 bit-masks, syndrome matching, and XOR fix-ups. Arithmetic intensity
+is low (~30 VPU ops per 8 bytes), so the kernels are strictly memory-bound:
+the BlockSpec tiling streams rows HBM→VMEM in large aligned tiles and fuses
+encode/correct into a single pass (the paper's "performed entirely in
+hardware as part of every memory request").
+
+Two TPU-specific adaptations vs. the reference:
+  * the per-parity bit-masks are baked in as scalar literals (VREG splats),
+  * the 256-entry syndrome→action table becomes a 72-way compare/select
+    chain — per-element gathers don't vectorise on the VPU, whereas a select
+    tree is pure element-wise work.
+
+Tiling: data rows are (N, D) uint32. Blocks are (BLOCK_ROWS, D): for
+BLOCK_ROWS=32 and a pool row D=2048 (8 lanes × 256 words) the working set is
+32×8KB data + codes + status ≈ 0.6MB of VMEM — comfortably double-buffered
+on a v5e core, with 128-multiple minor dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.secded import _COLUMNS, _MASK_HI, _MASK_LO, NUM_CODE_BITS
+from repro.kernels.common import pick_block, use_interpret
+
+DEFAULT_BLOCK_ROWS = 32
+
+# Python-int constants — splatted into VREGs at trace time.
+MASKS = [(int(_MASK_LO[p]), int(_MASK_HI[p])) for p in range(NUM_CODE_BITS)]
+COLUMNS = [int(c) for c in _COLUMNS]
+
+
+def _encode_beats(lo: jax.Array, hi: jax.Array) -> jax.Array:
+    code = jnp.zeros_like(lo)
+    for p, (mlo, mhi) in enumerate(MASKS):
+        ones = jax.lax.population_count(lo & jnp.uint32(mlo)) + \
+            jax.lax.population_count(hi & jnp.uint32(mhi))
+        code = code | ((ones & jnp.uint32(1)) << p)
+    return code
+
+
+def _syndrome_action(syn: jax.Array) -> jax.Array:
+    """Syndrome -> action via select chain: -1 clean, 0..63 data bit,
+    64..71 code bit, -2 detected-uncorrectable."""
+    action = jnp.full(syn.shape, -2, jnp.int32)
+    action = jnp.where(syn == 0, -1, action)
+    for i, col in enumerate(COLUMNS):
+        action = jnp.where(syn == jnp.uint32(col), i, action)
+    for p in range(NUM_CODE_BITS):
+        action = jnp.where(syn == jnp.uint32(1 << p), 64 + p, action)
+    return action
+
+
+def _split(data: jax.Array) -> tuple[jax.Array, jax.Array]:
+    pairs = data.reshape(data.shape[0], data.shape[1] // 2, 2)
+    return pairs[..., 0], pairs[..., 1]
+
+
+def _pack4(codes: jax.Array) -> jax.Array:
+    g = codes.reshape(codes.shape[0], codes.shape[1] // 4, 4)
+    return (g[..., 0] | (g[..., 1] << 8) | (g[..., 2] << 16)
+            | (g[..., 3] << 24)).astype(jnp.uint32)
+
+
+def _unpack4(packed: jax.Array, beats: int) -> jax.Array:
+    parts = [(packed >> (8 * j)) & jnp.uint32(0xFF) for j in range(4)]
+    return jnp.stack(parts, axis=-1).reshape(packed.shape[0], beats)
+
+
+def _encode_kernel(data_ref, codes_ref):
+    lo, hi = _split(data_ref[...])
+    codes_ref[...] = _pack4(_encode_beats(lo, hi))
+
+
+def _decode_kernel(data_ref, codes_ref, out_data_ref, out_codes_ref,
+                   status_ref):
+    lo, hi = _split(data_ref[...])
+    stored = _unpack4(codes_ref[...], lo.shape[1])
+    syndrome = (_encode_beats(lo, hi) ^ stored) & jnp.uint32(0xFF)
+    action = _syndrome_action(syndrome)
+
+    is_data = (action >= 0) & (action < 64)
+    is_code = action >= 64
+    bit = jnp.where(action >= 0, action, 0).astype(jnp.uint32)
+    lo = lo ^ jnp.where(is_data & (bit < 32), jnp.uint32(1) << (bit & 31), 0)
+    hi = hi ^ jnp.where(is_data & (bit >= 32), jnp.uint32(1) << (bit & 31), 0)
+    stored = stored ^ jnp.where(is_code, jnp.uint32(1) << ((bit - 64) & 7), 0)
+
+    out_data_ref[...] = jnp.stack([lo, hi], axis=-1).reshape(data_ref.shape)
+    out_codes_ref[...] = _pack4(stored)
+    status_ref[...] = jnp.where(
+        action == -1, 0,
+        jnp.where(is_data, 1, jnp.where(is_code, 2, 3))).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def encode(data: jax.Array, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """(N, D) uint32 -> (N, D//8) packed SECDED codes."""
+    n, d = data.shape
+    br = pick_block(n, block_rows)
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=(n // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d // 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d // 8), jnp.uint32),
+        interpret=use_interpret(),
+    )(data)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def decode(data: jax.Array, codes: jax.Array,
+           block_rows: int = DEFAULT_BLOCK_ROWS
+           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused check+correct. (N,D),(N,D//8) -> (data', codes', status (N,D//2))."""
+    n, d = data.shape
+    br = pick_block(n, block_rows)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(n // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((br, d // 8), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                   pl.BlockSpec((br, d // 8), lambda i: (i, 0)),
+                   pl.BlockSpec((br, d // 2), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), jnp.uint32),
+                   jax.ShapeDtypeStruct((n, d // 8), jnp.uint32),
+                   jax.ShapeDtypeStruct((n, d // 2), jnp.int32)],
+        interpret=use_interpret(),
+    )(data, codes)

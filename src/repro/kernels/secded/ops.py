@@ -1,0 +1,21 @@
+"""Public jit'd entry points for SECDED encode/decode with kernel/ref dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.secded import kernel, ref
+
+
+def encode(data: jax.Array, use_kernel: bool = True) -> jax.Array:
+    """(N, D) uint32 -> (N, D//8) packed codes."""
+    if use_kernel:
+        return kernel.encode(data)
+    return ref.encode(data)
+
+
+def decode(data: jax.Array, codes: jax.Array, use_kernel: bool = True
+           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(N, D), (N, D//8) -> (corrected data, corrected codes, per-beat status)."""
+    if use_kernel:
+        return kernel.decode(data, codes)
+    return ref.decode(data, codes)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the SECDED kernels — delegates to repro.core.secded."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import secded as _s
+
+
+def encode(data: jax.Array) -> jax.Array:
+    """(N, D) uint32, D % 8 == 0 -> (N, D//8) packed codes."""
+    return _s.encode_block(data)
+
+
+def decode(data: jax.Array, codes: jax.Array
+           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(N, D), (N, D//8) -> (corrected data, corrected codes, status (N, D//2))."""
+    return _s.decode_block(data, codes)

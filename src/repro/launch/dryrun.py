@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede every other import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: the production
+mesh is built from 512 host placeholder devices, inputs are ShapeDtypeStructs
+(no allocation), and success criterion is ``.lower().compile()`` plus the
+memory/cost/collective numbers dumped to JSON for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+      --mesh single --out experiments/dryrun
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (SHAPES, InputShape, ModelConfig, TrainConfig,
+                           get_config, iter_cells, shape_applicable)
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.roofline.hlo_parse import parse_collectives
+
+
+def _step_and_specs(cfg: ModelConfig, shape: InputShape, mesh, *,
+                    remat: str = "block", grad_compression: str = "none",
+                    logits_last: bool = True):
+    """Returns (fn, arg_specs tuple) for the cell's step kind."""
+    if shape.kind == "train":
+        tcfg = TrainConfig(remat=remat, grad_compression=grad_compression,
+                           microbatch=None)
+        from repro.train.train_step import make_train_step
+        fn = make_train_step(cfg, tcfg)
+        p = sh.param_specs(cfg, mesh)
+        o = sh.opt_specs(p, mesh)
+        b = sh.batch_specs(cfg, shape, mesh, with_labels=True)
+        return fn, (p, o, b)
+    if shape.kind == "prefill":
+        def fn(params, tokens):
+            return transformer.forward(
+                params, cfg, tokens, remat=remat,
+                logits_mode="last" if logits_last else "all")
+        p = sh.param_specs(cfg, mesh)
+        b = sh.batch_specs(cfg, shape, mesh, with_labels=False)
+        return fn, (p, b["tokens"])
+    if shape.kind == "decode":
+        def fn(params, state, tokens):
+            return transformer.decode_step(params, cfg, state, tokens)
+        p = sh.param_specs(cfg, mesh)
+        st = sh.decode_state_specs(cfg, shape, mesh)
+        tok = sh.decode_token_spec(shape, mesh)
+        return fn, (p, st, tok)
+    raise ValueError(shape.kind)
+
+
+def _unstack_specs(tree):
+    """Drop the leading (stage-stack) dim from ShapeDtypeStructs + shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def one(sds):
+        sh_ = sds.sharding
+        spec = tuple(sh_.spec) + (None,) * (len(sds.shape) - len(sh_.spec))
+        return jax.ShapeDtypeStruct(
+            sds.shape[1:], sds.dtype,
+            sharding=NamedSharding(sh_.mesh, P(*spec[1:])))
+
+    return jax.tree.map(one, tree)
+
+
+def stage_cost_probe(cfg: ModelConfig, shape: InputShape, mesh, *,
+                     remat: str = "block") -> dict:
+    """Compile one super-block alone to get per-stage HLO cost.
+
+    XLA's cost analysis counts while-loop (scan) bodies ONCE, so the full
+    model's raw numbers undercount by the trip count. The §Roofline analysis
+    scales:  total = raw_full + (num_stages - 1) × stage_cost.
+    For train the probe differentiates through the stage (fwd+bwd+remat);
+    for prefill it's the forward body; for decode the decode stage.
+    """
+    import functools
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models.transformer import _stage_fn, decode_stage
+
+    dp = sh.dp_axes(mesh)
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.activation_dtype
+    p_full = sh.param_specs(cfg, mesh)
+    sp = _unstack_specs(p_full["stages"])
+
+    def xspec(seq):
+        return jax.ShapeDtypeStruct(
+            (b, seq, cfg.d_model), dt,
+            sharding=sh.shard(mesh, P(dp, None, None),
+                              (b, seq, cfg.d_model)))
+
+    if shape.kind == "train":
+        stage = functools.partial(_stage_fn, cfg, "xla")
+        if remat in ("block", "full"):
+            stage = jax.checkpoint(stage)
+
+        def fn(spar, x, cot):
+            def loss(spar, x):
+                (y, aux), _ = stage((x, jnp.zeros((), jnp.float32)), spar)
+                return jnp.sum(y.astype(jnp.float32) * cot) + aux
+            return jax.value_and_grad(loss, argnums=(0, 1))(spar, x)
+
+        cot = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.float32,
+            sharding=sh.shard(mesh, P(dp, None, None), (b, s, cfg.d_model)))
+        args = (sp, xspec(s), cot)
+    elif shape.kind == "prefill":
+        def fn(spar, x):
+            (y, _), _ = _stage_fn(cfg, "xla", (x, jnp.zeros((), jnp.float32)),
+                                  spar)
+            return y
+        args = (sp, xspec(s))
+    else:  # decode
+        st_full = sh.decode_state_specs(cfg, shape, mesh)
+        st = _unstack_specs({k: v for k, v in st_full.items()
+                             if k != "cache_len"})
+        clen = st_full["cache_len"]
+
+        def fn(spar, stg, x, clen_):
+            return decode_stage(cfg, spar, stg, x, clen_)
+        args = (sp, st, xspec(1), clen)
+
+    compiled = jax.jit(fn).lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "collectives": coll.as_dict(),
+            "num_stages": cfg.num_stages}
+
+
+def run_cell(cfg: ModelConfig, shape: InputShape, multi_pod: bool,
+             out_dir: str | None = None, save_hlo: bool = False,
+             **step_kw) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{cfg.name}__{shape.name}__{mesh_name}"
+    rec: dict = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+                 "kind": shape.kind, "ok": False}
+    t0 = time.perf_counter()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        from repro.distributed.sharding import use_mesh
+        with use_mesh(mesh):
+            fn, specs = _step_and_specs(cfg, shape, mesh, **step_kw)
+            lowered = jax.jit(fn).lower(*specs)
+            rec["lower_s"] = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.perf_counter() - t1
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                         "output_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    rec[attr] = int(v)
+        cost = compiled.cost_analysis() or {}
+        rec["hlo_flops"] = float(cost.get("flops", 0.0))
+        rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
+        rec["cost_keys"] = sorted(k for k in cost if "bytes accessed" in k
+                                  or k in ("flops", "transcendentals"))
+
+        hlo = compiled.as_text()
+        rec["collectives"] = parse_collectives(hlo).as_dict()
+        with use_mesh(mesh):
+            rec["stage"] = stage_cost_probe(
+                cfg, shape, mesh, remat=step_kw.get("remat", "block"))
+        ns = rec["stage"]["num_stages"]
+        rec["hlo_flops_scaled"] = rec["hlo_flops"] + \
+            (ns - 1) * rec["stage"]["flops"]
+        rec["hlo_bytes_scaled"] = rec["hlo_bytes"] + \
+            (ns - 1) * rec["stage"]["bytes"]
+        rec["collective_wire_bytes_scaled"] = \
+            rec["collectives"]["wire_bytes"] + \
+            (ns - 1) * rec["stage"]["collectives"]["wire_bytes"]
+        rec["ok"] = True
+        if save_hlo and out_dir:
+            with open(os.path.join(out_dir, cell + ".hlo.txt"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = time.perf_counter() - t0
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, cell + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    status = "OK " if rec["ok"] else "FAIL"
+    print(f"[{status}] {cell}  lower={rec.get('lower_s', 0):.1f}s "
+          f"compile={rec.get('compile_s', 0):.1f}s "
+          f"flops={rec.get('hlo_flops', 0):.3e} "
+          f"coll={rec.get('collectives', {}).get('wire_bytes', 0):.3e}B"
+          + ("" if rec["ok"] else f"  err={rec.get('error')}"), flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every applicable (arch x shape)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--remat", default="block")
+    ap.add_argument("--grad-compression", default="none")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh]
+    cells: list[tuple[ModelConfig, InputShape]] = []
+    if args.all:
+        cells = list(iter_cells())
+    else:
+        cfg = get_config(args.arch)
+        shp = SHAPES[args.shape]
+        if not shape_applicable(cfg, shp):
+            print(f"[SKIP] {cfg.name} x {shp.name}: full-attention arch, "
+                  f"long-context cell skipped per DESIGN.md §4")
+            return
+        cells = [(cfg, shp)]
+
+    failures = 0
+    for cfg, shp in cells:
+        for mp in meshes:
+            rec = run_cell(cfg, shp, mp, out_dir=args.out,
+                           save_hlo=args.save_hlo, remat=args.remat,
+                           grad_compression=args.grad_compression)
+            failures += 0 if rec["ok"] else 1
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+``xla_force_host_platform_device_count`` *before* first jax init.
+
+Mesh axes:
+  * single pod: (data=16, model=16) — 256 chips (one v5e pod slice)
+  * multi-pod:  (pod=2, data=16, model=16) — 512 chips; the 'pod' axis is
+    pure data parallelism across pods (gradient all-reduce crosses DCN).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """A mesh over whatever devices exist (tests / single host)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline denominators; see EXPERIMENTS.md)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW_PER_LINK = 50e9            # bytes/s per link (~ per-axis effective)

@@ -1,0 +1,154 @@
+"""Input / state / parameter shardings for every dry-run cell.
+
+One place that decides, per (arch × shape × mesh), where every tensor lives:
+
+  * tokens/labels: batch over ('pod','data')
+  * params & optimizer moments: FSDP over 'data' × TP over 'model'
+    (repro.distributed.sharding.PARAM_RULES)
+  * decode state: batch over ('pod','data'); the long dimension of each
+    state kind over 'model' (KV sequence, mamba d_inner, xLSTM head dim);
+    for global_batch == 1 (long_500k) the KV sequence takes both axes.
+
+Divisibility is checked and degraded per-tensor (an axis that doesn't divide
+is dropped) so every assigned cell lowers cleanly — including granite's
+kv_heads=1 MQA cache.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import BlockKind, InputShape, ModelConfig
+from repro.distributed.sharding import param_shardings as _param_shardings
+from repro.models import transformer
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fit(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop spec entries that don't divide the dim (graceful degrade)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        out.append(entry if dim % n == 0 else None)
+    return P(*out)
+
+
+def shard(mesh: Mesh, spec: P, shape: tuple) -> NamedSharding:
+    return NamedSharding(mesh, _fit(spec, shape, mesh))
+
+
+# -- inputs -------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                with_labels: bool) -> dict[str, jax.ShapeDtypeStruct]:
+    dp = dp_axes(mesh)
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32,
+                               sharding=shard(mesh, P(dp), (b, s)))
+    out = {"tokens": tok}
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct(
+            (b, s), jnp.int32, sharding=shard(mesh, P(dp), (b, s)))
+    return out
+
+
+def decode_token_spec(shape: InputShape, mesh: Mesh) -> jax.ShapeDtypeStruct:
+    b = shape.global_batch
+    return jax.ShapeDtypeStruct((b,), jnp.int32,
+                                sharding=shard(mesh, P(dp_axes(mesh)), (b,)))
+
+
+# -- parameters / optimizer ----------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> Any:
+    """ShapeDtypeStructs with NamedShardings for the full parameter tree."""
+    shapes = jax.eval_shape(
+        lambda key: transformer.init_params(cfg, key),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    shardings = _param_shardings(shapes, mesh)
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=NamedSharding(mesh, _fit(sh.spec, sds.shape, mesh))),
+        shapes, shardings)
+
+
+def opt_specs(param_sds: Any, mesh: Mesh) -> Any:
+    """AdamW moments mirror parameter shardings, in f32 (ZeRO-3)."""
+    from repro.optim.adamw import AdamWState
+    moments = jax.tree.map(
+        lambda sds: jax.ShapeDtypeStruct(sds.shape, jnp.float32,
+                                         sharding=sds.sharding), param_sds)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return AdamWState(step=step, m=moments,
+                      v=jax.tree.map(lambda x: x, moments))
+
+
+# -- decode state ---------------------------------------------------------------
+
+
+def decode_state_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> Any:
+    """ShapeDtypeStructs + shardings for init_decode_state's pytree."""
+    b, smax = shape.global_batch, shape.seq_len
+    dp = dp_axes(mesh)
+    seq_ax = ("data", "model") if b == 1 else "model"
+    state_shapes = jax.eval_shape(
+        lambda: transformer.init_decode_state(cfg, b, smax))
+
+    def spec_for(pos_kind: BlockKind | None, key: str, ndim: int) -> P:
+        if key == "cache_len":
+            return P()
+        if pos_kind == BlockKind.ATTN:            # k/v (ns,B,S,hkv,dh)
+            return P(None, dp, seq_ax, None, None)
+        if pos_kind == BlockKind.MAMBA:
+            if key == "h":                        # (ns,B,di,n)
+                return P(None, dp, "model", None)
+            return P(None, dp, None, "model")     # conv (ns,B,K-1,di)
+        if pos_kind == BlockKind.MLSTM:
+            if key == "c":                        # (ns,B,H,dh,dh)
+                return P(None, dp, None, "model", None)
+            if key in ("n",):                     # (ns,B,H,dh)
+                return P(None, dp, None, "model")
+            if key == "conv":                     # (ns,B,3,dc)
+                return P(None, dp, None, "model")
+            return P(None, dp, None)              # m (ns,B,H)
+        if pos_kind == BlockKind.SLSTM:           # c/n/h/m (ns,B,H,dh)
+            return P(None, dp, None, "model")
+        return P()
+
+    out: dict[str, Any] = {}
+    for key, sub in state_shapes.items():
+        if key == "cache_len":
+            out[key] = jax.ShapeDtypeStruct(
+                sub.shape, sub.dtype, sharding=shard(mesh, P(dp), sub.shape))
+            continue
+        pos = int(key[3:])
+        kind = cfg.pattern[pos][0]
+        out[key] = {
+            k: jax.ShapeDtypeStruct(
+                sds.shape, sds.dtype,
+                sharding=shard(mesh, spec_for(kind, k, sds.ndim), sds.shape))
+            for k, sds in sub.items()
+        }
+    return out
+
+
+def sds_shardings(tree: Any) -> Any:
+    """Extract the shardings pytree from ShapeDtypeStructs."""
+    return jax.tree.map(lambda sds: sds.sharding, tree)

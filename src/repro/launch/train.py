@@ -1,0 +1,70 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On TPU pods this drives the full config over the production mesh; on CPU
+(this container) ``--smoke`` selects the reduced same-family config so every
+architecture's training loop is runnable anywhere. Mesh axes come from
+``--mesh-data/--mesh-model`` (defaults: whatever the host offers).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import TrainConfig, get_config
+from repro.distributed.sharding import use_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train.trainer import make_trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the (data=16, model=16) pod mesh (TPU)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    tcfg = TrainConfig(total_steps=max(args.steps, 100),
+                       microbatch=args.microbatch,
+                       grad_compression=args.grad_compression,
+                       scrub_every=10, checkpoint_every=max(args.steps // 2, 1))
+
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    elif len(jax.devices()) > 1:
+        mesh = make_host_mesh()
+    else:
+        mesh = None
+
+    def run():
+        tr = make_trainer(cfg, tcfg, ckpt_dir=args.ckpt_dir,
+                          seq_len=args.seq_len,
+                          global_batch=args.global_batch)
+        if args.ckpt_dir and tr.restore():
+            print(f"resumed at step {tr.step}")
+        log = tr.run(args.steps)
+        print(f"{cfg.name}: loss {log[0]['loss']:.4f} -> "
+              f"{log[-1]['loss']:.4f} over {args.steps} steps")
+
+    if mesh is not None:
+        with use_mesh(mesh):
+            run()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model substrate: attention, MoE, Mamba, xLSTM, and the LM assembly."""
+from repro.models.model import Model, build_model, count_params
+
+__all__ = ["Model", "build_model", "count_params"]

@@ -1,0 +1,162 @@
+"""GQA attention (RoPE, optional qk-norm) with full-seq and decode paths.
+
+The full-sequence path is XLA-native einsum attention by default — the dry
+run derives its roofline from the compiled HLO, which custom calls would
+hide — with the Pallas flash kernel selectable for TPU execution
+(``impl='flash'``). The decode path works against a (externally managed)
+KV cache so the serving layer can place it in a CREAM pool.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constraint
+from repro.models.common import apply_rope, dense_init, init_rms, rms_norm
+
+
+def init_attn(key, cfg: ModelConfig, dtype) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (hq * hd, d), fan_in=hq * hd, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms(hd)
+        p["k_norm"] = init_rms(hd)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constraint(q, "data", None, "model", None)
+    k = constraint(k, "data", None, "model", None)
+    v = constraint(v, "data", None, "model", None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, causal: bool) -> jax.Array:
+    """einsum attention; q (B,S,Hq,D), k/v (B,S,Hkv,D) -> (B,S,Hq,D).
+
+    Megatron-style GQA under TP: when Hkv doesn't divide the model axis but
+    Hq does (e.g. chameleon 64q/8kv on model=16), K/V are repeated to Hq
+    heads *first* so every attention tensor shards cleanly over 'model' —
+    otherwise GSPMD keeps K/V (and the (B,Hkv,g,S,S) logits) partially
+    replicated (§Perf iteration 9).
+    """
+    from repro.distributed.sharding import axis_size
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    tp = axis_size("model")
+    if g > 1 and hkv % tp and hq % tp == 0:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = constraint(k, "data", None, "model", None)
+        v = constraint(v, "data", None, "model", None)
+        hkv, g = hq, 1
+    qg = q.reshape(b, s, hkv, g, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    if causal:
+        ii = jnp.arange(s)
+        mask = ii[:, None] >= ii[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def apply_attn(p: dict, cfg: ModelConfig, x: jax.Array,
+               positions: jax.Array | None = None, causal: bool = True,
+               impl: str = "xla", return_kv: bool = False):
+    """Full-sequence attention (train / prefill). x: (B, S, d_model)."""
+    b, s, _ = x.shape
+    positions = positions if positions is not None else jnp.arange(s)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if impl == "flash":
+        from repro.kernels.flash_attention import ops as fa
+        out = fa.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3), causal=causal)
+        out = out.transpose(0, 2, 1, 3)
+    else:
+        out = _sdpa(q, k, v, causal)
+    out = constraint(out, "data", None, "model", None)
+    y = out.reshape(b, s, -1) @ p["wo"]
+    y = constraint(y, "data", None, None)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def apply_attn_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                      kv_cache: tuple[jax.Array, jax.Array],
+                      cache_len: jax.Array
+                      ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """One-token decode. x: (B, 1, d_model); cache k/v: (B, S_max, Hkv, D).
+
+    The KV cache is sharded over 'data' on S_max for long-context decode
+    (sequence parallelism): each shard computes partial attention and the
+    softmax combines via the standard max/denominator trick — here expressed
+    as a single masked full-length attention which GSPMD partitions along k.
+    """
+    b = x.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    pos = cache_len  # (B,) current lengths
+    q = (x @ p["wq"]).reshape(b, 1, hq, hd)
+    k_new = (x @ p["wk"]).reshape(b, 1, hkv, hd)
+    v_new = (x @ p["wv"]).reshape(b, 1, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k_new = rms_norm(k_new, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    ck, cv = kv_cache
+    smax = ck.shape[1]
+    # Sequence-parallel KV: the cache shards S_max over 'model' (both axes
+    # when B == 1 — the long_500k cell). The update mask must carry the SAME
+    # sharding, else SPMD "involuntarily rematerialises" (replicates!) the
+    # whole cache per step — a ~400x HBM-traffic blowup measured in §Perf
+    # iteration 4.
+    seq_ax = ("data", "model") if b == 1 else "model"
+    at_pos = (jnp.arange(smax)[None, :] == pos[:, None])  # (B, S_max)
+    at_pos = constraint(at_pos, None if b == 1 else "data", seq_ax)
+    ck = jnp.where(at_pos[:, :, None, None], k_new.astype(ck.dtype), ck)
+    cv = jnp.where(at_pos[:, :, None, None], v_new.astype(cv.dtype), cv)
+    ck = constraint(ck, None if b == 1 else "data", seq_ax, None, None)
+    cv = constraint(cv, None if b == 1 else "data", seq_ax, None, None)
+
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) / (hd ** 0.5)
+    valid = jnp.arange(smax)[None, :] <= pos[:, None]    # (B, S_max)
+    valid = constraint(valid, None if b == 1 else "data", seq_ax)
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, cv.astype(jnp.float32))
+    out = out.reshape(b, 1, hq * hd).astype(x.dtype)
+    y = out @ p["wo"]
+    return y, (ck, cv)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_attn: int,
+                  dtype) -> tuple[jax.Array, jax.Array]:
+    """Stacked (n_attn_layers, B, S_max, Hkv, D) cache pair."""
+    shape = (n_attn, batch, max_len, cfg.num_kv_heads, cfg.head_dim_)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)

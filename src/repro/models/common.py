@@ -1,0 +1,115 @@
+"""Shared model components: norms, RoPE, SwiGLU MLP, initialisation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constraint
+
+
+def dense_init(key, shape, fan_in: int | None = None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = (1.0 / fan_in) ** 0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * scale * gamma.astype(jnp.float32)).astype(dt)
+
+
+def init_rms(d: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype,
+             variant: str = "swiglu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), fan_in=d_ff, dtype=dtype),
+    }
+    if variant == "swiglu":
+        p["w_gate"] = dense_init(k1, (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array) -> jax.Array:
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    h = constraint(h, "data", None, "model")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"table": dense_init(key, (vocab, d_model), fan_in=d_model,
+                                dtype=dtype)}
+
+
+def apply_embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def init_lm_head(key, d_model: int, vocab: int, dtype) -> dict:
+    return {"w": dense_init(key, (d_model, vocab), dtype=dtype)}
+
+
+def apply_lm_head(p: dict, x: jax.Array) -> jax.Array:
+    logits = x @ p["w"]
+    spec = ("data",) + (None,) * (logits.ndim - 2) + ("model",)
+    return constraint(logits, *spec)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL in f32. logits (B,S,V); labels (B,S) int32.
+
+    The gold-logit pick is a masked reduce (iota==label -> select -> sum),
+    not take_along_axis: a gather over the vocab axis forces GSPMD to
+    all-gather the TP-sharded logits (§Perf iteration 6), while the masked
+    reduce partitions cleanly (per-shard partial + psum) and fuses.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    return jnp.mean(logz - gold)

@@ -1,0 +1,63 @@
+"""Model facade: build/init/apply for any assigned architecture config."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockKind, MixerKind, ModelConfig
+from repro.models import transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    forward: Callable[..., tuple[jax.Array, jax.Array]]
+    loss: Callable[..., jax.Array]
+    prefill: Callable[..., tuple[jax.Array, Any]]
+    decode_step: Callable[..., tuple[jax.Array, Any]]
+    init_decode_state: Callable[[int, int], Any]
+
+
+def build_model(cfg: ModelConfig, attn_impl: str = "xla",
+                remat: str = "none") -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        forward=lambda p, tokens: transformer.forward(
+            p, cfg, tokens, attn_impl=attn_impl, remat=remat),
+        loss=lambda p, tokens, labels: transformer.loss_fn(
+            p, cfg, tokens, labels, attn_impl=attn_impl, remat=remat),
+        prefill=lambda p, tokens, max_len: transformer.prefill(
+            p, cfg, tokens, max_len, attn_impl=attn_impl),
+        decode_step=lambda p, state, tokens: transformer.decode_step(
+            p, cfg, state, tokens),
+        init_decode_state=lambda batch, max_len: transformer.init_decode_state(
+            cfg, batch, max_len),
+    )
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(
+        lambda key: transformer.init_params(cfg, key),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+    if not active_only or not cfg.num_experts:
+        return total
+    # MoE: only top-k of E experts fire per token.
+    moe_layers = sum(1 for _, mk in cfg.pattern if mk == MixerKind.MOE)
+    moe_layers *= cfg.num_stages
+    expert_params = 3 * cfg.d_model * cfg.moe_d_ff * cfg.num_experts
+    active_expert = 3 * cfg.d_model * cfg.moe_d_ff * cfg.experts_per_token
+    return total - moe_layers * (expert_params - active_expert)
+
+
+def model_flops_per_token(cfg: ModelConfig, active_only: bool = True) -> float:
+    """The roofline's MODEL_FLOPS: 6·N per token (N = active params)."""
+    n = count_params(cfg, active_only=active_only)
+    return 6.0 * n

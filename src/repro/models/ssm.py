@@ -1,0 +1,153 @@
+"""Mamba (selective SSM) block — chunked parallel scan + O(1) decode.
+
+Training/prefill uses an associative scan over time *within chunks* and a
+sequential lax.scan across chunks: the (B, L, d_inner, d_state) discretised
+tensors only ever materialise one chunk at a time (with remat around the
+chunk body), bounding activation memory at B·CHUNK·d_inner·d_state while
+keeping the cross-chunk dependency exact. Decode is the standard O(1)
+recurrent update carrying (conv window, ssm state).
+
+This is the hardware adaptation of Mamba's fused CUDA scan to TPU/XLA:
+the chunk body is a pure associative_scan (lowers to log-depth compute),
+and chunk boundaries are where XLA pipelines HBM traffic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constraint
+from repro.models.common import dense_init
+
+CHUNK = 256
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim, cfg.dt_rank_
+    ks = jax.random.split(key, 7)
+    # S4D-real initialisation for A; dt bias for softplus ~ [1e-3, 1e-1]
+    a_init = jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                      (di, n)))
+    dt = jnp.exp(jax.random.uniform(ks[0], (di,), jnp.float32) *
+                 (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[1], (d, 2 * di), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv_dim, di),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "x_bc": dense_init(ks[3], (di, 2 * n), dtype=dtype),
+        "x_dt": dense_init(ks[4], (di, r), dtype=dtype),
+        "dt_proj": dense_init(ks[5], (r, di), fan_in=r, dtype=dtype),
+        "dt_bias": dt_bias,
+        "a_log": a_init,
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[6], (di, d), fan_in=di, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, carry: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time. x (B,L,di); w (K,di).
+
+    Returns (y, new_carry) where carry is the trailing K-1 inputs.
+    """
+    k = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)            # (B, L+K-1, di)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return y, xp[:, -(k - 1):, :]
+
+
+def _ssm_params(p: dict, cfg: ModelConfig, xc: jax.Array):
+    """Input-dependent (dt, B, C) for a chunk xc (B, L, di)."""
+    n = cfg.ssm_state_dim
+    bc = xc @ p["x_bc"]                                  # (B, L, 2n)
+    b_in, c_out = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+    dt = (xc @ p["x_dt"]) @ p["dt_proj"]                 # (B, L, di)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return dt, b_in, c_out
+
+
+def _scan_chunk(p: dict, cfg: ModelConfig, xc: jax.Array, h0: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """Exact selective scan over one chunk. xc (B,L,di); h0 (B,di,n)."""
+    a = -jnp.exp(p["a_log"])                             # (di, n)
+    dt, b_in, c_out = _ssm_params(p, cfg, xc)
+    xf = xc.astype(jnp.float32)
+    abar = jnp.exp(dt[..., None] * a)                    # (B,L,di,n)
+    bx = (dt * xf)[..., None] * b_in[:, :, None, :]      # (B,L,di,n)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    # Fold the incoming state into the first element.
+    bx = bx.at[:, 0].add(abar[:, 0] * h0)
+    acc_a, acc_b = jax.lax.associative_scan(combine, (abar, bx), axis=1)
+    y = jnp.einsum("bldn,bln->bld", acc_b, c_out)        # (B,L,di)
+    y = y + xf * p["d_skip"]
+    return y.astype(xc.dtype), acc_b[:, -1]
+
+
+def apply_ssm(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence Mamba block. x: (B, S, d_model)."""
+    y, _ = apply_ssm_prefill(p, cfg, x)
+    return y
+
+
+def apply_ssm_prefill(p: dict, cfg: ModelConfig, x: jax.Array
+                      ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Full-sequence forward that also returns the decode state at S."""
+    b, s, _ = x.shape
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xs_raw, z = jnp.split(xz, 2, axis=-1)
+    xs_raw = constraint(xs_raw, "data", None, "model")
+    xs, conv_carry = _causal_conv(xs_raw, p["conv_w"])
+    xs = jax.nn.silu(xs)
+
+    chunk = min(CHUNK, s)
+    assert s % chunk == 0
+    h0 = jnp.zeros((b, di, cfg.ssm_state_dim), jnp.float32)
+
+    def body(h, xc):
+        xc = jnp.moveaxis(xc, 0, 1)
+        y, h1 = _scan_chunk(p, cfg, xc, h)
+        return h1, jnp.moveaxis(y, 0, 1)
+
+    xcs = xs.reshape(b, s // chunk, chunk, di).transpose(1, 2, 0, 3)
+    h_final, ys = jax.lax.scan(jax.checkpoint(body), h0, xcs)
+    y = ys.transpose(2, 0, 1, 3).reshape(b, s, di)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], {"conv": conv_carry, "h": h_final}
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype
+                   ) -> dict[str, jax.Array]:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state_dim), jnp.float32),
+    }
+
+
+def apply_ssm_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                     state: dict[str, jax.Array]
+                     ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """One-token decode. x: (B, 1, d_model)."""
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_carry = _causal_conv(xs, p["conv_w"], state["conv"])
+    xs = jax.nn.silu(xs)
+
+    a = -jnp.exp(p["a_log"])
+    dt, b_in, c_out = _ssm_params(p, cfg, xs)
+    xf = xs.astype(jnp.float32)[:, 0]                    # (B, di)
+    dt0, b0, c0 = dt[:, 0], b_in[:, 0], c_out[:, 0]
+    abar = jnp.exp(dt0[..., None] * a)                   # (B, di, n)
+    h = abar * state["h"] + (dt0 * xf)[..., None] * b0[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c0) + xf * p["d_skip"]
+    y = (y[:, None, :].astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"], {"conv": conv_carry, "h": h}

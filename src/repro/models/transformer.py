@@ -1,0 +1,301 @@
+"""Decoder-LM assembly: scan-over-stages with heterogeneous block patterns.
+
+A config's ``pattern`` is one *period* of (block, mixer) pairs — e.g. jamba's
+(attn, mamba×7) with interleaved MoE — and the model is ``num_layers/period``
+repetitions. Parameters for each pattern position are stacked across
+repetitions on a leading axis and the depth loop is a single ``lax.scan``
+(compile time stays flat in depth — essential at 512 devices), with the
+period unrolled inside the scan body.
+
+Three entry points:
+  * :func:`forward`       — full-sequence activations (train / prefill)
+  * :func:`prefill`       — forward + extraction of every block's decode state
+  * :func:`decode_step`   — one token against stacked decode states
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockKind, MixerKind, ModelConfig
+from repro.distributed.sharding import constraint
+from repro.models import attention, moe, ssm, xlstm
+from repro.models.common import (apply_embed, apply_lm_head, apply_mlp,
+                                 cross_entropy, init_embed, init_lm_head,
+                                 init_mlp, init_rms, rms_norm)
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, kind: BlockKind, cfg: ModelConfig, dtype) -> Params:
+    if kind == BlockKind.ATTN:
+        return attention.init_attn(key, cfg, dtype)
+    if kind == BlockKind.MAMBA:
+        return ssm.init_ssm(key, cfg, dtype)
+    if kind == BlockKind.MLSTM:
+        return xlstm.init_mlstm(key, cfg, dtype)
+    if kind == BlockKind.SLSTM:
+        return xlstm.init_slstm(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def _init_mixer(key, kind: MixerKind, cfg: ModelConfig, dtype) -> Params | None:
+    if kind == MixerKind.MLP:
+        return init_mlp(key, cfg.d_model, cfg.d_ff, dtype,
+                        variant=cfg.mlp_variant)
+    if kind == MixerKind.MOE:
+        return moe.init_moe(key, cfg, dtype)
+    return None
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = cfg.activation_dtype
+    k_embed, k_head, k_stages = jax.random.split(key, 3)
+    params: Params = {
+        "embed": init_embed(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_rms(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_lm_head(k_head, cfg.d_model, cfg.vocab_size,
+                                         dtype)
+
+    def init_stage(key):
+        stage: Params = {}
+        pos_keys = jax.random.split(key, cfg.period)
+        for i, (bk, mk) in enumerate(cfg.pattern):
+            kb, km = jax.random.split(pos_keys[i])
+            entry: Params = {
+                "norm1": init_rms(cfg.d_model),
+                "block": _init_block(kb, bk, cfg, dtype),
+            }
+            mixer = _init_mixer(km, mk, cfg, dtype)
+            if mixer is not None:
+                entry["norm2"] = init_rms(cfg.d_model)
+                entry["mixer"] = mixer
+            stage[f"pos{i}"] = entry
+        return stage
+
+    stage_keys = jax.random.split(k_stages, cfg.num_stages)
+    params["stages"] = jax.vmap(init_stage)(stage_keys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(bp: Params, kind: BlockKind, cfg: ModelConfig, x: jax.Array,
+                 attn_impl: str) -> jax.Array:
+    if kind == BlockKind.ATTN:
+        return attention.apply_attn(bp, cfg, x, impl=attn_impl)
+    if kind == BlockKind.MAMBA:
+        return ssm.apply_ssm(bp, cfg, x)
+    if kind == BlockKind.MLSTM:
+        return xlstm.apply_mlstm(bp, cfg, x)
+    if kind == BlockKind.SLSTM:
+        return xlstm.apply_slstm(bp, cfg, x)[0]
+    raise ValueError(kind)
+
+
+def _stage_fn(cfg: ModelConfig, attn_impl: str, carry, stage_params):
+    x, aux = carry
+    for i, (bk, mk) in enumerate(cfg.pattern):
+        entry = stage_params[f"pos{i}"]
+        h = rms_norm(x, entry["norm1"], cfg.norm_eps)
+        x = x + _apply_block(entry["block"], bk, cfg, h, attn_impl)
+        if mk != MixerKind.NONE:
+            h2 = rms_norm(x, entry["norm2"], cfg.norm_eps)
+            if mk == MixerKind.MLP:
+                x = x + apply_mlp(entry["mixer"], h2)
+            else:
+                y, a = moe.apply_moe(entry["mixer"], cfg, h2)
+                x = x + y
+                aux = aux + a
+        x = constraint(x, "data", None, None)
+    return (x, aux), None
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            attn_impl: str = "xla", remat: str = "none",
+            logits_mode: str = "all") -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) int32 -> (logits, moe aux loss).
+
+    ``logits_mode='all'`` gives (B, S, V) (training); ``'last'`` gives (B, V)
+    for the final position only (inference prefill — avoids materialising a
+    seq-length vocab tensor).
+    """
+    x = apply_embed(params["embed"], tokens)
+    x = constraint(x, "data", None, None)
+    aux = jnp.zeros((), jnp.float32)
+
+    stage = functools.partial(_stage_fn, cfg, attn_impl)
+    if remat in ("block", "full"):
+        stage = jax.checkpoint(stage)
+    (x, aux), _ = jax.lax.scan(stage, (x, aux), params["stages"])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if logits_mode == "last":
+        x = x[:, -1, :]
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+        logits = constraint(logits, "data", *(((None,) if logits_mode == "all"
+                                               else ()) + ("model",)))
+    else:
+        logits = apply_lm_head(params["lm_head"], x)
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            labels: jax.Array, aux_weight: float = 0.01,
+            attn_impl: str = "xla", remat: str = "none") -> jax.Array:
+    logits, aux = forward(params, cfg, tokens, attn_impl, remat)
+    return cross_entropy(logits, labels) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode state
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Stacked per-stage decode states, keyed like the stage params."""
+    dtype = cfg.activation_dtype
+    ns = cfg.num_stages
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (ns,) + a.shape).copy(), tree)
+
+    state: Params = {"cache_len": jnp.zeros((batch,), jnp.int32)}
+    for i, (bk, _) in enumerate(cfg.pattern):
+        if bk == BlockKind.ATTN:
+            shape = (ns, batch, max_len, cfg.num_kv_heads, cfg.head_dim_)
+            state[f"pos{i}"] = {"k": jnp.zeros(shape, dtype),
+                                "v": jnp.zeros(shape, dtype)}
+        elif bk == BlockKind.MAMBA:
+            state[f"pos{i}"] = stack(ssm.init_ssm_state(cfg, batch, dtype))
+        elif bk == BlockKind.MLSTM:
+            state[f"pos{i}"] = stack(xlstm.init_mlstm_state(cfg, batch))
+        elif bk == BlockKind.SLSTM:
+            state[f"pos{i}"] = stack(xlstm.init_slstm_state(cfg, batch))
+    return state
+
+
+def decode_stage(cfg: ModelConfig, sp: Params, st: Params, x: jax.Array,
+                 cache_len: jax.Array) -> tuple[jax.Array, Params]:
+    """One super-block of decode: (stage params, stage state, x) -> (x, st')."""
+    new_st = {}
+    for i, (bk, mk) in enumerate(cfg.pattern):
+        entry = sp[f"pos{i}"]
+        h = rms_norm(x, entry["norm1"], cfg.norm_eps)
+        if bk == BlockKind.ATTN:
+            kv = (st[f"pos{i}"]["k"], st[f"pos{i}"]["v"])
+            y, (ck, cv) = attention.apply_attn_decode(
+                entry["block"], cfg, h, kv, cache_len)
+            new_st[f"pos{i}"] = {"k": ck, "v": cv}
+        elif bk == BlockKind.MAMBA:
+            y, s2 = ssm.apply_ssm_decode(entry["block"], cfg, h,
+                                         st[f"pos{i}"])
+            new_st[f"pos{i}"] = s2
+        elif bk == BlockKind.MLSTM:
+            y, s2 = xlstm.apply_mlstm_decode(entry["block"], cfg, h,
+                                             st[f"pos{i}"])
+            new_st[f"pos{i}"] = s2
+        else:
+            y, s2 = xlstm.apply_slstm_decode(entry["block"], cfg, h,
+                                             st[f"pos{i}"])
+            new_st[f"pos{i}"] = s2
+        x = x + y
+        if mk != MixerKind.NONE:
+            h2 = rms_norm(x, entry["norm2"], cfg.norm_eps)
+            if mk == MixerKind.MLP:
+                x = x + apply_mlp(entry["mixer"], h2)
+            else:
+                y2, _ = moe.apply_moe(entry["mixer"], cfg, h2)
+                x = x + y2
+    return x, new_st
+
+
+def decode_step(params: Params, cfg: ModelConfig, state: Params,
+                tokens: jax.Array) -> tuple[jax.Array, Params]:
+    """One decode step. tokens (B,) int32 -> (logits (B, V), new state)."""
+    x = apply_embed(params["embed"], tokens[:, None])
+    cache_len = state["cache_len"]
+
+    def stage(carry, scanned):
+        sp, st = scanned
+        return decode_stage(cfg, sp, st, carry, cache_len)
+
+    per_stage_state = {k: v for k, v in state.items() if k != "cache_len"}
+    x, new_state = jax.lax.scan(stage, x, (params["stages"], per_stage_state))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = apply_lm_head(params["lm_head"], x)
+    new_state["cache_len"] = cache_len + 1
+    return logits[:, 0], new_state
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + decode-state extraction
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            max_len: int, attn_impl: str = "xla"
+            ) -> tuple[jax.Array, Params]:
+    """tokens (B, S) -> (logits (B, S, V), decode state at position S)."""
+    b, s = tokens.shape
+    x = apply_embed(params["embed"], tokens)
+    dtype = cfg.activation_dtype
+
+    def stage(carry, sp):
+        x = carry
+        st = {}
+        for i, (bk, mk) in enumerate(cfg.pattern):
+            entry = sp[f"pos{i}"]
+            h = rms_norm(x, entry["norm1"], cfg.norm_eps)
+            if bk == BlockKind.ATTN:
+                y, (k, v) = attention.apply_attn(entry["block"], cfg, h,
+                                                 impl=attn_impl,
+                                                 return_kv=True)
+                pad = [(0, 0), (0, max_len - s), (0, 0), (0, 0)]
+                st[f"pos{i}"] = {"k": jnp.pad(k.astype(dtype), pad),
+                                 "v": jnp.pad(v.astype(dtype), pad)}
+            elif bk == BlockKind.MAMBA:
+                y, s2 = ssm.apply_ssm_prefill(entry["block"], cfg, h)
+                st[f"pos{i}"] = s2
+            elif bk == BlockKind.MLSTM:
+                y, s2 = xlstm.apply_mlstm_prefill(entry["block"], cfg, h)
+                st[f"pos{i}"] = s2
+            else:
+                y, s2 = xlstm.apply_slstm(entry["block"], cfg, h)
+                st[f"pos{i}"] = s2
+            x = x + y
+            if mk != MixerKind.NONE:
+                h2 = rms_norm(x, entry["norm2"], cfg.norm_eps)
+                if mk == MixerKind.MLP:
+                    x = x + apply_mlp(entry["mixer"], h2)
+                else:
+                    y2, _ = moe.apply_moe(entry["mixer"], cfg, h2)
+                    x = x + y2
+        return x, st
+
+    x, states = jax.lax.scan(stage, x, params["stages"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = apply_lm_head(params["lm_head"], x)
+    states["cache_len"] = jnp.full((b,), s, jnp.int32)
+    return logits, states

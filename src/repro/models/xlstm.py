@@ -1,0 +1,298 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory w/ mixing).
+
+Follows the xLSTM paper's formulations:
+
+  * mLSTM — exponential input gate + sigmoid forget gate over a matrix
+    memory C_t = f_t C_{t-1} + i_t v_t k_tᵀ. Training/prefill uses the
+    *parallel* form (attention-like, with the stabilised log-gate matrix
+    D_ij = exp(F_i − F_j + ĩ_j − m_i)); decode uses the O(1) recurrent form
+    carrying (C, n, m). The two are verified equivalent in tests — a strong
+    property check on the gating algebra.
+  * sLSTM — scalar memory with per-head recurrent mixing R·h_{t-1}; inherently
+    sequential, implemented as lax.scan over time (1 of every 8 layers).
+
+Projections q/k/v are block-diagonal per head (H · dh² params), matching the
+published 1.3B configuration; the cell runs at 2× up-projected width
+(pf = 2) since the assigned config has d_ff = 0 (no separate FFN).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constraint
+from repro.models.common import dense_init, init_rms, rms_norm
+
+PF = 2  # mLSTM up-projection factor
+
+
+def _cell_dims(cfg: ModelConfig) -> tuple[int, int]:
+    dc = PF * cfg.d_model
+    return dc, dc // cfg.num_heads
+
+
+def _headwise(key, h: int, dh: int, dtype) -> jax.Array:
+    return dense_init(key, (h, dh, dh), fan_in=dh, dtype=dtype)
+
+
+def _apply_headwise(w: jax.Array, x: jax.Array) -> jax.Array:
+    """x (B, S, H, dh) @ w (H, dh, dh) -> (B, S, H, dh)."""
+    return jnp.einsum("bshd,hde->bshe", x, w)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dc, dh = _cell_dims(cfg)
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * dc), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, dc), jnp.float32) * 0.1
+                   ).astype(dtype),
+        "wq": _headwise(ks[2], h, dh, dtype),
+        "wk": _headwise(ks[3], h, dh, dtype),
+        "wv": _headwise(ks[4], h, dh, dtype),
+        "wi": dense_init(ks[5], (dc, h), dtype=jnp.float32),
+        "wf": dense_init(ks[6], (dc, h), dtype=jnp.float32),
+        "gn": init_rms(dh),
+        "w_down": dense_init(ks[7], (dc, d), fan_in=dc, dtype=dtype),
+    }
+
+
+def _mlstm_qkv(p: dict, cfg: ModelConfig, u: jax.Array):
+    """u (B, S, dc) -> q, k, v (B, S, H, dh) + gate preacts (B, S, H)."""
+    from repro.models.ssm import _causal_conv
+    b, s, dc = u.shape
+    h = cfg.num_heads
+    dh = dc // h
+    conv_u, _ = _causal_conv(u, p["conv_w"])
+    conv_u = jax.nn.silu(conv_u)
+    heads = conv_u.reshape(b, s, h, dh)
+    q = _apply_headwise(p["wq"], heads)
+    k = _apply_headwise(p["wk"], heads) / (dh ** 0.5)
+    v = _apply_headwise(p["wv"], u.reshape(b, s, h, dh))
+    i_pre = (u @ p["wi"]).astype(jnp.float32)            # (B, S, H)
+    f_pre = (u @ p["wf"]).astype(jnp.float32)
+    return q, k, v, i_pre, f_pre
+
+
+def apply_mlstm(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Parallel-form mLSTM block. x: (B, S, d_model)."""
+    b, s, d = x.shape
+    u2 = x @ p["w_up"]
+    u, z = jnp.split(u2, 2, axis=-1)                     # (B, S, dc) each
+    u = constraint(u, "data", None, "model")
+    q, k, v, i_pre, f_pre = _mlstm_qkv(p, cfg, u)
+
+    log_f = jax.nn.log_sigmoid(f_pre)                    # (B, S, H)
+    cum_f = jnp.cumsum(log_f, axis=1)
+    # D̃_ij = F_i − F_j + ĩ_j  (j ≤ i)
+    dmat = (cum_f[:, :, None, :] - cum_f[:, None, :, :]
+            + i_pre[:, None, :, :])                      # (B, Si, Sj, H)
+    ii = jnp.arange(s)
+    causal = ii[:, None] >= ii[None, :]
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)             # (B, S, 1, H)
+    dexp = jnp.exp(dmat - m)
+
+    qk = jnp.einsum("bihd,bjhd->bijh", q.astype(jnp.float32),
+                    k.astype(jnp.float32))
+    smat = qk * dexp                                     # (B, Si, Sj, H)
+    norm = jnp.sum(smat, axis=2)                         # (B, S, H)
+    denom = jnp.maximum(jnp.abs(norm), jnp.exp(-m[:, :, 0, :]))
+    hout = jnp.einsum("bijh,bjhd->bihd", smat, v.astype(jnp.float32))
+    hout = hout / denom[..., None]
+
+    hout = rms_norm(hout, p["gn"], cfg.norm_eps).astype(x.dtype)
+    dc = u.shape[-1]
+    out = hout.reshape(b, s, dc) * jax.nn.silu(z)
+    out = constraint(out, "data", None, "model")
+    return out @ p["w_down"]
+
+
+def apply_mlstm_prefill(p: dict, cfg: ModelConfig, x: jax.Array
+                        ) -> tuple[jax.Array, dict]:
+    """Parallel forward + recurrent-equivalent state at position S.
+
+    The recurrent state after S tokens unrolls to
+      m_S = max_j (F_S − F_j + ĩ_j),
+      C̃_S = Σ_j exp(F_S − F_j + ĩ_j − m_S) v_j k_jᵀ,   ñ_S likewise,
+    which we evaluate directly from the parallel cumulative gates.
+    """
+    b, s, d = x.shape
+    u2 = x @ p["w_up"]
+    u, z = jnp.split(u2, 2, axis=-1)
+    dc = u.shape[-1]
+    q, k, v, i_pre, f_pre = _mlstm_qkv(p, cfg, u)
+
+    log_f = jax.nn.log_sigmoid(f_pre)
+    cum_f = jnp.cumsum(log_f, axis=1)
+    # --- forward output (same math as apply_mlstm) ---
+    dmat = (cum_f[:, :, None, :] - cum_f[:, None, :, :]
+            + i_pre[:, None, :, :])
+    ii = jnp.arange(s)
+    causal = ii[:, None] >= ii[None, :]
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)
+    dexp = jnp.exp(dmat - m)
+    qk = jnp.einsum("bihd,bjhd->bijh", q.astype(jnp.float32),
+                    k.astype(jnp.float32))
+    smat = qk * dexp
+    norm = jnp.sum(smat, axis=2)
+    denom = jnp.maximum(jnp.abs(norm), jnp.exp(-m[:, :, 0, :]))
+    hout = jnp.einsum("bijh,bjhd->bihd", smat, v.astype(jnp.float32))
+    hout = hout / denom[..., None]
+    hout = rms_norm(hout, p["gn"], cfg.norm_eps).astype(x.dtype)
+    out = (hout.reshape(b, s, dc) * jax.nn.silu(z)) @ p["w_down"]
+
+    # --- recurrent-equivalent state at S ---
+    w_last = cum_f[:, -1:, :] - cum_f + i_pre            # (B, S, H)
+    m_s = jnp.max(w_last, axis=1)                        # (B, H)
+    wexp = jnp.exp(w_last - m_s[:, None, :])             # (B, S, H)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c_s = jnp.einsum("bjh,bjhd,bjhe->bhde", wexp, vf, kf)
+    n_s = jnp.einsum("bjh,bjhd->bhd", wexp, kf)
+    conv_carry = u.astype(jnp.float32)[:, -3:, :]
+    return out, {"c": c_s, "n": n_s, "m": m_s, "conv": conv_carry}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    h = cfg.num_heads
+    dc, dh = _cell_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, dc), jnp.float32),
+    }
+
+
+def apply_mlstm_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                       state: dict) -> tuple[jax.Array, dict]:
+    """Recurrent mLSTM step. x: (B, 1, d_model)."""
+    from repro.models.ssm import _causal_conv
+    b = x.shape[0]
+    h_heads = cfg.num_heads
+    u2 = x @ p["w_up"]
+    u, z = jnp.split(u2, 2, axis=-1)
+    dc = u.shape[-1]
+    dh = dc // h_heads
+
+    conv_u, conv_carry = _causal_conv(u, p["conv_w"],
+                                      state["conv"].astype(u.dtype))
+    conv_u = jax.nn.silu(conv_u)
+    heads = conv_u.reshape(b, 1, h_heads, dh)
+    q = _apply_headwise(p["wq"], heads)[:, 0].astype(jnp.float32)
+    k = (_apply_headwise(p["wk"], heads)[:, 0] / (dh ** 0.5)
+         ).astype(jnp.float32)
+    v = _apply_headwise(p["wv"], u.reshape(b, 1, h_heads, dh)
+                        )[:, 0].astype(jnp.float32)
+    i_pre = (u @ p["wi"]).astype(jnp.float32)[:, 0]      # (B, H)
+    f_pre = (u @ p["wf"]).astype(jnp.float32)[:, 0]
+
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_g = jnp.exp(i_pre - m_new)[..., None]              # (B, H, 1)
+    f_g = jnp.exp(log_f + state["m"] - m_new)[..., None]
+    c = f_g[..., None] * state["c"] + i_g[..., None] * \
+        (v[..., :, None] * k[..., None, :])              # (B,H,dh,dh)
+    n = f_g * state["n"] + i_g * k
+    num = jnp.einsum("bhde,bhe->bhd", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                      jnp.exp(-m_new))[..., None]
+    hout = num / den
+    hout = rms_norm(hout, p["gn"], cfg.norm_eps)[:, None].astype(x.dtype)
+    out = hout.reshape(b, 1, dc) * jax.nn.silu(z)
+    y = out @ p["w_down"]
+    return y, {"c": c, "n": n, "m": m_new, "conv": conv_carry.astype(
+        jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 10)
+    p = {"gn": init_rms(dh),
+         "w_out": dense_init(ks[8], (d, d), dtype=dtype)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w_{g}gate"] = dense_init(ks[i], (d, d), dtype=dtype)
+        p[f"r_{g}"] = _headwise(ks[4 + i], h, dh, jnp.float32)
+    return p
+
+
+def _slstm_step(p: dict, cfg: ModelConfig, carry, wx):
+    """One time step. wx: dict of gate preacts (B, H, dh) from W x_t."""
+    c, n, h, m = carry
+    h_heads = h  # (B, H, dh)
+
+    def mix(g):
+        return wx[g] + jnp.einsum("bhd,hde->bhe", h_heads, p[f"r_{g}"])
+
+    z = jnp.tanh(mix("z"))
+    o = jax.nn.sigmoid(mix("o"))
+    i_pre = mix("i")
+    f_pre = mix("f")
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g * c + i_g * z
+    n_new = jnp.maximum(f_g * n + i_g, 1e-6)
+    h_new = o * c_new / n_new
+    return (c_new, n_new, h_new, m_new)
+
+
+def apply_slstm(p: dict, cfg: ModelConfig, x: jax.Array,
+                state: dict | None = None
+                ) -> tuple[jax.Array, dict]:
+    """Sequential sLSTM block. x: (B, S, d_model)."""
+    b, s, d = x.shape
+    hh = cfg.num_heads
+    dh = d // hh
+    wx = {g: (x @ p[f"w_{g}gate"]).astype(jnp.float32).reshape(b, s, hh, dh)
+          for g in ("z", "i", "f", "o")}
+    if state is None:
+        zeros = jnp.zeros((b, hh, dh), jnp.float32)
+        carry = (zeros, zeros, zeros, jnp.full((b, hh), -1e30, jnp.float32
+                                               )[..., None] * jnp.ones(dh))
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+
+    def step(carry, wx_t):
+        new = _slstm_step(p, cfg, carry, wx_t)
+        return new, new[2]
+
+    wx_t = {g: jnp.moveaxis(v, 1, 0) for g, v in wx.items()}
+    carry, hs = jax.lax.scan(lambda c_, w_: step(c_, w_), carry, wx_t)
+    hs = jnp.moveaxis(hs, 0, 1)                          # (B, S, H, dh)
+    hs = rms_norm(hs, p["gn"], cfg.norm_eps).astype(x.dtype)
+    y = hs.reshape(b, s, d) @ p["w_out"]
+    new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return y, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    hh = cfg.num_heads
+    dh = cfg.d_model // hh
+    zeros = jnp.zeros((batch, hh, dh), jnp.float32)
+    return {"c": zeros, "n": zeros, "h": zeros,
+            "m": jnp.full((batch, hh, dh), -1e30, jnp.float32)}
+
+
+def apply_slstm_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                       state: dict) -> tuple[jax.Array, dict]:
+    y, new_state = apply_slstm(p, cfg, x, state)
+    return y, new_state

@@ -1,0 +1,106 @@
+"""AdamW with ZeRO-style sharding hooks and optional gradient compression.
+
+Functional: ``init -> state``, ``update(grads, state, params) -> (updates,
+state)``. Moments are stored in f32 regardless of param dtype. Under the
+production mesh the moments inherit the parameters' (FSDP×TP) shardings —
+that *is* ZeRO-3 — and the trainer can additionally snapshot them into a
+SECDED CREAM pool (fault tolerance, DESIGN.md §2.4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class AdamWState:
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def cosine_schedule(cfg: TrainConfig):
+    def lr(step):
+        warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        return cfg.learning_rate * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# -- gradient compression (distributed-optimization trick) -------------------
+
+
+def compress_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantisation: (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    return jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8), scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def maybe_compress_grads(grads, mode: str):
+    """Simulate compress->(all-reduce)->decompress. With GSPMD the actual
+    reduction happens inside jit; compressing before the psum halves/quarters
+    the gradient all-reduce bytes — visible in the dry-run collective term."""
+    if mode == "none":
+        return grads
+    if mode == "int8":
+        def roundtrip(g):
+            q, s = compress_int8(g.astype(jnp.float32))
+            return decompress_int8(q, s)
+        return jax.tree.map(roundtrip, grads)
+    raise ValueError(mode)
+
+
+def update(grads, state: AdamWState, params, cfg: TrainConfig
+           ) -> tuple[Any, AdamWState]:
+    """Returns (new_params, new_state)."""
+    grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_schedule(cfg)(step)
+    b1, b2 = cfg.beta1, cfg.beta2
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / (1 - b1 ** step)
+        vhat = v2 / (1 - b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + 1e-8) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)

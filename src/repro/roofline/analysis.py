@@ -1,0 +1,150 @@
+"""Roofline analysis: three terms per (arch × shape × mesh) from dry-run JSONs.
+
+    compute    = HLO_FLOPs / (chips × 197 TF/s bf16)
+    memory     = HLO_bytes / (chips × 819 GB/s)
+    collective = collective_wire_bytes / (chips × 50 GB/s·link)
+
+All numerators are per-device (the compiled module is the per-device SPMD
+program), scaled for scan trip counts via the stage probe (dryrun.py), so
+the denominators use per-chip rates directly. MODEL_FLOPS = 6·N_active·D
+(per device) checks how much compiled compute is useful.
+
+Usage: PYTHONPATH=src python -m repro.roofline.analysis [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+CHIPS = {"pod16x16": 256, "pod2x16x16": 512}
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_dev: float
+    hlo_flops_per_dev: float
+    bound: str
+    step_s: float              # max of the three (no-overlap bound)
+    roofline_frac: float       # compute term / step_s ("how close to ideal")
+    useful_ratio: float        # MODEL_FLOPS / HLO_FLOPs
+
+    def row(self) -> str:
+        return (f"{self.arch:22s} {self.shape:12s} {self.mesh:10s} "
+                f"{self.compute_s:9.2e} {self.memory_s:9.2e} "
+                f"{self.collective_s:9.2e} {self.bound:10s} "
+                f"{self.roofline_frac:5.2f} {self.useful_ratio:5.2f}")
+
+
+def model_flops_for(arch: str, shape_name: str, kind: str,
+                    global_batch: int, seq_len: int) -> float:
+    """Total MODEL_FLOPS for the step (all devices together)."""
+    from repro.configs import get_config
+    from repro.models.model import count_params
+    cfg = get_config(arch)
+    n_active = count_params(cfg, active_only=True)
+    if kind == "train":
+        tokens = global_batch * seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = global_batch * seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * global_batch
+
+
+def analyze_record(rec: dict) -> Roofline | None:
+    if not rec.get("ok"):
+        return None
+    chips = CHIPS[rec["mesh"]]
+    flops = rec.get("hlo_flops_scaled", rec.get("hlo_flops", 0.0))
+    mem_bytes = rec.get("hlo_bytes_scaled", rec.get("hlo_bytes", 0.0))
+    coll_bytes = rec.get("collective_wire_bytes_scaled",
+                         rec.get("collectives", {}).get("wire_bytes", 0))
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = mem_bytes / HBM_BW
+    collective_s = coll_bytes / ICI_BW_PER_LINK
+
+    from repro.configs import SHAPES
+    shp = SHAPES[rec["shape"]]
+    mf_total = model_flops_for(rec["arch"], rec["shape"], rec["kind"],
+                               shp.global_batch, shp.seq_len)
+    mf_dev = mf_total / chips
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bound = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    ideal_s = mf_dev / PEAK_FLOPS_BF16
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        kind=rec["kind"], compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, model_flops_per_dev=mf_dev,
+        hlo_flops_per_dev=flops, bound=bound, step_s=step_s,
+        roofline_frac=ideal_s / step_s if step_s else 0.0,
+        useful_ratio=mf_dev / flops if flops else 0.0)
+
+
+def load_all(directory: str) -> list[Roofline]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        r = analyze_record(json.load(open(f)))
+        if r is not None:
+            out.append(r)
+    return out
+
+
+def print_table(rows: list[Roofline]) -> None:
+    print(f"{'arch':22s} {'shape':12s} {'mesh':10s} {'compute_s':>9s} "
+          f"{'memory_s':>9s} {'collect_s':>9s} {'bound':10s} "
+          f"{'rfrac':>5s} {'usefl':>5s}")
+    for r in rows:
+        print(r.row())
+
+
+def interesting_cells(rows: list[Roofline]) -> dict[str, Roofline]:
+    """The three hillclimb candidates (§Perf)."""
+    single = [r for r in rows if r.mesh == "pod16x16"]
+    worst = min(single, key=lambda r: r.roofline_frac)
+    coll = max(single, key=lambda r: (r.collective_s /
+                                      max(r.step_s, 1e-30)))
+    # most CREAM-representative: the serving-decode cell of the largest
+    # KV-capacity-sensitive arch (decode = where pool capacity bites)
+    decode = [r for r in single if r.kind == "decode"]
+    rep = max(decode, key=lambda r: r.model_flops_per_dev)
+    return {"worst_roofline": worst, "most_collective_bound": coll,
+            "most_representative": rep}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--json-out", default="experiments/roofline.json")
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    print_table(rows)
+    picks = interesting_cells(rows)
+    print("\nHillclimb candidates:")
+    for why, r in picks.items():
+        print(f"  {why:24s} -> {r.arch} x {r.shape} ({r.bound}-bound, "
+              f"frac={r.roofline_frac:.3f})")
+    with open(args.json_out, "w") as f:
+        json.dump({"cells": [r.__dict__ for r in rows],
+                   "picks": {k: v.__dict__ for k, v in picks.items()}},
+                  f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

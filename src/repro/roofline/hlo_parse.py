@@ -1,0 +1,81 @@
+"""Parse collective traffic out of optimised (post-SPMD) HLO text.
+
+``compiled.as_text()`` is the per-device module, so shapes are per-shard:
+summing the result bytes of every collective op gives per-device collective
+bytes directly (§Roofline's collective_bytes). All-reduce is charged 2×
+(reduce-scatter + all-gather wire cost of a ring); others 1×.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^)=]*?\)?)\s*"
+    r"(" + "|".join(COLLECTIVE_OPS) + r")(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    count_by_op: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def wire_bytes(self) -> int:
+        """Ring-model wire traffic: all-reduce counted twice."""
+        total = 0
+        for op, b in self.bytes_by_op.items():
+            total += 2 * b if op == "all-reduce" else b
+        return total
+
+    def as_dict(self) -> dict:
+        return {"bytes_by_op": dict(self.bytes_by_op),
+                "count_by_op": dict(self.count_by_op),
+                "total_bytes": self.total_bytes,
+                "wire_bytes": self.wire_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done: set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        # async pairs: count -start, skip -done (same transfer)
+        if f"{op}-done(" in line:
+            continue
+        b = _shape_bytes(type_str)
+        stats.bytes_by_op[op] += b
+        stats.count_by_op[op] += 1
+    return stats

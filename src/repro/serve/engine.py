@@ -1,0 +1,118 @@
+"""Serving engine: batched decode with CREAM-tiered sequence parking.
+
+A deliberately compact continuous-batching engine:
+
+  * requests (prompt, max_new) are admitted into decode slots;
+  * when a request pauses (multi-turn think time) its per-sequence decode
+    state is packed and parked in the :class:`SequenceCache` (CREAM pool
+    tier first, host on overflow);
+  * on resume the state is fetched back — a host fetch is the page fault
+    whose frequency the pool's capacity mode controls.
+
+The decode batch itself is a dense jitted ``decode_step`` over B slots;
+per-sequence state slices in/out of the batch via tree indexing.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.serve.kv_cache import SequenceCache, pack_tree, unpack_tree
+
+
+@dataclass
+class Request:
+    seq_id: str
+    prompt: np.ndarray
+    max_new: int
+    generated: list[int] = field(default_factory=list)
+    latency_s: float = 0.0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, batch_size: int, max_len: int,
+                 cache: SequenceCache, seed: int = 0):
+        self.cfg = cfg
+        self.batch = batch_size
+        self.max_len = max_len
+        self.cache = cache
+        self.model = build_model(cfg)
+        self.params = self.model.init(jax.random.key(seed))
+        self._decode = jax.jit(self.model.decode_step)
+        self._specs: dict = {}
+        self._prefill = jax.jit(
+            lambda p, toks: self.model.prefill(p, toks, max_len))
+
+    # -- single-sequence building blocks -------------------------------------
+    def prefill_one(self, req: Request):
+        toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+        logits, state = self._prefill(self.params, toks)
+        next_tok = int(jnp.argmax(logits[0, -1]))
+        return next_tok, state
+
+    def park(self, seq_id: str, state) -> None:
+        blob, spec = pack_tree(state)
+        self.cache.park(seq_id, blob)
+        self._specs[seq_id] = spec
+
+    def resume(self, req: Request):
+        blob = self.cache.resume(req.seq_id)
+        if blob is None:
+            tok, state = self.prefill_one(req)   # cache miss -> re-prefill
+            if req.generated:
+                # replay generated tokens to rebuild state
+                for t in req.generated:
+                    _, state = self._decode(self.params, state,
+                                            jnp.asarray([t], jnp.int32))
+                tok = req.generated[-1]
+            return tok, state
+        return None, unpack_tree(blob, self._specs[req.seq_id])
+
+    # -- serving loop ----------------------------------------------------------
+    def serve(self, requests: list[Request], steps_per_turn: int = 8
+              ) -> dict:
+        """Round-robin multi-turn serving: each request decodes
+        ``steps_per_turn`` tokens per turn, parking between turns."""
+        t_start = time.perf_counter()
+        queue = list(requests)
+        first = True
+        while any(len(r.generated) < r.max_new for r in queue):
+            for req in queue:
+                if len(req.generated) >= req.max_new:
+                    continue
+                t0 = time.perf_counter()
+                if first or req.seq_id not in self._specs:
+                    tok, state = self.prefill_one(req)
+                    req.generated.append(tok)
+                else:
+                    _, state = self.resume(req)
+                    tok = req.generated[-1]
+                for _ in range(steps_per_turn):
+                    if len(req.generated) >= req.max_new:
+                        break
+                    logits, state = self._decode(
+                        self.params, state, jnp.asarray([tok], jnp.int32))
+                    tok = int(jnp.argmax(logits[0]))
+                    req.generated.append(tok)
+                self.park(req.seq_id, state)
+                req.latency_s += time.perf_counter() - t0
+            first = False
+        wall = time.perf_counter() - t_start
+        total_tokens = sum(len(r.generated) for r in queue)
+        return {
+            "wall_s": wall,
+            "tokens": total_tokens,
+            "tokens_per_s": total_tokens / wall,
+            "fault_rate": self.cache.stats.fault_rate,
+            "device_hits": self.cache.stats.device_hits,
+            "host_hits": self.cache.stats.host_hits,
+            "evictions": self.cache.stats.evictions,
+            "device_pages": self.cache.device_capacity_pages,
+            "mode": self.cache.mode,
+        }

@@ -1,0 +1,168 @@
+"""CREAM-pool-backed sequence-state cache: the paper's capacity story, served.
+
+Serving keeps many more sequences than fit in one decode batch; parked
+sequences' KV/recurrent state must live *somewhere*. The tier order is
+
+    device CREAM pool  ->  host memory  ("page fault": device<->host copy)
+
+and the pool's protection mode sets the device tier's capacity: flipping
+SECDED -> InterWrap adds +12.5% device pages => higher hit rate => fewer
+host round-trips. This is exactly the paper's memcached experiment with the
+SSD replaced by host DRAM (same orders-of-magnitude penalty ratio on TPU).
+
+KV pages are protection-free by policy (Fig. 1: caches tolerate loss — a
+lost page is a prefill away), which is what frees the code lane for data.
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pool as pool_lib
+from repro.core.layouts import Layout
+from repro.core.pool import PoolState, make_pool
+
+
+@dataclass
+class CacheStats:
+    device_hits: int = 0
+    host_hits: int = 0          # page faults: state had been demoted to host
+    misses: int = 0             # unknown sequence (needs prefill)
+    evictions: int = 0
+    device_fetch_s: float = 0.0
+    host_fetch_s: float = 0.0
+
+    @property
+    def fault_rate(self) -> float:
+        total = self.device_hits + self.host_hits
+        return self.host_hits / total if total else 0.0
+
+
+@dataclass
+class _Entry:
+    pages: list[int] | None     # device pages, or None if on host
+    nbytes: int
+    host_copy: np.ndarray | None = None
+
+
+class SequenceCache:
+    """LRU cache of per-sequence state blobs over (CREAM pool, host) tiers."""
+
+    def __init__(self, num_rows: int, mode: str = "cream",
+                 row_words: int = 256):
+        """mode: 'cream' (InterWrap, +12.5% pages) | 'secded' (baseline ECC)."""
+        if mode == "cream":
+            self.pool = make_pool(num_rows, Layout.INTERWRAP,
+                                  row_words=row_words)
+        elif mode == "secded":
+            self.pool = make_pool(num_rows, Layout.INTERWRAP, boundary=0,
+                                  row_words=row_words)
+        else:
+            raise ValueError(mode)
+        self.mode = mode
+        self.free_pages = list(range(self.pool.num_pages))
+        self.lru: OrderedDict[str, _Entry] = OrderedDict()
+        self.stats = CacheStats()
+
+    @property
+    def device_capacity_pages(self) -> int:
+        return self.pool.num_pages
+
+    def pages_needed(self, nbytes: int) -> int:
+        return math.ceil(nbytes / self.pool.page_bytes)
+
+    # -- write ---------------------------------------------------------------
+    def park(self, seq_id: str, blob: np.ndarray) -> None:
+        """Store a sequence's state (uint8 blob). Evicts LRU to host if full."""
+        if seq_id in self.lru:
+            self._drop_device(self.lru.pop(seq_id))
+        nbytes = blob.nbytes
+        n = self.pages_needed(nbytes)
+        while len(self.free_pages) < n and self._any_device_resident():
+            self._evict_one()
+        entry = _Entry(pages=None, nbytes=nbytes)
+        if len(self.free_pages) >= n:
+            pages = [self.free_pages.pop() for _ in range(n)]
+            words = np.zeros(n * self.pool.page_words, np.uint32)
+            padded = np.frombuffer(
+                blob.tobytes() + b"\0" * ((-nbytes) % 4), dtype=np.uint32)
+            words[:len(padded)] = padded
+            self.pool = pool_lib.write_pages_batch(
+                self.pool, jnp.asarray(pages, jnp.int32),
+                jnp.asarray(words.reshape(n, -1)))
+            entry.pages = pages
+        else:
+            entry.host_copy = blob.copy()
+        self.lru[seq_id] = entry
+        self.lru.move_to_end(seq_id)
+
+    # -- read ----------------------------------------------------------------
+    def resume(self, seq_id: str) -> np.ndarray | None:
+        """Fetch a sequence's state; None if unknown (caller must prefill)."""
+        entry = self.lru.get(seq_id)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self.lru.move_to_end(seq_id)
+        t0 = time.perf_counter()
+        if entry.pages is not None:
+            data = pool_lib.read_pages_batch(
+                self.pool, jnp.asarray(entry.pages, jnp.int32))
+            blob = np.asarray(data).view(np.uint8).reshape(-1)[:entry.nbytes]
+            self.stats.device_hits += 1
+            self.stats.device_fetch_s += time.perf_counter() - t0
+        else:
+            blob = entry.host_copy
+            # charge a host->device transfer (the "page fault")
+            _ = jax.device_put(blob).block_until_ready()
+            self.stats.host_hits += 1
+            self.stats.host_fetch_s += time.perf_counter() - t0
+        return np.asarray(blob, np.uint8).copy()
+
+    # -- internals -------------------------------------------------------------
+    def _any_device_resident(self) -> bool:
+        return any(e.pages is not None for e in self.lru.values())
+
+    def _evict_one(self) -> None:
+        for sid, e in self.lru.items():      # oldest first
+            if e.pages is not None:
+                data = pool_lib.read_pages_batch(
+                    self.pool, jnp.asarray(e.pages, jnp.int32))
+                e.host_copy = np.asarray(data).view(np.uint8).reshape(-1)[
+                    :e.nbytes].copy()
+                self._drop_device(e)
+                self.stats.evictions += 1
+                return
+        raise RuntimeError("nothing to evict")
+
+    def _drop_device(self, e: _Entry) -> None:
+        if e.pages is not None:
+            self.free_pages.extend(e.pages)
+            e.pages = None
+
+
+def pack_tree(tree) -> tuple[np.ndarray, list]:
+    """Pytree -> (uint8 blob, spec) for SequenceCache storage."""
+    leaves, treedef = jax.tree.flatten(tree)
+    spec = [(l.shape, str(l.dtype)) for l in leaves]
+    blob = np.concatenate([np.asarray(l).view(np.uint8).reshape(-1)
+                           for l in leaves]) if leaves else np.zeros(0, np.uint8)
+    return blob, (treedef, spec)
+
+
+def unpack_tree(blob: np.ndarray, spec) -> object:
+    treedef, shapes = spec
+    leaves = []
+    off = 0
+    for shape, dtype in shapes:
+        n = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        arr = blob[off:off + n].view(np.dtype(dtype)).reshape(shape)
+        leaves.append(jnp.asarray(arr.copy()))
+        off += n
+    return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,57 @@
+"""Per-arch decode smoke: every assigned architecture serves one token.
+
+Complements test_models.py's forward/grad smoke with the serve path: reduced
+config, prefill a short prompt, decode 3 tokens, assert shapes/finiteness
+and cache_len bookkeeping. Covers the (f) deliverable's decode leg for all
+10 architectures including the hybrid/SSM state machinery.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_decode_smoke(arch):
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, P, MAX = 2, 8, 16
+    tok = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab_size)
+    logits, state = model.prefill(params, tok, MAX)
+    assert logits.shape == (B, P, cfg.vocab_size)
+    assert int(state["cache_len"][0]) == P
+    step = jax.jit(model.decode_step)
+    cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    for i in range(3):
+        lg, state = step(params, state, cur)
+        assert lg.shape == (B, cfg.vocab_size)
+        assert bool(jnp.isfinite(lg).all()), f"{arch}: NaN at decode {i}"
+        cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    assert int(state["cache_len"][0]) == P + 3
+
+
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "jamba-1.5-large-398b"])
+def test_subquadratic_state_is_constant_size(arch):
+    """long_500k feasibility: recurrent state size must not scale with the
+    cache length for the SSM/hybrid archs (modulo the few attn layers)."""
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg)
+    small = model.init_decode_state(1, 16)
+    big = model.init_decode_state(1, 64)
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                yield from walk(v, f"{prefix}/{k}")
+        else:
+            yield prefix, tree
+
+    def nbytes(tree):
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for path, leaf in walk(tree)
+                   if not path.endswith(("/k", "/v")))
+
+    assert nbytes(small) == nbytes(big)

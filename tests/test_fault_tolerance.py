@@ -1,0 +1,68 @@
+"""The recovery ladder (distributed.fault_tolerance) end to end."""
+import dataclasses
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import injection
+from repro.distributed.fault_tolerance import recover
+from repro.train.trainer import make_trainer
+
+TINY = ModelConfig(name="tiny-ft", family="dense", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                   head_dim=16, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def trainer():
+    tmp = tempfile.mkdtemp()
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=40,
+                       scrub_every=0, checkpoint_every=5)
+    tr = make_trainer(TINY, tcfg, ckpt_dir=tmp, seq_len=32, global_batch=4)
+    tr.run(6)
+    return tr
+
+
+def test_rung1_scrub_repair(trainer):
+    rng = np.random.default_rng(0)
+    trainer.snapshot_moments()
+    stor, _ = injection.inject_flips(trainer.moment_pool.storage, rng, 4)
+    trainer.moment_pool = dataclasses.replace(trainer.moment_pool,
+                                              storage=stor)
+    rep = recover(trainer, "sdc_single_bit")
+    assert rep.rung == "scrub-repair"
+    assert rep.details["corrected"] == 4
+
+
+def test_rung2_targeted_restore(trainer):
+    rep = recover(trainer, "sdc_multi_bit")
+    assert rep.rung == "targeted-restore"
+    assert rep.details["restored_at_step"] == 5
+
+
+def test_rung3_warm_restart(trainer):
+    trainer.snapshot_moments()
+    rep = recover(trainer, "process_crash")
+    assert rep.rung == "warm-restart"
+    assert rep.details["worst_status"] == 0
+
+
+def test_rung5_cold_restart(trainer):
+    step_before = trainer.step
+    rep = recover(trainer, "host_loss")
+    assert rep.rung == "cold-restart" and rep.details["restored"]
+    # resumes from the last checkpoint boundary
+    assert trainer.step <= step_before
+    log = trainer.run(2)
+    assert len(log) >= 2
+
+
+def test_remesh_plan():
+    from repro.distributed.elastic import plan_remesh
+    plan = plan_remesh(old_devices=512, new_devices=496, model_axis=16)
+    assert plan["usable_devices"] == 496 and plan["idle_devices"] == 0
+    plan = plan_remesh(old_devices=512, new_devices=250, model_axis=16)
+    assert plan["usable_devices"] == 240 and plan["idle_devices"] == 10
+    assert plan["batch_scale"] < 1.0

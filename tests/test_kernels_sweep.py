@@ -1,0 +1,105 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+RNG = np.random.default_rng(2)
+
+
+@pytest.mark.parametrize("n,d", [(8, 512), (16, 1024), (48, 2048), (64, 4096)])
+def test_secded_kernel_sweep(n, d):
+    from repro.kernels.secded import kernel, ref
+    data = jnp.asarray(RNG.integers(0, 2**32, size=(n, d), dtype=np.uint32))
+    ck, cr = kernel.encode(data), ref.encode(data)
+    assert (ck == cr).all()
+    arr = np.asarray(data).copy()
+    arr[n // 2, d // 3] ^= 1 << 11
+    d2 = jnp.asarray(arr)
+    for a, b in zip(kernel.decode(d2, ck), ref.decode(d2, cr)):
+        assert (a == b).all()
+    fixed, _, status = kernel.decode(d2, ck)
+    assert (fixed == data).all() and int(status.sum()) == 1
+
+
+@pytest.mark.parametrize("n,d", [(8, 1024), (32, 2048)])
+def test_parity_kernel_sweep(n, d):
+    from repro.kernels.parity8 import kernel, ref
+    data = jnp.asarray(RNG.integers(0, 2**32, size=(n, d), dtype=np.uint32))
+    assert (kernel.encode(data) == ref.encode(data)).all()
+    par = kernel.encode(data)
+    assert (kernel.check(data, par) == ref.check(data, par)).all()
+    assert int(kernel.check(data, par).sum()) == 0
+
+
+@pytest.mark.parametrize("rows,W", [(16, 128), (64, 256), (32, 512)])
+def test_interwrap_kernel_sweep(rows, W):
+    from repro.kernels.interwrap import kernel, ref
+    storage = jnp.asarray(RNG.integers(0, 2**32, size=(rows, 9, W),
+                                       dtype=np.uint32))
+    extra = rows // 8
+    pages = jnp.asarray([0, 7, 8, rows - 1, rows, rows + extra - 1],
+                        jnp.int32)
+    gk = kernel.gather(storage, pages, rows)
+    gr = ref.gather(storage, pages, rows)
+    assert (gk == gr).all()
+    data = jnp.asarray(RNG.integers(0, 2**32, size=(len(pages), 8 * W),
+                                    dtype=np.uint32))
+    sk = kernel.scatter(storage.copy(), pages, data, rows)
+    sr = ref.scatter(storage, pages, data, rows)
+    assert (sk == sr).all()
+
+
+@pytest.mark.parametrize("rows", [16, 48])
+def test_scrub_kernel_sweep(rows):
+    from repro.core import secded
+    from repro.core.injection import inject_flips
+    from repro.kernels.scrub import kernel, ref
+    storage = jnp.asarray(RNG.integers(0, 2**32, size=(rows, 9, 256),
+                                       dtype=np.uint32))
+    data = storage[:, :8, :].reshape(rows, -1)
+    storage = storage.at[:, 8, :].set(secded.encode_block(data))
+    storage, recs = inject_flips(storage, RNG, 7)
+    outk, outr = kernel.scrub_rows(storage), ref.scrub_rows(storage)
+    assert (outk[0] == outr[0]).all() and (outk[1] == outr[1]).all()
+    # scrubbing the scrubbed pool is a fixpoint
+    again, status = kernel.scrub_rows(outk[0])
+    assert (status == 0).all() and (again == outk[0]).all()
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 128, 64), (128, 256, 128),
+                                   (256, 512, 128)])
+def test_ecc_matmul_sweep(m, k, n):
+    from repro.kernels.ecc_matmul import kernel, ref
+    a = jnp.asarray(RNG.standard_normal((m, k)), jnp.bfloat16)
+    b = jnp.asarray(RNG.standard_normal((k, n)), jnp.bfloat16)
+    bits, codes = ref.protect(a)
+    assert (ref.unprotect(bits) == a).all()
+    arr = np.asarray(bits).copy()
+    arr[m // 3, k // 8] ^= 1 << 21     # corrupt a weight bit
+    bits2 = jnp.asarray(arr)
+    yk = kernel.ecc_matmul(bits2, codes, b)
+    yr = ref.ecc_matmul(bits2, codes, b)
+    y_truth = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(y_truth),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,dtype", [
+    (2, 4, 2, 128, 64, jnp.float32),
+    (1, 8, 1, 256, 32, jnp.float32),
+    (1, 2, 2, 64, 128, jnp.float32),
+    (2, 4, 4, 128, 64, jnp.bfloat16),
+])
+def test_flash_attention_sweep(b, hq, hkv, s, d, dtype):
+    from repro.kernels.flash_attention import kernel, ref
+    q = jnp.asarray(RNG.standard_normal((b, hq, s, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), dtype)
+    for causal in (True, False):
+        yk = kernel.attention(q, k, v, causal=causal)
+        yr = ref.attention(q, k, v, causal=causal)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(yk, np.float32),
+                                   np.asarray(yr, np.float32),
+                                   rtol=tol, atol=tol)

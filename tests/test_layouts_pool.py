@@ -1,0 +1,165 @@
+"""Layout address-translation invariants + CREAMPool behaviour (property-based)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import injection, parity8
+from repro.core import pool as P
+from repro.core.layouts import (GROUP_ROWS, Layout, count_device_ops,
+                                extra_page_count, interwrap_slices,
+                                plan_line_access, total_pages)
+
+RNG = np.random.default_rng(1)
+ALL_LAYOUTS = [Layout.PACKED, Layout.RANK_SUBSET, Layout.INTERWRAP,
+               Layout.PARITY]
+
+
+def rand_page(pw):
+    return jnp.asarray(RNG.integers(0, 2**32, size=(pw,), dtype=np.uint32))
+
+
+# -- paper-exact constants -----------------------------------------------------
+
+
+def test_capacity_gains_match_paper():
+    assert extra_page_count(Layout.PACKED, 1024) == 128          # +12.5%
+    assert extra_page_count(Layout.INTERWRAP, 1024) == 128
+    gain = extra_page_count(Layout.PARITY, 1024) / 1024
+    assert abs(gain - 0.107) < 0.003                             # +10.7%
+
+
+def test_rank_subset_78pct_extra_accesses():
+    """Paper §4.1.3: uniform traffic -> +78% average accesses."""
+    B = 1024
+    tot = total_pages(Layout.RANK_SUBSET, B)
+    reads = sum(count_device_ops(Layout.RANK_SUBSET, B, p, False)
+                for p in range(tot))
+    assert abs(reads / tot - 1.78) < 0.01
+
+
+def test_paper_op_counts():
+    B = 64
+    assert count_device_ops(Layout.BASELINE_ECC, B, 0, False) == 1
+    assert count_device_ops(Layout.PACKED, B, 0, True) == 2          # RMW
+    assert count_device_ops(Layout.PACKED, B, B, False) == 8
+    assert count_device_ops(Layout.RANK_SUBSET, B, 0, True) == 1
+    assert count_device_ops(Layout.INTERWRAP, B, B, True) == 1
+    assert count_device_ops(Layout.PARITY, B, 0, False) == 2
+    assert count_device_ops(Layout.PARITY, B, B, False) == 9         # §4.2
+
+
+@pytest.mark.parametrize("slot", range(9))
+def test_interwrap_bridge_formula(slot):
+    """Skipped lane == (8 - slot) mod 9 — the paper's bridge-chip formula."""
+    lanes = {l for l, _ in interwrap_slices(slot)}
+    assert len(lanes) == 8
+    assert (8 - slot) % 9 not in lanes
+
+
+@given(st.integers(8, 64).map(lambda g: g * 8))
+@settings(max_examples=20, deadline=None)
+def test_no_storage_overlap(num_rows):
+    """No two pages' physical slices overlap, for every layout (word-level)."""
+    for layout in ALL_LAYOUTS:
+        claimed: dict = {}
+        tot = total_pages(layout, num_rows)
+        for page in (0, 1, 7, 8, 9, num_rows - 1, num_rows,
+                     tot - 1):
+            if page >= tot:
+                continue
+            from repro.core.layouts import place_page
+            pl = place_page(layout, num_rows, page)
+            if pl.kind == "rows":
+                cells = {(pl.row0, lane) for lane in range(8)}
+            elif pl.kind == "codelane":
+                cells = {(pl.row0 + k, 8) for k in range(8)}
+            else:
+                cells = {(row, lane) for lane, row in pl.slices}
+            for c in cells:
+                assert c not in claimed, (layout, page, c, claimed[c])
+                claimed[c] = page
+
+
+# -- pool roundtrips -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout", ALL_LAYOUTS)
+def test_pool_roundtrip_mixed_regions(layout):
+    pool = P.make_pool(64, layout, boundary=32)
+    pages = {}
+    for pid in [0, 31, 32, 63, pool.num_rows, pool.num_pages - 1]:
+        d = rand_page(pool.page_words)
+        pages[pid] = d
+        pool = P.write_page(pool, pid, d)
+    for pid, d in pages.items():
+        got, status = P.read_page(pool, pid)
+        assert (got == d).all() and int(status) == 0
+
+
+def test_pool_secded_corrects_and_parity_detects():
+    pool = P.make_pool(16, Layout.INTERWRAP, boundary=8)
+    d = rand_page(pool.page_words)
+    pool = P.write_page(pool, 12, d)
+    stor, _ = injection.inject_flips(pool.storage, RNG, 1, row_range=(12, 13),
+                                     lanes=tuple(range(8)))
+    got, status = P.read_page(
+        dataclasses.replace(pool, storage=stor), 12)
+    assert (got == d).all() and int(status) in (1, 2)
+
+    pp = P.make_pool(16, Layout.PARITY)
+    d2 = rand_page(pp.page_words)
+    pp = P.write_page(pp, 3, d2)
+    arr = np.asarray(pp.storage).copy()
+    arr[3, 2, 50] ^= 1 << 3
+    got, status = P.read_page(dataclasses.replace(
+        pp, storage=jnp.asarray(arr)), 3)
+    assert int(status) == 3
+
+
+@given(st.integers(0, 10**9))
+@settings(max_examples=15, deadline=None)
+def test_repartition_preserves_contents(seed):
+    rng = np.random.default_rng(seed)
+    pool = P.make_pool(32, Layout.INTERWRAP, boundary=16)
+    keep = {}
+    for pid in [0, 5, 18, 31]:
+        d = jnp.asarray(rng.integers(0, 2**32, size=(pool.page_words,),
+                                     dtype=np.uint32))
+        keep[pid] = d
+        pool = P.write_page(pool, pid, d)
+    grown, info = P.repartition(pool, 32)
+    assert grown.num_pages == 36
+    shrunk, info2 = P.repartition(grown, 8)
+    assert len(info2["evicted_extra_pages"]) == 3
+    for st_ in (grown, shrunk):
+        for pid, d in keep.items():
+            got, status = P.read_page(st_, pid)
+            assert (got == d).all() and int(status) == 0
+
+
+def test_batched_matches_scalar_path():
+    pool = P.make_pool(64, Layout.INTERWRAP)
+    idx = jnp.asarray([0, 7, 8, 63, 64, 71], jnp.int32)
+    data = jnp.asarray(RNG.integers(0, 2**32, size=(6, pool.page_words),
+                                    dtype=np.uint32))
+    pool = P.write_pages_batch(pool, idx, data)
+    got = P.read_pages_batch(pool, idx)
+    assert (got == data).all()
+    for i, pid in enumerate(idx.tolist()):
+        one, _ = P.read_page(pool, pid)
+        assert (one == got[i]).all()
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=16, max_size=16))
+@settings(max_examples=50, deadline=None)
+def test_parity_detects_any_single_flip(words):
+    data = jnp.asarray(np.asarray(words, np.uint32))[None, :]
+    par = parity8.encode_lines(data)
+    w = int(RNG.integers(0, 16))
+    b = int(RNG.integers(0, 32))
+    arr = np.asarray(data).copy()
+    arr[0, w] ^= np.uint32(1 << b)
+    assert int(parity8.check_lines(jnp.asarray(arr), par)[0, 0]) == 1

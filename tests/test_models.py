@@ -1,0 +1,117 @@
+"""Model substrate: per-arch smoke tests + decode-consistency properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import BlockKind, MixerKind, ModelConfig
+from repro.models import build_model, count_params
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke(arch):
+    """Reduced same-family config: one forward + one train grad on CPU."""
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    logits, aux = jax.jit(model.forward)(params, tokens)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN in logits"
+    grads = jax.grad(lambda p: model.loss(p, tokens, tokens))(params)
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads)), \
+        f"{arch}: NaN in grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_param_count_positive(arch):
+    cfg = get_config(arch)
+    n = count_params(cfg)
+    na = count_params(cfg, active_only=True)
+    assert n > 0 and 0 < na <= n
+
+
+PREFILL_DECODE_CASES = [
+    ModelConfig(name="dense", family="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                head_dim=16, qk_norm=True, dtype="float32"),
+    ModelConfig(name="mqa-gelu", family="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=1, d_ff=128, vocab_size=128,
+                head_dim=16, mlp_variant="gelu", dtype="float32"),
+    ModelConfig(name="moe", family="moe", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=128,
+                head_dim=16, pattern=((BlockKind.ATTN, MixerKind.MOE),),
+                num_experts=4, experts_per_token=2, moe_d_ff=96,
+                capacity_factor=64.0, dtype="float32"),
+    ModelConfig(name="mamba", family="ssm", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=128,
+                head_dim=16, pattern=((BlockKind.MAMBA, MixerKind.MLP),),
+                ssm_state_dim=8, ssm_dt_rank=8, subquadratic=True,
+                dtype="float32"),
+    ModelConfig(name="xlstm", family="ssm", num_layers=4, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=128,
+                pattern=((BlockKind.MLSTM, MixerKind.NONE),) * 3
+                + ((BlockKind.SLSTM, MixerKind.NONE),),
+                subquadratic=True, dtype="float32"),
+    ModelConfig(name="hybrid", family="hybrid", num_layers=4, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                head_dim=16,
+                pattern=((BlockKind.ATTN, MixerKind.MOE),)
+                + ((BlockKind.MAMBA, MixerKind.MLP),),
+                num_experts=4, experts_per_token=2, moe_d_ff=64,
+                capacity_factor=64.0, ssm_state_dim=8, ssm_dt_rank=8,
+                subquadratic=True, dtype="float32"),
+]
+
+
+@pytest.mark.parametrize("cfg", PREFILL_DECODE_CASES, ids=lambda c: c.name)
+def test_prefill_decode_matches_forward(cfg):
+    """The system invariant: prefill(P) + decode == full forward, per family.
+
+    For mLSTM this also proves the parallel<->recurrent gate algebra.
+    """
+    S, P, B = 24, 16, 2
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tok = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    full, _ = jax.jit(model.forward)(params, tok)
+    logits_pre, state = model.prefill(params, tok[:, :P], S)
+    np.testing.assert_allclose(np.asarray(logits_pre[:, -1]),
+                               np.asarray(full[:, P - 1]), atol=1e-3,
+                               rtol=1e-3)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(P, S):
+        lg, state = step(params, state, tok[:, t])
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, P:]),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_forward_last_only_matches_full():
+    cfg = PREFILL_DECODE_CASES[0]
+    from repro.models import transformer
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tok = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    full, _ = transformer.forward(params, cfg, tok)
+    last, _ = transformer.forward(params, cfg, tok, logits_mode="last")
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, -1]),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    cfg = ModelConfig(name="moe-tight", family="moe", num_layers=1,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=0,
+                      vocab_size=64, head_dim=16,
+                      pattern=((BlockKind.ATTN, MixerKind.MOE),),
+                      num_experts=4, experts_per_token=2, moe_d_ff=32,
+                      capacity_factor=0.25, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tok = jax.random.randint(jax.random.key(1), (2, 32), 0, 64)
+    logits, aux = jax.jit(model.forward)(params, tok)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))

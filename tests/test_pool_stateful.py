@@ -1,0 +1,109 @@
+"""Hypothesis state machine over CREAMPool: arbitrary interleavings of
+writes, reads, scrubs, injected flips, and boundary moves preserve the
+system invariants:
+
+  * read-after-write returns the written data (within the same protection
+    epoch);
+  * a SECDED-region flip is corrected by scrub, and never corrupts reads;
+  * repartition preserves every surviving page's contents;
+  * capacity accounting always matches the layout math.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import settings
+from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                 invariant, precondition, rule)
+from hypothesis import strategies as st
+
+from repro.core import injection
+from repro.core import pool as P
+from repro.core.layouts import Layout, extra_page_count
+from repro.core.scrubber import scrub
+
+ROWS = 32
+
+
+class PoolMachine(RuleBasedStateMachine):
+    @initialize(boundary=st.sampled_from([0, 8, 16, 32]),
+                seed=st.integers(0, 2**31 - 1))
+    def setup(self, boundary, seed):
+        self.rng = np.random.default_rng(seed)
+        self.pool = P.make_pool(ROWS, Layout.INTERWRAP, boundary=boundary)
+        self.shadow: dict[int, np.ndarray] = {}
+        self.dirty_cream: set[int] = set()   # flips in unprotected pages
+
+    def _rand_page(self):
+        return self.rng.integers(0, 2**32, size=(self.pool.page_words,),
+                                 dtype=np.uint32)
+
+    @rule(slot=st.integers(0, 35))
+    def write(self, slot):
+        if slot >= self.pool.num_pages:
+            return
+        data = self._rand_page()
+        self.pool = P.write_page(self.pool, slot, jnp.asarray(data))
+        self.shadow[slot] = data
+        self.dirty_cream.discard(slot)
+
+    @rule(slot=st.integers(0, 35))
+    def read(self, slot):
+        if slot not in self.shadow or slot >= self.pool.num_pages:
+            return
+        if slot in self.dirty_cream:
+            return  # unprotected page with an injected flip: no guarantee
+        got, status = P.read_page(self.pool, slot)
+        assert (np.asarray(got) == self.shadow[slot]).all()
+        assert int(status) in (0, 1, 2)  # clean or corrected, never silent
+
+    @precondition(lambda self: self.pool.boundary < ROWS)
+    @rule()
+    def flip_protected_bit(self):
+        """Inject one flip into the SECDED region; reads must still correct."""
+        stor, _ = injection.inject_flips(
+            self.pool.storage, self.rng, 1,
+            row_range=(self.pool.boundary, ROWS))
+        self.pool = dataclasses.replace(self.pool, storage=stor)
+
+    @precondition(lambda self: self.pool.boundary > 0)
+    @rule()
+    def flip_unprotected_bit(self):
+        row = int(self.rng.integers(0, self.pool.boundary))
+        stor, recs = injection.inject_flips(self.pool.storage, self.rng, 1,
+                                            row_range=(row, row + 1))
+        self.pool = dataclasses.replace(self.pool, storage=stor)
+        # conservatively mark every page as possibly-affected in that region
+        for slot in list(self.shadow):
+            if slot < self.pool.boundary or slot >= ROWS:
+                self.dirty_cream.add(slot)
+
+    @rule()
+    def scrub_pool(self):
+        self.pool, stats = scrub(self.pool)
+        assert stats.detected_uncorrectable == 0
+
+    @rule(new_boundary=st.sampled_from([0, 8, 16, 24, 32]))
+    def move_boundary(self, new_boundary):
+        old_pages = self.pool.num_pages
+        self.pool, info = P.repartition(self.pool, new_boundary)
+        for slot in info["evicted_extra_pages"]:
+            self.shadow.pop(slot, None)
+            self.dirty_cream.discard(slot)
+        # pages entering SECDED got re-encoded over possibly-flipped data:
+        # their dirty flag persists; clean pages must survive the move.
+        for slot in list(self.shadow):
+            if slot >= self.pool.num_pages:
+                self.shadow.pop(slot)
+                self.dirty_cream.discard(slot)
+
+    @invariant()
+    def capacity_matches_layout_math(self):
+        expected = ROWS + extra_page_count(Layout.INTERWRAP,
+                                           self.pool.boundary)
+        assert self.pool.num_pages == expected
+
+
+TestPoolMachine = PoolMachine.TestCase
+TestPoolMachine.settings = settings(max_examples=12, stateful_step_count=14,
+                                    deadline=None)

@@ -1,0 +1,80 @@
+"""SECDED(72,64) code properties: exhaustive single-bit, random double-bit."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import secded as s
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(scope="module")
+def beats():
+    lo = jnp.asarray(RNG.integers(0, 2**32, size=(512,), dtype=np.uint32))
+    hi = jnp.asarray(RNG.integers(0, 2**32, size=(512,), dtype=np.uint32))
+    return lo, hi, s.encode_words(lo, hi)
+
+
+def test_clean_decode(beats):
+    lo, hi, code = beats
+    lo2, hi2, c2, st_ = s.decode_words(lo, hi, code)
+    assert (st_ == s.CLEAN).all()
+    assert (lo2 == lo).all() and (hi2 == hi).all() and (c2 == code).all()
+
+
+@pytest.mark.parametrize("bit", list(range(72)))
+def test_single_bit_corrected_exhaustive(beats, bit):
+    lo, hi, code = beats
+    l, h, c = lo, hi, code
+    if bit < 32:
+        l = l ^ jnp.uint32(1 << bit)
+    elif bit < 64:
+        h = h ^ jnp.uint32(1 << (bit - 32))
+    else:
+        c = c ^ jnp.uint32(1 << (bit - 64))
+    l2, h2, c2, st_ = s.decode_words(l, h, c)
+    expected = s.CORRECTED_CODE if bit >= 64 else s.CORRECTED_DATA
+    assert (st_ == expected).all()
+    assert (l2 == lo).all() and (h2 == hi).all() and (c2 == code).all()
+
+
+@given(st.integers(0, 71), st.integers(0, 71), st.integers(0, 2**64 - 1))
+@settings(max_examples=200, deadline=None)
+def test_double_bit_always_detected(b1, b2, data):
+    """Hsiao guarantee: any 2-bit error is detected, never miscorrected."""
+    if b1 == b2:
+        return
+    lo = jnp.uint32(data & 0xFFFFFFFF)[None]
+    hi = jnp.uint32(data >> 32)[None]
+    code = s.encode_words(lo, hi)
+    l, h, c = lo, hi, code
+    for bit in (b1, b2):
+        if bit < 32:
+            l = l ^ jnp.uint32(1 << bit)
+        elif bit < 64:
+            h = h ^ jnp.uint32(1 << (bit - 32))
+        else:
+            c = c ^ jnp.uint32(1 << (bit - 64))
+    _, _, _, st_ = s.decode_words(l, h, c)
+    assert int(st_[0]) == s.DETECTED_UNCORRECTABLE
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=8, max_size=8))
+@settings(max_examples=100, deadline=None)
+def test_block_roundtrip(words):
+    data = jnp.asarray(np.asarray(words, np.uint32))[None, :]
+    codes = s.encode_block(data)
+    d2, c2, st_ = s.decode_block(data, codes)
+    assert (st_ == 0).all() and (d2 == data).all()
+
+
+def test_pack_unpack_inverse():
+    codes = jnp.asarray(RNG.integers(0, 256, size=(4, 64), dtype=np.uint32))
+    assert (s.unpack_codes(s.pack_codes(codes)) == codes).all()
+
+
+def test_hsiao_columns_odd_weight_distinct():
+    cols = np.asarray(s._COLUMNS)
+    assert len(set(cols.tolist())) == 64
+    assert all(bin(int(c)).count("1") % 2 == 1 for c in cols)
