@@ -7,7 +7,12 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract). Figure map:
   fig12_*  SECDED-fraction sensitivity vs SoftECC (paper Fig. 12)
   ops_* / kernel_*  layout + kernel overheads   (paper §4.4 analogue)
   serving_*         CREAM-pool serving engine   (beyond paper)
+  vm_*              CREAM-VM multi-tenant sim   (beyond paper)
+
+``--only NAME[,NAME...]`` runs a subset of suites (CI smoke uses
+``--only vm``).
 """
+import argparse
 import sys
 import time
 import traceback
@@ -16,7 +21,7 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_capacity, bench_kernels, bench_overheads,
                             bench_parallelism, bench_sensitivity,
-                            bench_serving, bench_websearch)
+                            bench_serving, bench_vm, bench_websearch)
     suites = [
         ("fig4", bench_websearch.main),
         ("fig8", bench_capacity.main),
@@ -25,7 +30,18 @@ def main() -> None:
         ("overheads", bench_overheads.main),
         ("kernels", bench_kernels.main),
         ("serving", bench_serving.main),
+        ("vm", bench_vm.main),
     ]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names to run")
+    args = ap.parse_args()
+    if args.only:
+        wanted = set(args.only.split(","))
+        unknown = wanted - {s for s, _ in suites}
+        if unknown:
+            raise SystemExit(f"unknown suites: {sorted(unknown)}")
+        suites = [(s, fn) for s, fn in suites if s in wanted]
     failed = 0
     for suite, fn in suites:
         t0 = time.time()

@@ -279,8 +279,109 @@ def write_pages_batch(state: PoolState, pages: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Mixed-pool batched access — any boundary, any page-id mix.
+# SECDED rows and (for INTERWRAP) CREAM/extra pages take vectorised paths;
+# other layouts fall back to per-page gather/scatter. Used by the VM layer
+# (``repro.vm``) whose pools are routinely mixed-mode.
+# ---------------------------------------------------------------------------
+
+
+def read_pages_any(state: PoolState, pages) -> jax.Array:
+    """Decode-corrected batch read for an arbitrary list of page ids.
+
+    Unlike :func:`read_pages_batch` this handles mixed pools
+    (``0 < boundary < num_rows``). Returns ``(n, page_words)`` uint32.
+    """
+    pages = [int(p) for p in pages]
+    n = len(pages)
+    bad = [p for p in pages if not 0 <= p < state.num_pages]
+    if bad:
+        raise ValueError(f"pages {bad} out of range [0, {state.num_pages})")
+    if not n:
+        return jnp.zeros((0, state.page_words), jnp.uint32)
+    out: list = [None] * n
+    sec = [i for i, p in enumerate(pages)
+           if state.boundary <= p < state.num_rows]
+    other = [i for i in range(n) if state.boundary > pages[i]
+             or pages[i] >= state.num_rows]
+    if sec:
+        rows = jnp.asarray([pages[i] for i in sec], jnp.int32)
+        data = state.storage[rows, :DATA_LANES, :].reshape(len(sec), -1)
+        codes = state.storage[rows, CODE_LANE, :]
+        fixed, _, _ = secded.decode_block(data, codes)
+        for j, i in enumerate(sec):
+            out[i] = fixed[j]
+    if other:
+        if state.layout == Layout.INTERWRAP:
+            ids = jnp.asarray([pages[i] for i in other], jnp.int32)
+            rows, lanes = page_to_wrap_coords(state, ids)
+            data = state.storage[rows, lanes, :].reshape(len(other), -1)
+            for j, i in enumerate(other):
+                out[i] = data[j]
+        else:
+            for i in other:
+                out[i], _ = read_page(state, pages[i])
+    return jnp.stack(out)
+
+
+def write_pages_any(state: PoolState, pages, data: jax.Array) -> PoolState:
+    """Batch write for an arbitrary list of page ids, maintaining codes.
+
+    Mixed-pool counterpart of :func:`write_pages_batch`; ``data`` is
+    ``(n, page_words)``.
+    """
+    pages = [int(p) for p in pages]
+    n = len(pages)
+    bad = [p for p in pages if not 0 <= p < state.num_pages]
+    if bad:
+        raise ValueError(f"pages {bad} out of range [0, {state.num_pages})")
+    if not n:
+        return state
+    data = data.astype(jnp.uint32).reshape(n, -1)
+    if data.shape[1] != state.page_words:
+        raise ValueError(f"page data must be {state.page_words} words")
+    sec = [i for i, p in enumerate(pages)
+           if state.boundary <= p < state.num_rows]
+    other = [i for i in range(n) if state.boundary > pages[i]
+             or pages[i] >= state.num_rows]
+    if other:
+        if state.layout == Layout.INTERWRAP:
+            ids = jnp.asarray([pages[i] for i in other], jnp.int32)
+            rows, lanes = page_to_wrap_coords(state, ids)
+            chunks = data[jnp.asarray(other)].reshape(
+                len(other), DATA_LANES, state.row_words)
+            state = dataclasses.replace(
+                state, storage=state.storage.at[rows, lanes, :].set(chunks))
+        else:
+            for i in other:
+                state = write_page(state, pages[i], data[i])
+    if sec:
+        rows = jnp.asarray([pages[i] for i in sec], jnp.int32)
+        block = data[jnp.asarray(sec)]
+        storage = state.storage.at[rows, :DATA_LANES, :].set(
+            block.reshape(len(sec), DATA_LANES, state.row_words))
+        storage = storage.at[rows, CODE_LANE, :].set(secded.encode_block(block))
+        state = dataclasses.replace(state, storage=storage)
+    return state
+
+
+# ---------------------------------------------------------------------------
 # Repartitioning — the paper's dynamic boundary moves (§3.3, §4.3.1)
 # ---------------------------------------------------------------------------
+
+
+def evicted_extra_pages(state: PoolState, new_boundary: int) -> list[int]:
+    """Extra-page ids a boundary move to ``new_boundary`` would evict.
+
+    Pure prediction — lets an owner (the VM's migration engine) relocate the
+    pages *before* calling :func:`repartition`, turning the paper's
+    OS-visible capacity loss into a live migration instead of a drop.
+    """
+    if new_boundary >= state.boundary:
+        return []
+    new_extra = extra_page_count(state.layout, new_boundary, state.row_words)
+    return list(range(state.num_rows + new_extra,
+                      state.num_rows + state.num_extra_pages))
 
 
 def repartition(state: PoolState, new_boundary: int
@@ -305,14 +406,11 @@ def repartition(state: PoolState, new_boundary: int
     if new_boundary == old:
         return state, info
 
-    old_extra = state.num_extra_pages
     storage = state.storage
 
     if new_boundary < old:  # CREAM region shrinks -> protect more rows
         # 1) All extra pages with storage above the new CREAM span are lost.
-        new_extra = extra_page_count(state.layout, new_boundary, state.row_words)
-        info["evicted_extra_pages"] = list(
-            range(state.num_rows + new_extra, state.num_rows + old_extra))
+        info["evicted_extra_pages"] = evicted_extra_pages(state, new_boundary)
         # 2) Rows [new_boundary, old) need SECDED codes over their current data.
         for row in range(new_boundary, old):
             # Under INTERWRAP the row's data may be wrap-striped: read the

@@ -12,6 +12,7 @@ Catalogue:
   secded           Hsiao(72,64) encode / fused check+correct
   parity8          8-bit-per-line detection code
   interwrap        Solution-3 wrap-around page gather/scatter (scalar prefetch)
+  migrate          live migration: wrap gather fused with SECDED re-encode
   scrub            fused scrub sweep: decode + correct + census, one pass
   ecc_matmul       beyond-paper: SECDED decode-on-load fused into a matmul
   flash_attention  causal GQA flash attention for long-context serving

@@ -1,0 +1,2 @@
+"""Batched page-migration kernels: InterWrap gather fused with SECDED encode."""
+from repro.kernels.migrate import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,13 @@
+"""Public entry point for the migration gather/re-encode with dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.migrate import kernel, ref
+
+
+def gather_encode(storage: jax.Array, pages: jax.Array, num_rows: int,
+                  use_kernel: bool = True) -> tuple[jax.Array, jax.Array]:
+    if use_kernel:
+        return kernel.gather_encode(storage, pages, num_rows)
+    return ref.gather_encode(storage, pages, num_rows)

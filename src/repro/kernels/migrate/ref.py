@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused migration gather/re-encode."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import secded
+from repro.kernels.interwrap import ref as interwrap_ref
+
+
+def gather_encode(storage: jax.Array, pages: jax.Array, num_rows: int
+                  ) -> tuple[jax.Array, jax.Array]:
+    """(R, 9, W), (n,) -> (data (n, 8W), packed SECDED codes (n, W))."""
+    data = interwrap_ref.gather(storage, pages, num_rows)
+    return data, secded.encode_block(data)

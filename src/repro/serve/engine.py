@@ -4,8 +4,10 @@ A deliberately compact continuous-batching engine:
 
   * requests (prompt, max_new) are admitted into decode slots;
   * when a request pauses (multi-turn think time) its per-sequence decode
-    state is packed and parked in the :class:`SequenceCache` (CREAM pool
-    tier first, host on overflow);
+    state is packed and parked in the :class:`SequenceCache`, which
+    allocates through the CREAM-VM (:mod:`repro.vm`) — device pool tier
+    first, host swap on overflow — so pool repartitions live-migrate
+    parked state instead of dropping it;
   * on resume the state is fetched back — a host fetch is the page fault
     whose frequency the pool's capacity mode controls.
 
@@ -114,5 +116,7 @@ class Engine:
             "host_hits": self.cache.stats.host_hits,
             "evictions": self.cache.stats.evictions,
             "device_pages": self.cache.device_capacity_pages,
+            "device_util": self.cache.device_utilisation,
+            "vm_fault_rate": self.cache.vm.stats.fault_rate,
             "mode": self.cache.mode,
         }

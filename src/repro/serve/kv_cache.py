@@ -1,4 +1,4 @@
-"""CREAM-pool-backed sequence-state cache: the paper's capacity story, served.
+"""CREAM-VM-backed sequence-state cache: the paper's capacity story, served.
 
 Serving keeps many more sequences than fit in one decode batch; parked
 sequences' KV/recurrent state must live *somewhere*. The tier order is
@@ -12,21 +12,28 @@ SSD replaced by host DRAM (same orders-of-magnitude penalty ratio on TPU).
 
 KV pages are protection-free by policy (Fig. 1: caches tolerate loss — a
 lost page is a prefill away), which is what frees the code lane for data.
+
+Storage goes through :class:`repro.vm.VirtualMemory` — the cache is just a
+tenant with an LRU policy. It no longer owns raw pool page ids, so a
+protection upgrade on the underlying pool (driven by
+:class:`repro.vm.policy.VMPolicy`) live-migrates parked sequences instead of
+dropping them, and the pool can be shared with other tenants.
 """
 from __future__ import annotations
 
 import math
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pool as pool_lib
 from repro.core.layouts import Layout
-from repro.core.pool import PoolState, make_pool
+from repro.core.pool import PoolState
+from repro.core.protection import Protection
+from repro.vm.address_space import VirtualMemory
 
 
 @dataclass
@@ -46,60 +53,72 @@ class CacheStats:
 
 @dataclass
 class _Entry:
-    pages: list[int] | None     # device pages, or None if on host
+    vpns: list[int]
     nbytes: int
-    host_copy: np.ndarray | None = None
 
 
 class SequenceCache:
-    """LRU cache of per-sequence state blobs over (CREAM pool, host) tiers."""
+    """LRU cache of per-sequence state blobs, allocated through the VM."""
+
+    POOL = "kv"
 
     def __init__(self, num_rows: int, mode: str = "cream",
-                 row_words: int = 256):
-        """mode: 'cream' (InterWrap, +12.5% pages) | 'secded' (baseline ECC)."""
-        if mode == "cream":
-            self.pool = make_pool(num_rows, Layout.INTERWRAP,
-                                  row_words=row_words)
-        elif mode == "secded":
-            self.pool = make_pool(num_rows, Layout.INTERWRAP, boundary=0,
-                                  row_words=row_words)
-        else:
+                 row_words: int = 256, vm: VirtualMemory | None = None,
+                 tenant: str = "kv"):
+        """mode: 'cream' (InterWrap, +12.5% pages) | 'secded' (baseline ECC).
+
+        Pass an existing ``vm`` (with a pool named ``"kv"``) to share pools
+        with other tenants; otherwise a private one-pool VM is built.
+        """
+        if mode not in ("cream", "secded"):
             raise ValueError(mode)
+        if vm is None:
+            vm = VirtualMemory(row_words=row_words)
+            vm.add_pool(self.POOL, num_rows, Layout.INTERWRAP,
+                        boundary=None if mode == "cream" else 0)
+        self.vm = vm
+        self.tenant = tenant
+        reliability = Protection.NONE if mode == "cream" \
+            else Protection.SECDED
+        vm.create_tenant(tenant, default_reliability=reliability)
         self.mode = mode
-        self.free_pages = list(range(self.pool.num_pages))
         self.lru: OrderedDict[str, _Entry] = OrderedDict()
         self.stats = CacheStats()
 
     @property
+    def pool(self) -> PoolState:
+        return self.vm.pools[self.POOL]
+
+    @property
     def device_capacity_pages(self) -> int:
-        return self.pool.num_pages
+        return self.vm.device_capacity_pages()
+
+    @property
+    def device_utilisation(self) -> float:
+        return self.vm.utilisation()
 
     def pages_needed(self, nbytes: int) -> int:
-        return math.ceil(nbytes / self.pool.page_bytes)
+        return math.ceil(nbytes / self.vm.page_bytes)
 
     # -- write ---------------------------------------------------------------
     def park(self, seq_id: str, blob: np.ndarray) -> None:
         """Store a sequence's state (uint8 blob). Evicts LRU to host if full."""
         if seq_id in self.lru:
-            self._drop_device(self.lru.pop(seq_id))
+            self.vm.free(self.tenant, self.lru.pop(seq_id).vpns)
         nbytes = blob.nbytes
         n = self.pages_needed(nbytes)
-        while len(self.free_pages) < n and self._any_device_resident():
-            self._evict_one()
-        entry = _Entry(pages=None, nbytes=nbytes)
-        if len(self.free_pages) >= n:
-            pages = [self.free_pages.pop() for _ in range(n)]
-            words = np.zeros(n * self.pool.page_words, np.uint32)
-            padded = np.frombuffer(
-                blob.tobytes() + b"\0" * ((-nbytes) % 4), dtype=np.uint32)
-            words[:len(padded)] = padded
-            self.pool = pool_lib.write_pages_batch(
-                self.pool, jnp.asarray(pages, jnp.int32),
-                jnp.asarray(words.reshape(n, -1)))
-            entry.pages = pages
-        else:
-            entry.host_copy = blob.copy()
-        self.lru[seq_id] = entry
+        # zero=False: every allocated page is overwritten just below
+        vpns = self.vm.alloc(self.tenant, n, allow_host=False, zero=False)
+        while vpns is None and self._evict_one():
+            vpns = self.vm.alloc(self.tenant, n, allow_host=False, zero=False)
+        if vpns is None:             # device full of pinned pages -> host
+            vpns = self.vm.alloc(self.tenant, n, allow_host=True, zero=False)
+        words = np.zeros(n * self.vm.page_words, np.uint32)
+        padded = np.frombuffer(
+            blob.tobytes() + b"\0" * ((-nbytes) % 4), dtype=np.uint32)
+        words[:len(padded)] = padded
+        self.vm.write(self.tenant, vpns, words.reshape(n, -1))
+        self.lru[seq_id] = _Entry(vpns, nbytes)
         self.lru.move_to_end(seq_id)
 
     # -- read ----------------------------------------------------------------
@@ -111,40 +130,28 @@ class SequenceCache:
             return None
         self.lru.move_to_end(seq_id)
         t0 = time.perf_counter()
-        if entry.pages is not None:
-            data = pool_lib.read_pages_batch(
-                self.pool, jnp.asarray(entry.pages, jnp.int32))
-            blob = np.asarray(data).view(np.uint8).reshape(-1)[:entry.nbytes]
-            self.stats.device_hits += 1
-            self.stats.device_fetch_s += time.perf_counter() - t0
-        else:
-            blob = entry.host_copy
-            # charge a host->device transfer (the "page fault")
+        on_host = self.vm.residency(self.tenant, entry.vpns) != "device"
+        data = self.vm.read(self.tenant, entry.vpns)
+        blob = np.asarray(data).view(np.uint8).reshape(-1)[:entry.nbytes]
+        if on_host:
+            # charge the host->device transfer (the "page fault")
             _ = jax.device_put(blob).block_until_ready()
             self.stats.host_hits += 1
             self.stats.host_fetch_s += time.perf_counter() - t0
+        else:
+            self.stats.device_hits += 1
+            self.stats.device_fetch_s += time.perf_counter() - t0
         return np.asarray(blob, np.uint8).copy()
 
-    # -- internals -------------------------------------------------------------
-    def _any_device_resident(self) -> bool:
-        return any(e.pages is not None for e in self.lru.values())
-
-    def _evict_one(self) -> None:
+    # -- internals -----------------------------------------------------------
+    def _evict_one(self) -> bool:
+        """Demote the LRU device-resident entry to the host tier."""
         for sid, e in self.lru.items():      # oldest first
-            if e.pages is not None:
-                data = pool_lib.read_pages_batch(
-                    self.pool, jnp.asarray(e.pages, jnp.int32))
-                e.host_copy = np.asarray(data).view(np.uint8).reshape(-1)[
-                    :e.nbytes].copy()
-                self._drop_device(e)
+            if self.vm.residency(self.tenant, e.vpns) != "host":
+                self.vm.swap_out(self.tenant, e.vpns)
                 self.stats.evictions += 1
-                return
-        raise RuntimeError("nothing to evict")
-
-    def _drop_device(self, e: _Entry) -> None:
-        if e.pages is not None:
-            self.free_pages.extend(e.pages)
-            e.pages = None
+                return True
+        return False
 
 
 def pack_tree(tree) -> tuple[np.ndarray, list]:

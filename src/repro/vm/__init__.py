@@ -1,0 +1,31 @@
+"""CREAM-VM — a multi-tenant virtual memory subsystem over CREAM pools.
+
+The paper's capacity story only pays off when an OS-like layer hands the
+reclaimed pages to applications and reclaims them back when protection is
+upgraded (§3.3, §4.3.1). This package is that layer:
+
+  * :mod:`repro.vm.address_space` — per-tenant page tables (virtual page id →
+    (pool, physical page)), HRM-style reliability classes per tenant/segment
+    (SECDED / PARITY / NONE), and a mode-aware frame allocator whose free
+    lists track extra-page capacity as pool boundaries move;
+  * :mod:`repro.vm.migration`     — a live migration engine that relocates
+    pages across pools and protection modes (batched Pallas gather/re-encode
+    via :mod:`repro.kernels.migrate`), with a host swap tier for overflow;
+    its :meth:`~repro.vm.migration.MigrationEngine.repartition_with_migration`
+    turns a boundary upgrade's eviction into a zero-loss relocation;
+  * :mod:`repro.vm.policy`        — the bridge from the scrub → monitor →
+    recommend loop (:mod:`repro.core.monitor`) to VM-level repartition +
+    migrate transactions.
+
+The serving stack (:mod:`repro.serve.kv_cache`) allocates through this layer
+instead of raw pool page ids.
+"""
+from repro.vm.address_space import (PTE, AddressSpace, FrameAllocator,
+                                    VirtualMemory, VMStats, frame_class)
+from repro.vm.migration import MigrationEngine, MigrationStats
+from repro.vm.policy import VMPolicy
+
+__all__ = [
+    "PTE", "AddressSpace", "FrameAllocator", "VirtualMemory", "VMStats",
+    "frame_class", "MigrationEngine", "MigrationStats", "VMPolicy",
+]

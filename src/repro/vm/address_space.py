@@ -1,0 +1,421 @@
+"""Address spaces, page tables, and the mode-aware frame allocator.
+
+Terminology (OS analogue over the paper's hardware):
+
+  * **frame** — one physical pool page: ``(pool_name, phys)`` where ``phys``
+    follows the pool's page-id convention (regular pages ``[0, R)``, extra
+    pages ``[R, R + extra)``);
+  * **storage class** — the protection a frame provides *today*, derived from
+    its pool's boundary register: SECDED for rows in ``[boundary, R)``, the
+    CREAM layout's protection (PARITY or NONE) elsewhere. Classes shift when
+    the boundary moves — the allocator's free lists are rebuilt in lockstep;
+  * **reliability class** — what a tenant *requested* for a segment
+    (Heterogeneous-Reliability-Memory style: per-data-region choice). A frame
+    may serve a request iff its storage class is at least as strong, so a
+    protection upgrade never violates a mapping while a downgrade forces the
+    migration engine to relocate stricter tenants first;
+  * **host swap tier** — overflow residency: page contents parked in host
+    memory (``PTE.pool is None``). Reads from it are the page faults whose
+    frequency the capacity mode controls.
+
+All data-plane traffic goes through :meth:`VirtualMemory.read` /
+:meth:`VirtualMemory.write`, which batch per pool via
+:func:`repro.core.pool.read_pages_any` / ``write_pages_any``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pool as pool_lib
+from repro.core.layouts import DEFAULT_ROW_WORDS, Layout
+from repro.core.pool import PoolState, make_pool
+from repro.core.protection import _ORDER, Protection
+
+
+def cream_protection(layout: Layout) -> Protection:
+    """Protection a CREAM-region frame provides under ``layout``."""
+    if layout == Layout.BASELINE_ECC:
+        return Protection.SECDED
+    return Protection.PARITY if layout == Layout.PARITY else Protection.NONE
+
+
+def frame_class(state: PoolState, phys: int) -> Protection:
+    """Storage class of frame ``phys`` under the pool's current boundary."""
+    if state.boundary <= phys < state.num_rows:
+        return Protection.SECDED
+    return cream_protection(state.layout)
+
+
+@dataclass
+class PTE:
+    """Page-table entry: where one virtual page lives right now."""
+    pool: str | None            # None -> host swap tier
+    phys: int                   # physical page id, or host swap slot
+    reliability: Protection     # requested class (the contract)
+    segment: str = "default"
+
+
+class AddressSpace:
+    """Per-tenant page table + segment reliability defaults."""
+
+    def __init__(self, tenant: str,
+                 default_reliability: Protection = Protection.NONE):
+        self.tenant = tenant
+        self.entries: dict[int, PTE] = {}
+        self.segments: dict[str, Protection] = {
+            "default": default_reliability}
+        self._next_vpn = 0
+
+    def add_segment(self, name: str, reliability: Protection) -> None:
+        self.segments[name] = reliability
+
+    def new_vpn(self) -> int:
+        vpn = self._next_vpn
+        self._next_vpn += 1
+        return vpn
+
+    @property
+    def num_pages(self) -> int:
+        return len(self.entries)
+
+
+class FrameAllocator:
+    """Free lists over one pool's frames, keyed by storage class.
+
+    ``owner`` maps a mapped frame to its ``(tenant, vpn)`` — the reverse
+    translation the migration engine walks when a boundary move dooms frames.
+    """
+
+    def __init__(self, state: PoolState):
+        self.free: dict[Protection, list[int]] = {}
+        self.owner: dict[int, tuple[str, int]] = {}
+        self.rebuild(state)
+
+    def rebuild(self, state: PoolState) -> None:
+        """Recompute free lists after a boundary move.
+
+        Every surviving frame keeps its page id across repartitions (regular
+        pages by row, extra pages by group), so ownership carries over; a
+        still-owned frame that no longer exists means the caller forgot to
+        migrate it first — refuse, that would silently lose data.
+        """
+        lost = [p for p in self.owner if p >= state.num_pages]
+        if lost:
+            raise RuntimeError(
+                f"frames {lost} are mapped but no longer exist; "
+                "relocate them before repartitioning")
+        self.free = {p: [] for p in _ORDER}
+        for phys in range(state.num_pages):
+            if phys not in self.owner:
+                self.free[frame_class(state, phys)].append(phys)
+
+    def peek(self, reliability: Protection, count: int,
+             exclude: set[int] | None = None) -> list[int]:
+        """Up to ``count`` free frames of class >= ``reliability`` (no pop).
+
+        Exact class first, then stronger — over-protecting is allowed,
+        under-protecting never is.
+        """
+        exclude = exclude or set()
+        picks: list[int] = []
+        for cls in _ORDER[_ORDER.index(reliability):]:
+            for phys in self.free[cls]:
+                if phys in exclude:
+                    continue
+                picks.append(phys)
+                if len(picks) == count:
+                    return picks
+        return picks
+
+    def claim(self, phys: int, tenant: str, vpn: int) -> None:
+        for lst in self.free.values():
+            if phys in lst:
+                lst.remove(phys)
+                self.owner[phys] = (tenant, vpn)
+                return
+        raise KeyError(f"frame {phys} is not free")
+
+    def release(self, state: PoolState, phys: int) -> None:
+        del self.owner[phys]
+        self.free[frame_class(state, phys)].append(phys)
+
+    @property
+    def used(self) -> int:
+        return len(self.owner)
+
+
+@dataclass
+class VMStats:
+    """Data-plane traffic census (host reads are the page faults)."""
+    device_reads: int = 0
+    host_reads: int = 0
+    device_writes: int = 0
+    host_writes: int = 0
+
+    @property
+    def fault_rate(self) -> float:
+        total = self.device_reads + self.host_reads
+        return self.host_reads / total if total else 0.0
+
+
+class VirtualMemory:
+    """Multi-tenant virtual memory over a set of CREAM pools + host swap."""
+
+    def __init__(self, row_words: int = DEFAULT_ROW_WORDS):
+        self.row_words = row_words
+        self.pools: dict[str, PoolState] = {}
+        self.allocators: dict[str, FrameAllocator] = {}
+        self.tenants: dict[str, AddressSpace] = {}
+        self.swap: dict[int, np.ndarray] = {}
+        self._next_slot = 0
+        self.stats = VMStats()
+
+    # -- setup ---------------------------------------------------------------
+    def add_pool(self, name: str, num_rows: int,
+                 layout: Layout = Layout.INTERWRAP,
+                 boundary: int | None = None) -> PoolState:
+        if name in self.pools:
+            raise ValueError(f"pool {name!r} exists")
+        state = make_pool(num_rows, layout, boundary=boundary,
+                          row_words=self.row_words)
+        self.pools[name] = state
+        self.allocators[name] = FrameAllocator(state)
+        return state
+
+    def adopt_pool(self, name: str, state: PoolState) -> None:
+        """Bring an existing pool under VM management (frames all free)."""
+        if state.row_words != self.row_words:
+            raise ValueError("row_words mismatch")
+        self.pools[name] = state
+        self.allocators[name] = FrameAllocator(state)
+
+    def create_tenant(self, name: str,
+                      default_reliability: Protection = Protection.NONE,
+                      segments: dict[str, Protection] | None = None
+                      ) -> AddressSpace:
+        if name in self.tenants:
+            raise ValueError(f"tenant {name!r} exists")
+        space = AddressSpace(name, default_reliability)
+        for seg, rel in (segments or {}).items():
+            space.add_segment(seg, rel)
+        self.tenants[name] = space
+        return space
+
+    # -- geometry ------------------------------------------------------------
+    @property
+    def page_words(self) -> int:
+        return 8 * self.row_words
+
+    @property
+    def page_bytes(self) -> int:
+        return 4 * self.page_words
+
+    def device_capacity_pages(self, pool: str | None = None) -> int:
+        names = [pool] if pool else list(self.pools)
+        return sum(self.pools[n].num_pages for n in names)
+
+    def used_device_pages(self, pool: str | None = None) -> int:
+        names = [pool] if pool else list(self.pools)
+        return sum(self.allocators[n].used for n in names)
+
+    def utilisation(self, pool: str | None = None) -> float:
+        cap = self.device_capacity_pages(pool)
+        return self.used_device_pages(pool) / cap if cap else 0.0
+
+    def capacity_report(self) -> dict[str, dict]:
+        out = {}
+        for name, state in self.pools.items():
+            alloc = self.allocators[name]
+            out[name] = {
+                "layout": state.layout.value,
+                "rows": state.num_rows,
+                "boundary": state.boundary,
+                "pages": state.num_pages,
+                "extra_pages": state.num_extra_pages,
+                "used": alloc.used,
+                "free": {p.value: len(lst) for p, lst in alloc.free.items()},
+                "gain": state.capacity_gain(),
+            }
+        out["host_swap_pages"] = len(self.swap)
+        return out
+
+    # -- translation ---------------------------------------------------------
+    def translate(self, tenant: str, vpn: int) -> PTE:
+        return self.tenants[tenant].entries[vpn]
+
+    def effective_protection(self, tenant: str, vpn: int) -> Protection | None:
+        """Storage class actually backing a page (None = host tier)."""
+        pte = self.translate(tenant, vpn)
+        if pte.pool is None:
+            return None
+        return frame_class(self.pools[pte.pool], pte.phys)
+
+    def residency(self, tenant: str, vpns) -> str:
+        tiers = {"host" if self.translate(tenant, v).pool is None else "device"
+                 for v in vpns}
+        return tiers.pop() if len(tiers) == 1 else "mixed"
+
+    # -- allocation ----------------------------------------------------------
+    def alloc(self, tenant: str, n: int, segment: str = "default",
+              reliability: Protection | None = None,
+              allow_host: bool = True, zero: bool = True
+              ) -> list[int] | None:
+        """Allocate ``n`` virtual pages; returns their vpns.
+
+        Frames come from any pool with storage class >= the segment's
+        reliability class (exact class preferred, then stronger). Overflow
+        lands in the host swap tier unless ``allow_host=False``, in which
+        case the allocation either fits on device or returns None untouched.
+
+        ``zero=False`` skips scrubbing the claimed device frames — only for
+        callers that overwrite every page before any read (the frames may
+        still hold a previous tenant's bits until then).
+        """
+        space = self.tenants[tenant]
+        rel = reliability if reliability is not None \
+            else space.segments[segment]
+        picks: list[tuple[str, int]] = []
+        for pool_name, alloc in self.allocators.items():
+            for phys in alloc.peek(rel, n - len(picks)):
+                picks.append((pool_name, phys))
+            if len(picks) == n:
+                break
+        if len(picks) < n and not allow_host:
+            return None
+        vpns = []
+        for i in range(n):
+            vpn = space.new_vpn()
+            if i < len(picks):
+                pool_name, phys = picks[i]
+                self.allocators[pool_name].claim(phys, tenant, vpn)
+                space.entries[vpn] = PTE(pool_name, phys, rel, segment)
+            else:
+                slot = self._new_slot()
+                self.swap[slot] = np.zeros(self.page_words, np.uint32)
+                space.entries[vpn] = PTE(None, slot, rel, segment)
+            vpns.append(vpn)
+        # zero the claimed device frames: a fresh mapping must never expose
+        # another tenant's freed contents (host slots are zeroed above)
+        if zero:
+            by_pool: dict[str, list[int]] = {}
+            for pool_name, phys in picks:
+                by_pool.setdefault(pool_name, []).append(phys)
+            for pool_name, phys_list in by_pool.items():
+                self.pools[pool_name] = pool_lib.write_pages_any(
+                    self.pools[pool_name], phys_list,
+                    jnp.zeros((len(phys_list), self.page_words), jnp.uint32))
+        return vpns
+
+    def free(self, tenant: str, vpns) -> None:
+        space = self.tenants[tenant]
+        for vpn in vpns:
+            pte = space.entries.pop(vpn)
+            if pte.pool is None:
+                self.swap.pop(pte.phys, None)
+            else:
+                self.allocators[pte.pool].release(self.pools[pte.pool],
+                                                  pte.phys)
+
+    def _new_slot(self) -> int:
+        slot = self._next_slot
+        self._next_slot += 1
+        return slot
+
+    # -- data plane ----------------------------------------------------------
+    def write(self, tenant: str, vpns, data: jax.Array | np.ndarray) -> None:
+        """Write ``(n, page_words)`` uint32 through the page tables."""
+        vpns = list(vpns)
+        data = jnp.asarray(data, jnp.uint32).reshape(len(vpns), -1)
+        if data.shape[1] != self.page_words:
+            raise ValueError(f"expected (n, {self.page_words}) words")
+        space = self.tenants[tenant]
+        by_pool: dict[str, list[tuple[int, int]]] = {}
+        for i, vpn in enumerate(vpns):
+            pte = space.entries[vpn]
+            if pte.pool is None:
+                self.swap[pte.phys] = np.asarray(data[i], np.uint32).copy()
+                self.stats.host_writes += 1
+            else:
+                by_pool.setdefault(pte.pool, []).append((i, pte.phys))
+        for pool_name, items in by_pool.items():
+            idx = [i for i, _ in items]
+            phys = [p for _, p in items]
+            self.pools[pool_name] = pool_lib.write_pages_any(
+                self.pools[pool_name], phys, data[jnp.asarray(idx)])
+            self.stats.device_writes += len(items)
+
+    def read(self, tenant: str, vpns) -> jax.Array:
+        """Read ``(n, page_words)`` uint32 through the page tables.
+
+        Host-resident pages are served from the swap tier (counted as
+        faults in :attr:`stats`); device pages are decode-corrected batch
+        gathers per pool.
+        """
+        vpns = list(vpns)
+        space = self.tenants[tenant]
+        out: list = [None] * len(vpns)
+        by_pool: dict[str, list[tuple[int, int]]] = {}
+        for i, vpn in enumerate(vpns):
+            pte = space.entries[vpn]
+            if pte.pool is None:
+                # the "page fault": host -> device transfer charged here
+                out[i] = jnp.asarray(self.swap[pte.phys])
+                self.stats.host_reads += 1
+            else:
+                by_pool.setdefault(pte.pool, []).append((i, pte.phys))
+        for pool_name, items in by_pool.items():
+            data = pool_lib.read_pages_any(
+                self.pools[pool_name], [p for _, p in items])
+            for j, (i, _) in enumerate(items):
+                out[i] = data[j]
+            self.stats.device_reads += len(items)
+        if not out:
+            return jnp.zeros((0, self.page_words), jnp.uint32)
+        return jnp.stack(out)
+
+    # -- swap tier -----------------------------------------------------------
+    def swap_out(self, tenant: str, vpns) -> int:
+        """Demote device-resident pages to the host tier; returns count."""
+        space = self.tenants[tenant]
+        device = [v for v in vpns if space.entries[v].pool is not None]
+        if not device:
+            return 0
+        data = np.asarray(self.read(tenant, device), np.uint32)
+        self.stats.device_reads -= len(device)   # internal move, not traffic
+        for j, vpn in enumerate(device):
+            pte = space.entries[vpn]
+            self.allocators[pte.pool].release(self.pools[pte.pool], pte.phys)
+            slot = self._new_slot()
+            self.swap[slot] = data[j].copy()
+            space.entries[vpn] = PTE(None, slot, pte.reliability, pte.segment)
+        return len(device)
+
+    def swap_in(self, tenant: str, vpns) -> int:
+        """Promote host-resident pages back to device frames (best effort)."""
+        space = self.tenants[tenant]
+        promoted = 0
+        for vpn in vpns:
+            pte = space.entries[vpn]
+            if pte.pool is not None:
+                continue
+            home = None
+            for pool_name, alloc in self.allocators.items():
+                picks = alloc.peek(pte.reliability, 1)
+                if picks:
+                    home = (pool_name, picks[0])
+                    break
+            if home is None:
+                continue
+            pool_name, phys = home
+            self.allocators[pool_name].claim(phys, tenant, vpn)
+            blob = self.swap.pop(pte.phys)
+            self.pools[pool_name] = pool_lib.write_pages_any(
+                self.pools[pool_name], [phys], jnp.asarray(blob)[None, :])
+            space.entries[vpn] = PTE(pool_name, phys, pte.reliability,
+                                     pte.segment)
+            promoted += 1
+        return promoted

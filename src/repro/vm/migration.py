@@ -1,0 +1,258 @@
+"""Live page migration across pools, protection modes, and the host tier.
+
+The engine turns two events into zero-loss relocations:
+
+  * **protection upgrade** (boundary shrinks, SECDED region grows): the
+    paper's repartition *evicts* the extra pages whose storage lived in the
+    reclaimed code lanes. :meth:`MigrationEngine.repartition_with_migration`
+    predicts the doomed frames (:func:`repro.core.pool.evicted_extra_pages`),
+    reads them out in one fused Pallas gather/re-encode batch
+    (:mod:`repro.kernels.migrate`), repartitions, then lands them in new
+    frames — same-or-stronger class, any pool, host swap for overflow;
+  * **protection downgrade** (boundary grows, capacity reclaimed): frames in
+    the surrendered SECDED span weaken to the CREAM layout's class, so pages
+    whose tenants contracted for stronger protection are relocated first —
+    the HARP-style "move hot data away from weakening rows" motion.
+
+Destination writes for SECDED frames reuse the codes the kernel already
+computed (no second encode pass); everything else goes through
+``write_pages_any`` which maintains codes per layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pool as pool_lib
+from repro.core.layouts import CODE_LANE, DATA_LANES, GROUP_ROWS, Layout
+from repro.core.pool import PoolState
+from repro.core.protection import at_least
+from repro.kernels.migrate import ops as migrate_ops
+from repro.vm.address_space import PTE, VirtualMemory, cream_protection
+
+
+@dataclass
+class MigrationStats:
+    pages_moved: int = 0
+    bytes_moved: int = 0
+    to_host: int = 0
+    transactions: int = 0
+    kernel_batches: int = 0
+    seconds: float = 0.0
+
+    @property
+    def throughput_pages_s(self) -> float:
+        return self.pages_moved / self.seconds if self.seconds else 0.0
+
+    @property
+    def throughput_mb_s(self) -> float:
+        return self.bytes_moved / 2**20 / self.seconds if self.seconds else 0.0
+
+
+class MigrationEngine:
+    """Relocates mapped pages between frames without losing contents."""
+
+    def __init__(self, vm: VirtualMemory, use_kernel: bool = True):
+        self.vm = vm
+        self.use_kernel = use_kernel
+        self.stats = MigrationStats()
+
+    # -- building blocks -----------------------------------------------------
+    def _read_frames(self, state: PoolState, phys: list[int]
+                     ) -> tuple[jnp.ndarray, jnp.ndarray | None]:
+        """Batch-read frames -> (data, precomputed SECDED codes or None)."""
+        if state.layout == Layout.INTERWRAP and all(
+                p < state.boundary or p >= state.num_rows for p in phys):
+            data, codes = migrate_ops.gather_encode(
+                state.storage, jnp.asarray(phys, jnp.int32), state.num_rows,
+                use_kernel=self.use_kernel)
+            self.stats.kernel_batches += 1
+            return data, codes
+        return pool_lib.read_pages_any(state, phys), None
+
+    def _write_frames(self, pool_name: str, phys: list[int],
+                      data: jnp.ndarray, codes: jnp.ndarray | None) -> None:
+        """Batch-write frames, reusing precomputed codes where they apply."""
+        vm = self.vm
+        state = vm.pools[pool_name]
+        if codes is not None and all(
+                state.boundary <= p < state.num_rows for p in phys):
+            rows = jnp.asarray(phys, jnp.int32)
+            storage = state.storage.at[rows, :DATA_LANES, :].set(
+                data.reshape(len(phys), DATA_LANES, state.row_words))
+            storage = storage.at[rows, CODE_LANE, :].set(codes)
+            vm.pools[pool_name] = dataclasses.replace(state, storage=storage)
+        else:
+            vm.pools[pool_name] = pool_lib.write_pages_any(state, phys, data)
+
+    def _place(self, data: jnp.ndarray, codes: jnp.ndarray | None,
+               victims: list[tuple[str, int, PTE]],
+               exclude: dict[str, set[int]]) -> None:
+        """Land read-out pages in fresh frames (or host) and remap PTEs.
+
+        Destination pools are tried in registration order, except that a
+        victim's own source pool is tried last — migration should move data
+        *away* unless nowhere else has room.
+        """
+        vm = self.vm
+        by_pool: dict[str, list[tuple[int, int]]] = {}
+        host = None                   # D2H copy made lazily, on first overflow
+        for i, (tenant, vpn, pte) in enumerate(victims):
+            home = None
+            ordered = sorted(vm.allocators.items(),
+                             key=lambda kv: kv[0] == pte.pool)
+            for pool_name, alloc in ordered:
+                picks = alloc.peek(pte.reliability, 1,
+                                   exclude=exclude.get(pool_name))
+                if picks:
+                    home = (pool_name, picks[0])
+                    break
+            space = vm.tenants[tenant]
+            if home is None:          # overflow -> host swap tier
+                if host is None:
+                    host = np.asarray(data, np.uint32)
+                slot = vm._new_slot()
+                vm.swap[slot] = host[i].copy()
+                space.entries[vpn] = PTE(None, slot, pte.reliability,
+                                         pte.segment)
+                self.stats.to_host += 1
+            else:
+                pool_name, phys = home
+                vm.allocators[pool_name].claim(phys, tenant, vpn)
+                space.entries[vpn] = PTE(pool_name, phys, pte.reliability,
+                                         pte.segment)
+                by_pool.setdefault(pool_name, []).append((i, phys))
+        for pool_name, items in by_pool.items():
+            idx = jnp.asarray([i for i, _ in items])
+            sub_codes = codes[idx] if codes is not None else None
+            self._write_frames(pool_name, [p for _, p in items],
+                               data[idx], sub_codes)
+        self.stats.pages_moved += len(victims)
+        self.stats.bytes_moved += len(victims) * vm.page_bytes
+
+    # -- ad-hoc migration ----------------------------------------------------
+    def relocate(self, tenant: str, vpns, avoid_pool: str | None = None
+                 ) -> int:
+        """Move pages off their current frames (e.g. away from a weakening
+        pool), preferring other pools; host swap on overflow."""
+        vm = self.vm
+        t0 = time.perf_counter()
+        space = vm.tenants[tenant]
+        victims = []
+        by_pool: dict[str, list[int]] = {}
+        for vpn in vpns:
+            pte = space.entries[vpn]
+            if pte.pool is None:
+                continue
+            victims.append((tenant, vpn, pte))
+            by_pool.setdefault(pte.pool, []).append(len(victims) - 1)
+        if not victims:
+            return 0
+        datas: list = [None] * len(victims)
+        all_codes: list = [None] * len(victims)
+        have_codes = True
+        for pool_name, idxs in by_pool.items():
+            phys = [victims[i][2].phys for i in idxs]
+            data, codes = self._read_frames(vm.pools[pool_name], phys)
+            for j, i in enumerate(idxs):
+                datas[i] = data[j]
+                all_codes[i] = codes[j] if codes is not None else None
+            have_codes = have_codes and codes is not None
+        # free the source frames, but bar them (and any avoided pool) as
+        # destinations for this transaction — relocation must actually move
+        exclude: dict[str, set[int]] = {}
+        for tenant_, vpn, pte in victims:
+            vm.allocators[pte.pool].release(vm.pools[pte.pool], pte.phys)
+            exclude.setdefault(pte.pool, set()).add(pte.phys)
+        if avoid_pool is not None:
+            exclude[avoid_pool] = set(range(
+                vm.pools[avoid_pool].num_pages))
+        self._place(jnp.stack(datas),
+                    jnp.stack(all_codes) if have_codes else None,
+                    victims, exclude)
+        self.stats.transactions += 1
+        self.stats.seconds += time.perf_counter() - t0
+        return len(victims)
+
+    # -- the transaction -----------------------------------------------------
+    def repartition_with_migration(self, pool_name: str, new_boundary: int
+                                   ) -> dict:
+        """Move a pool's boundary without losing a single mapped page.
+
+        Upgrade (shrink): doomed extra pages are read out (fused Pallas
+        gather/re-encode batch), the boundary moves, and the pages land in
+        fresh frames / host swap. Downgrade (grow): mapped pages whose
+        reliability contract exceeds the weakened class are relocated out of
+        the surrendered span first; the new extra pages join the free lists.
+        """
+        vm = self.vm
+        state = vm.pools[pool_name]
+        alloc = vm.allocators[pool_name]
+        old = state.boundary
+        # validate before touching any mapping: a bad boundary must not
+        # leave half-unmapped victims behind
+        if new_boundary % GROUP_ROWS or not 0 <= new_boundary <= state.num_rows:
+            raise ValueError(f"bad boundary {new_boundary}")
+        t0 = time.perf_counter()
+        info = {"pool": pool_name, "old_boundary": old,
+                "new_boundary": new_boundary, "migrated": 0, "to_host": 0,
+                "evicted_unmapped": 0}
+        if new_boundary == old:
+            return info
+        host_before = self.stats.to_host
+
+        if new_boundary < old:      # upgrade: SECDED region grows
+            doomed = pool_lib.evicted_extra_pages(state, new_boundary)
+            victims = []
+            for phys in doomed:
+                if phys in alloc.owner:
+                    tenant, vpn = alloc.owner[phys]
+                    victims.append((tenant, vpn,
+                                    vm.tenants[tenant].entries[vpn]))
+                else:       # free frame: simply vanishes in the rebuild
+                    info["evicted_unmapped"] += 1
+            data = codes = None
+            if victims:
+                data, codes = self._read_frames(
+                    state, [pte.phys for _, _, pte in victims])
+                for _, _, pte in victims:     # unmap before the frame dies
+                    del alloc.owner[pte.phys]
+            new_state, _ = pool_lib.repartition(state, new_boundary)
+            vm.pools[pool_name] = new_state
+            alloc.rebuild(new_state)
+            if victims:
+                # surviving frames of this pool are fair game as destinations
+                self._place(data, codes, victims, exclude={})
+            info["migrated"] = len(victims)
+        else:                       # downgrade: capacity reclaimed
+            weak = cream_protection(state.layout)
+            victims = []
+            for phys in range(old, new_boundary):
+                if phys in alloc.owner:
+                    tenant, vpn = alloc.owner[phys]
+                    pte = vm.tenants[tenant].entries[vpn]
+                    if not at_least(weak, pte.reliability):
+                        victims.append((tenant, vpn, pte))
+            data = codes = None
+            if victims:
+                data, codes = self._read_frames(
+                    state, [pte.phys for _, _, pte in victims])
+                for _, _, pte in victims:
+                    del alloc.owner[pte.phys]
+            new_state, _ = pool_lib.repartition(state, new_boundary)
+            vm.pools[pool_name] = new_state
+            alloc.rebuild(new_state)
+            if victims:
+                # the surrendered span is now weak-class: excluded by the
+                # reliability check in peek(), nothing extra to mask
+                self._place(data, None, victims, exclude={})
+            info["migrated"] = len(victims)
+
+        info["to_host"] = self.stats.to_host - host_before
+        self.stats.transactions += 1
+        self.stats.seconds += time.perf_counter() - t0
+        return info

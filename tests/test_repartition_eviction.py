@@ -1,0 +1,91 @@
+"""Repartition eviction paths: exact eviction sets, content preservation,
+and the VM-level guarantee that the same upgrade *migrates* instead.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pool as P
+from repro.core.layouts import Layout, extra_page_count
+from repro.core.protection import Protection
+from repro.vm import MigrationEngine, VirtualMemory
+
+RNG = np.random.default_rng(5)
+ROW_WORDS = 64
+
+
+def filled_pool(rows=32, layout=Layout.INTERWRAP, boundary=None):
+    pool = P.make_pool(rows, layout, boundary=boundary, row_words=ROW_WORDS)
+    pages = {}
+    for page in range(pool.num_pages):
+        data = jnp.asarray(RNG.integers(0, 2**32, pool.page_words,
+                                        dtype=np.uint32))
+        pool = P.write_page(pool, page, data)
+        pages[page] = np.asarray(data)
+    return pool, pages
+
+
+@pytest.mark.parametrize("new_boundary", [24, 16, 8, 0])
+def test_growing_secded_evicts_exactly_trailing_extras(new_boundary):
+    pool, pages = filled_pool(32, Layout.INTERWRAP)   # 4 extras: 32..35
+    new_extra = extra_page_count(Layout.INTERWRAP, new_boundary, ROW_WORDS)
+    predicted = P.evicted_extra_pages(pool, new_boundary)
+    shrunk, info = P.repartition(pool, new_boundary)
+    # exactly the trailing extra pages, and the prediction agrees
+    assert info["evicted_extra_pages"] == list(range(32 + new_extra, 36))
+    assert info["evicted_extra_pages"] == predicted
+    assert shrunk.num_extra_pages == new_extra
+
+
+@pytest.mark.parametrize("new_boundary", [16, 0])
+def test_growing_secded_preserves_regular_and_surviving_extras(new_boundary):
+    pool, pages = filled_pool(32, Layout.INTERWRAP)
+    shrunk, info = P.repartition(pool, new_boundary)
+    survivors = [p for p in pages if p not in info["evicted_extra_pages"]]
+    for page in survivors:
+        got, status = P.read_page(shrunk, page)
+        np.testing.assert_array_equal(np.asarray(got), pages[page],
+                                      err_msg=f"page {page}")
+        assert int(status) == 0
+
+
+def test_shrinking_secded_preserves_contents_and_adds_extras():
+    pool, pages = filled_pool(32, Layout.INTERWRAP, boundary=0)
+    grown, info = P.repartition(pool, 32)
+    assert info["evicted_extra_pages"] == []
+    assert grown.num_extra_pages == 4
+    for page in pages:
+        got, _ = P.read_page(grown, page)
+        np.testing.assert_array_equal(np.asarray(got), pages[page])
+
+
+def test_parity_pool_eviction_set():
+    pool, _ = filled_pool(32, Layout.PARITY)
+    predicted = P.evicted_extra_pages(pool, 16)
+    _, info = P.repartition(pool, 16)
+    assert info["evicted_extra_pages"] == predicted
+    assert predicted == list(range(
+        32 + extra_page_count(Layout.PARITY, 16, ROW_WORDS),
+        32 + extra_page_count(Layout.PARITY, 32, ROW_WORDS)))
+
+
+def test_vm_level_upgrade_migrates_instead_of_evicting():
+    """The same boundary move that evicts raw-pool extras loses nothing
+    when driven through the VM's migration transaction."""
+    vm = VirtualMemory(row_words=ROW_WORDS)
+    vm.add_pool("p0", 32, Layout.INTERWRAP)           # extras 32..35
+    vm.create_tenant("t", default_reliability=Protection.NONE)
+    vpns = vm.alloc("t", 36, allow_host=False)
+    data = jnp.asarray(RNG.integers(0, 2**32, (36, vm.page_words),
+                                    dtype=np.uint32))
+    vm.write("t", vpns, data)
+
+    # raw-pool ground truth: this move would evict 4 pages
+    assert len(P.evicted_extra_pages(vm.pools["p0"], 0)) == 4
+
+    eng = MigrationEngine(vm)
+    info = eng.repartition_with_migration("p0", 0)
+    assert info["migrated"] == 4 and info["evicted_unmapped"] == 0
+    assert (vm.read("t", vpns) == data).all()          # zero lost pages
+    # the four migrated pages overflowed to the host tier (pool was full)
+    assert info["to_host"] == 4

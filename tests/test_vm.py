@@ -1,0 +1,295 @@
+"""CREAM-VM: page tables, reliability classes, live migration, policy loop."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.layouts import Layout
+from repro.core.monitor import MonitorConfig
+from repro.core.protection import Protection
+from repro.vm import MigrationEngine, VirtualMemory, VMPolicy
+from repro.vm.policy import PoolPolicy
+
+RNG = np.random.default_rng(7)
+ROW_WORDS = 64
+
+
+def make_vm(**pools):
+    vm = VirtualMemory(row_words=ROW_WORDS)
+    for name, (rows, layout, boundary) in pools.items():
+        vm.add_pool(name, rows, layout, boundary=boundary)
+    return vm
+
+
+def blob(n, pw):
+    return jnp.asarray(RNG.integers(0, 2**32, (n, pw), dtype=np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Allocation & reliability classes
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_respects_reliability_classes():
+    vm = make_vm(p0=(16, Layout.INTERWRAP, 8))   # 8 CREAM + 8 SECDED + 1 extra
+    vm.create_tenant("a", default_reliability=Protection.SECDED)
+    vm.create_tenant("b", default_reliability=Protection.NONE)
+    sec = vm.alloc("a", 3)
+    assert all(vm.effective_protection("a", v) == Protection.SECDED
+               for v in sec)
+    bulk = vm.alloc("b", 3)
+    # bulk lands on CREAM frames first (exact class before stronger)
+    assert all(vm.effective_protection("b", v) == Protection.NONE
+               for v in bulk)
+
+
+def test_alloc_falls_back_to_stronger_class_then_host():
+    vm = make_vm(p0=(16, Layout.INTERWRAP, 8))
+    vm.create_tenant("b", default_reliability=Protection.NONE)
+    # 8 CREAM + 1 extra = 9 NONE frames, then 8 SECDED, then host
+    vpns = vm.alloc("b", 19)
+    classes = [vm.effective_protection("b", v) for v in vpns]
+    assert classes.count(Protection.NONE) == 9
+    assert classes.count(Protection.SECDED) == 8
+    assert classes.count(None) == 2              # host swap tier
+    assert vm.residency("b", vpns) == "mixed"
+
+
+def test_alloc_never_underprotects():
+    vm = make_vm(p0=(16, Layout.INTERWRAP, None))   # whole-CREAM: no SECDED
+    vm.create_tenant("a", default_reliability=Protection.SECDED)
+    vpns = vm.alloc("a", 2)                      # only host can honour SECDED
+    assert all(vm.translate("a", v).pool is None for v in vpns)
+    assert vm.alloc("a", 1, allow_host=False) is None
+
+
+def test_rejected_alloc_leaks_no_frames():
+    vm = make_vm(p0=(16, Layout.INTERWRAP, 0))
+    vm.create_tenant("a", default_reliability=Protection.SECDED)
+    free_before = sum(len(l) for l in vm.allocators["p0"].free.values())
+    assert vm.alloc("a", 17, allow_host=False) is None
+    assert sum(len(l) for l in vm.allocators["p0"].free.values()) == free_before
+
+
+# ---------------------------------------------------------------------------
+# Data plane
+# ---------------------------------------------------------------------------
+
+
+def test_read_write_roundtrip_across_pools_and_host():
+    vm = make_vm(p0=(16, Layout.INTERWRAP, 8),
+                 p1=(8, Layout.INTERWRAP, 0))
+    vm.create_tenant("t", default_reliability=Protection.NONE)
+    vpns = vm.alloc("t", 30)                     # spans both pools + host
+    data = blob(30, vm.page_words)
+    vm.write("t", vpns, data)
+    assert (vm.read("t", vpns) == data).all()
+    assert vm.stats.host_reads > 0               # host tier was exercised
+
+
+def test_freed_frames_never_leak_across_tenants():
+    vm = make_vm(p0=(16, Layout.INTERWRAP, 8))
+    vm.create_tenant("a", default_reliability=Protection.NONE)
+    vm.create_tenant("b", default_reliability=Protection.NONE)
+    va = vm.alloc("a", 4, allow_host=False)
+    vm.write("a", va, jnp.full((4, vm.page_words), 0xDEADBEEF, jnp.uint32))
+    vm.free("a", va)
+    vb = vm.alloc("b", 4, allow_host=False)   # reuses a's frames
+    assert not np.asarray(vm.read("b", vb)).any()   # zeroed, not a's bits
+
+
+def test_batch_access_rejects_out_of_range_pages():
+    from repro.core import pool as pool_lib
+    state = pool_lib.make_pool(16, Layout.INTERWRAP, row_words=ROW_WORDS)
+    with pytest.raises(ValueError, match="out of range"):
+        pool_lib.read_pages_any(state, [99])
+    with pytest.raises(ValueError, match="out of range"):
+        pool_lib.write_pages_any(
+            state, [99], jnp.zeros((1, state.page_words), jnp.uint32))
+    # empty batches are no-ops, not crashes
+    assert pool_lib.read_pages_any(state, []).shape == (0, state.page_words)
+    assert pool_lib.write_pages_any(
+        state, [], jnp.zeros((0, state.page_words), jnp.uint32)) is state
+
+
+def test_free_returns_frames():
+    vm = make_vm(p0=(16, Layout.INTERWRAP, 8))
+    vm.create_tenant("t", default_reliability=Protection.NONE)
+    vpns = vm.alloc("t", 9, allow_host=False)
+    assert vm.used_device_pages() == 9
+    vm.free("t", vpns)
+    assert vm.used_device_pages() == 0
+    assert vm.alloc("t", 9, allow_host=False) is not None
+
+
+def test_swap_out_and_in_preserves_contents():
+    vm = make_vm(p0=(16, Layout.INTERWRAP, 8))
+    vm.create_tenant("t", default_reliability=Protection.NONE)
+    vpns = vm.alloc("t", 4, allow_host=False)
+    data = blob(4, vm.page_words)
+    vm.write("t", vpns, data)
+    assert vm.swap_out("t", vpns) == 4
+    assert vm.residency("t", vpns) == "host"
+    assert (vm.read("t", vpns) == data).all()
+    assert vm.swap_in("t", vpns) == 4
+    assert vm.residency("t", vpns) == "device"
+    assert (vm.read("t", vpns) == data).all()
+
+
+# ---------------------------------------------------------------------------
+# Live migration
+# ---------------------------------------------------------------------------
+
+
+def test_relocate_moves_pages_off_a_pool():
+    vm = make_vm(src=(16, Layout.INTERWRAP, None),
+                 dst=(16, Layout.INTERWRAP, 0))
+    vm.create_tenant("t", default_reliability=Protection.NONE)
+    vpns = vm.alloc("t", vm.pools["src"].num_pages, allow_host=False)
+    data = blob(len(vpns), vm.page_words)
+    vm.write("t", vpns, data)
+    eng = MigrationEngine(vm)
+    assert eng.relocate("t", vpns, avoid_pool="src") == len(vpns)
+    assert vm.used_device_pages("src") == 0
+    assert (vm.read("t", vpns) == data).all()
+    # 18 pages into 16 SECDED frames: 2 overflowed to the host tier
+    assert eng.stats.to_host == 2
+
+
+def test_upgrade_migrates_instead_of_evicting():
+    vm = make_vm(p0=(32, Layout.INTERWRAP, None))   # 36 pages, 4 extras
+    vm.create_tenant("t", default_reliability=Protection.NONE)
+    vpns = vm.alloc("t", 36, allow_host=False)
+    data = blob(36, vm.page_words)
+    vm.write("t", vpns, data)
+    eng = MigrationEngine(vm)
+    info = eng.repartition_with_migration("p0", 0)
+    assert info["migrated"] == 4                 # the doomed extra pages
+    assert (vm.read("t", vpns) == data).all()    # zero lost pages
+    assert vm.pools["p0"].boundary == 0
+
+
+def test_downgrade_relocates_strict_tenants():
+    vm = make_vm(p0=(16, Layout.INTERWRAP, 0),
+                 p1=(8, Layout.INTERWRAP, 0))
+    vm.create_tenant("a", default_reliability=Protection.SECDED)
+    vm.create_tenant("b", default_reliability=Protection.NONE)
+    sa = vm.alloc("a", 4, allow_host=False)
+    sb = vm.alloc("b", 4, allow_host=False)
+    da, db = blob(4, vm.page_words), blob(4, vm.page_words)
+    vm.write("a", sa, da)
+    vm.write("b", sb, db)
+    eng = MigrationEngine(vm)
+    info = eng.repartition_with_migration("p0", 16)   # p0 -> whole-CREAM
+    # only the SECDED-contracted pages that lived on p0 had to move
+    assert info["migrated"] == sum(
+        1 for v in sa if vm.translate("a", v).pool != "p0")
+    for v in sa:    # contract still honoured: SECDED or host
+        assert vm.effective_protection("a", v) in (Protection.SECDED, None)
+    assert (vm.read("a", sa) == da).all()
+    assert (vm.read("b", sb) == db).all()
+    # capacity was reclaimed: p0 now exposes extra pages
+    assert vm.pools["p0"].num_extra_pages == 2
+
+
+def test_rebuild_refuses_to_lose_mapped_frames():
+    from repro.core import pool as pool_lib
+    vm = make_vm(p0=(32, Layout.INTERWRAP, None))
+    vm.create_tenant("t", default_reliability=Protection.NONE)
+    vm.alloc("t", 36, allow_host=False)          # extras are mapped
+    new_state, _ = pool_lib.repartition(vm.pools["p0"], 0)
+    with pytest.raises(RuntimeError, match="relocate them before"):
+        vm.allocators["p0"].rebuild(new_state)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end acceptance: two tenants, monitor-driven upgrade, zero loss
+# ---------------------------------------------------------------------------
+
+
+def test_multitenant_monitor_driven_upgrade_zero_loss():
+    rng = np.random.default_rng(3)
+    vm = make_vm(p0=(32, Layout.INTERWRAP, 16),   # mixed pool, 2 extras
+                 spare=(16, Layout.INTERWRAP, 0))
+    vm.create_tenant("secure", default_reliability=Protection.SECDED)
+    vm.create_tenant("bulk", default_reliability=Protection.NONE)
+    eng = MigrationEngine(vm, use_kernel=True)
+    policy = VMPolicy(vm, eng, MonitorConfig(window=2, upgrade_threshold=1e-9),
+                      pool_policies={"spare": PoolPolicy(
+                          floor=Protection.SECDED)})
+
+    sec = vm.alloc("secure", 6, allow_host=False)
+    bulk = vm.alloc("bulk", 18, allow_host=False)   # all 16 CREAM + 2 extras
+    dsec, dbulk = blob(6, vm.page_words), blob(18, vm.page_words)
+    vm.write("secure", sec, dsec)
+    vm.write("bulk", bulk, dbulk)
+    assert any(vm.translate("bulk", v).phys >= 32 for v in bulk)  # extras used
+
+    # healthy epoch: no transition
+    stats, performed = policy.step()
+    assert performed == []
+
+    # inject uncorrectable damage into an *unmapped* SECDED row (a weakening
+    # DIMM region) -> the monitor upgrades the whole pool
+    storage = vm.pools["p0"].storage
+    storage = storage.at[30, 0, 0].set(storage[30, 0, 0] ^ jnp.uint32(0b11))
+    vm.pools["p0"] = dataclasses.replace(vm.pools["p0"], storage=storage)
+    snapshot = np.asarray(vm.read("bulk", bulk))   # pre-upgrade contents
+    stats, performed = policy.step()
+    assert len(performed) == 1 and performed[0]["pool"] == "p0"
+    assert vm.pools["p0"].boundary == 0            # fully SECDED now
+
+    # zero lost pages: every mapped page survived the repartition+migration
+    assert (np.asarray(vm.read("bulk", bulk)) == snapshot).all()
+    assert (np.asarray(vm.read("secure", sec)) == np.asarray(dsec)).all()
+    assert eng.stats.pages_moved >= 2              # the two mapped extras
+    # bulk pages now enjoy >= their contracted protection (or host tier)
+    for v in bulk:
+        assert vm.effective_protection("bulk", v) in (
+            Protection.SECDED, Protection.NONE, None)
+
+
+def test_policy_downgrade_reclaims_capacity_when_quiet():
+    vm = make_vm(p0=(16, Layout.INTERWRAP, 0))
+    vm.create_tenant("t", default_reliability=Protection.NONE)
+    policy = VMPolicy(vm, MigrationEngine(vm),
+                      MonitorConfig(window=2, downgrade_patience=2))
+    pages_before = vm.device_capacity_pages()
+    for _ in range(3):
+        _, performed = policy.step()
+    assert vm.pools["p0"].boundary == 16           # downgraded to CREAM
+    assert vm.device_capacity_pages() > pages_before   # +12.5% reclaimed
+
+
+# ---------------------------------------------------------------------------
+# Serving integration
+# ---------------------------------------------------------------------------
+
+
+def test_sequence_cache_allocates_through_vm():
+    from repro.serve.kv_cache import SequenceCache
+    cache = SequenceCache(num_rows=16, mode="cream", row_words=ROW_WORDS)
+    blobs = {}
+    for i in range(10):
+        sid = f"s{i}"
+        blobs[sid] = RNG.integers(0, 256, size=2500, dtype=np.uint8)
+        cache.park(sid, blobs[sid])
+    for sid, b in blobs.items():
+        assert (cache.resume(sid) == b).all()
+    assert cache.vm.used_device_pages() > 0
+    assert cache.device_capacity_pages == 18       # 16 rows + 2 extras
+
+
+def test_sequence_cache_survives_pool_upgrade():
+    from repro.serve.kv_cache import SequenceCache
+    cache = SequenceCache(num_rows=16, mode="cream", row_words=ROW_WORDS)
+    blobs = {}
+    for i in range(9):
+        sid = f"s{i}"
+        blobs[sid] = RNG.integers(0, 256, size=2000, dtype=np.uint8)
+        cache.park(sid, blobs[sid])
+    eng = MigrationEngine(cache.vm)
+    eng.repartition_with_migration(SequenceCache.POOL, 0)   # upgrade
+    for sid, b in blobs.items():
+        assert (cache.resume(sid) == b).all()      # nothing lost
