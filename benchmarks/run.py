@@ -10,9 +10,13 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract). Figure map:
   vm_*              CREAM-VM multi-tenant sim   (beyond paper)
 
 ``--only NAME[,NAME...]`` runs a subset of suites (CI smoke uses
-``--only vm``).
+``--only vm,kernels``). ``--json [DIR]`` additionally writes one
+machine-readable ``BENCH_<suite>.json`` per suite (``{name: us_per_call}``)
+so successive PRs can diff the perf trajectory.
 """
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -35,6 +39,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names to run")
+    ap.add_argument("--json", nargs="?", const=".", default=None,
+                    metavar="DIR",
+                    help="also write BENCH_<suite>.json (name -> us_per_call)"
+                         " into DIR (default: current directory)")
     args = ap.parse_args()
     if args.only:
         wanted = set(args.only.split(","))
@@ -42,16 +50,33 @@ def main() -> None:
         if unknown:
             raise SystemExit(f"unknown suites: {sorted(unknown)}")
         suites = [(s, fn) for s, fn in suites if s in wanted]
+    if args.json is not None:
+        os.makedirs(args.json, exist_ok=True)
     failed = 0
     for suite, fn in suites:
         t0 = time.time()
+        results = {}
+        suite_ok = True
         try:
             for name, val, derived in fn():
                 print(f"{name},{val:.3f},{derived}", flush=True)
+                results[name] = val
         except Exception as e:  # noqa: BLE001
             failed += 1
+            suite_ok = False
             print(f"{suite},nan,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+        if args.json is not None:
+            if suite_ok:
+                path = os.path.join(args.json, f"BENCH_{suite}.json")
+                with open(path, "w") as f:
+                    json.dump(results, f, indent=2, sort_keys=True)
+                print(f"# wrote {path}", flush=True)
+            else:
+                # never persist a partial suite — a trajectory diff would
+                # read it as a valid (regressed) measurement
+                print(f"# skipped BENCH_{suite}.json (suite failed)",
+                      flush=True)
         print(f"# {suite} done in {time.time()-t0:.1f}s", flush=True)
     if failed:
         raise SystemExit(f"{failed} suites failed")

@@ -12,9 +12,10 @@ The paper's contribution as a composable library:
   * :mod:`repro.core.softecc`   — the Virtualized-ECC comparison baseline
   * :mod:`repro.core.injection` — fault models for tests/experiments
 """
-from repro.core.layouts import Layout
+from repro.core.layouts import Layout, page_coords
 from repro.core.pool import (PoolState, evicted_extra_pages, make_pool,
-                             read_page, read_pages_any, read_pages_batch,
+                             migrate_pages, read_page, read_pages_any,
+                             read_pages_any_status, read_pages_batch,
                              repartition, write_page, write_pages_any,
                              write_pages_batch)
 from repro.core.protection import Protection, RegionSpec
@@ -22,8 +23,9 @@ from repro.core.regions import Region, RegionManager
 from repro.core.scrubber import ScrubStats, scrub
 
 __all__ = [
-    "Layout", "PoolState", "make_pool", "read_page", "write_page",
-    "read_pages_batch", "write_pages_batch", "read_pages_any",
-    "write_pages_any", "evicted_extra_pages", "repartition", "Protection",
+    "Layout", "page_coords", "PoolState", "make_pool", "read_page",
+    "write_page", "read_pages_batch", "write_pages_batch", "read_pages_any",
+    "read_pages_any_status", "write_pages_any", "migrate_pages",
+    "evicted_extra_pages", "repartition", "Protection",
     "RegionSpec", "Region", "RegionManager", "ScrubStats", "scrub",
 ]

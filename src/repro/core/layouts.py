@@ -35,6 +35,10 @@ import enum
 import math
 from dataclasses import dataclass, field
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
 LANES = 9
 DATA_LANES = 8
 CODE_LANE = 8
@@ -299,3 +303,130 @@ def place_page(layout: Layout, num_rows: int, page: int,
         return PagePlacement(
             "codelane", _parity_extra_data_row0(num_rows, n_extra, e, row_words))
     raise ValueError(layout)
+
+
+# ---------------------------------------------------------------------------
+# Universal vectorised coordinate translation (the "bridge chip" as an index
+# map). This is the single translation the whole mixed-pool access engine is
+# built on: ``repro.core.pool`` turns it into one-gather/one-scatter batched
+# access, ``repro.kernels.mixed`` turns it into a Pallas BlockSpec index map.
+# ---------------------------------------------------------------------------
+
+#: Region codes returned by :func:`page_coords`.
+REGION_CREAM = 0    # CREAM-region regular page (layout's unprotected/parity class)
+REGION_SECDED = 1   # conventional SECDED row
+REGION_EXTRA = 2    # reclaimed extra page (code-lane / wrap-slot-8 storage)
+
+
+def _build_wrap_tables() -> tuple[np.ndarray, np.ndarray]:
+    """Slot tables for the InterWrap linearisation ℓ = 8·slot + k.
+
+    For slot s ∈ [0, 9): ``WRAP_LANES[s, k] = ℓ mod 9`` and
+    ``WRAP_ROWS[s, k] = ℓ div 9`` (group-relative row) — the paper's §4.1.3
+    bridge formula, tabulated once so batched lookups are a single gather.
+    """
+    lanes = np.empty((LANES, DATA_LANES), np.int32)
+    rows = np.empty((LANES, DATA_LANES), np.int32)
+    for s in range(LANES):
+        for k in range(DATA_LANES):
+            linear = DATA_LANES * s + k
+            lanes[s, k] = linear % LANES
+            rows[s, k] = linear // LANES
+    return lanes, rows
+
+
+WRAP_LANES, WRAP_ROWS = _build_wrap_tables()
+
+
+def page_region(num_rows: int, boundary: int, pages: jax.Array) -> jax.Array:
+    """Vectorised region classification: (n,) page ids -> (n,) REGION_* codes."""
+    pages = jnp.asarray(pages, jnp.int32)
+    is_secded = (pages >= boundary) & (pages < num_rows)
+    is_extra = pages >= num_rows
+    return jnp.where(is_secded, REGION_SECDED,
+                     jnp.where(is_extra, REGION_EXTRA,
+                               REGION_CREAM)).astype(jnp.int32)
+
+
+def parity_coords(num_rows: int, boundary: int, pages: jax.Array,
+                  row_words: int = DEFAULT_ROW_WORDS
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Vectorised parity-table lookup for PARITY-layout CREAM/extra pages.
+
+    Returns ``(prow (n,), off (n,))``: the code-lane row holding each page's
+    packed parity entry and the word offset of its ``row_words // 8``-word
+    slot within that row. Values for SECDED-region ids are meaningless (the
+    caller masks them); callers must clamp/drop before indexing storage.
+    """
+    pages = jnp.asarray(pages, jnp.int32)
+    rel = jnp.where(pages >= num_rows, boundary + (pages - num_rows), pages)
+    tables = math.ceil(boundary / 8) if boundary else 0
+    prow = jnp.where(rel < boundary, rel // 8,
+                     tables + jnp.maximum(rel - boundary, 0) // 8)
+    off = (rel % 8) * (row_words // 8)
+    return prow.astype(jnp.int32), off.astype(jnp.int32)
+
+
+def extra_base_row(layout: Layout, boundary: int,
+                   row_words: int = DEFAULT_ROW_WORDS) -> int:
+    """First code-lane row used for extra-page storage in a CREAM region.
+
+    PACKED / RANK_SUBSET / INTERWRAP pack extras from row 0 of their group;
+    PARITY reserves the parity tables first (paper §4.2).
+    """
+    if layout != Layout.PARITY:
+        return 0
+    n_extra = extra_page_count(layout, boundary, row_words)
+    return parity_table_rows(boundary, n_extra, row_words)
+
+
+def page_coords(layout: Layout, num_rows: int, boundary: int,
+                pages: jax.Array, row_words: int = DEFAULT_ROW_WORDS
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Universal page -> physical-slice translation, for *any* boundary.
+
+    Every logical page — SECDED row, CREAM regular page under any layout, or
+    reclaimed extra page — occupies exactly 8 ``(row, lane)`` slices of
+    ``row_words`` words. This computes all of them in one vectorised pass:
+
+    Args:
+      layout, num_rows, boundary, row_words: static pool geometry
+        (``boundary`` is the CREAM-region size; rows ``[boundary, num_rows)``
+        are SECDED).
+      pages: (n,) int page ids, traced or concrete — page-id convention of
+        ``repro.core.pool`` (regular ``[0, num_rows)``, extras above).
+
+    Returns:
+      ``(rows (n, 8) int32, lanes (n, 8) int32, region (n,) int32)`` such
+      that page ``i``'s data is ``storage[rows[i], lanes[i], :]`` flattened,
+      and ``region[i]`` is a REGION_* code. Out-of-range ids produce
+      undefined (but in-range-clamped by jnp) coordinates — validate ids
+      host-side when they are concrete.
+    """
+    pages = jnp.asarray(pages, jnp.int32)
+    n = pages.shape[0]
+    k = jnp.arange(DATA_LANES, dtype=jnp.int32)
+    region = page_region(num_rows, boundary, pages)
+    is_extra = pages >= num_rows
+    e = pages - num_rows
+    row_rows = jnp.broadcast_to(pages[:, None], (n, DATA_LANES))
+    row_lanes = jnp.broadcast_to(k[None, :], (n, DATA_LANES))
+
+    if layout == Layout.INTERWRAP:
+        # CREAM + extra pages are wrap-striped; SECDED rows are conventional.
+        group = jnp.where(is_extra, e, pages // GROUP_ROWS)
+        slot = jnp.where(is_extra, GROUP_ROWS, pages % GROUP_ROWS)
+        w_lanes = jnp.asarray(WRAP_LANES)[slot]
+        w_rows = GROUP_ROWS * group[:, None] + jnp.asarray(WRAP_ROWS)[slot]
+        in_sec = (region == REGION_SECDED)[:, None]
+        rows = jnp.where(in_sec, row_rows, w_rows)
+        lanes = jnp.where(in_sec, row_lanes, w_lanes)
+        return rows.astype(jnp.int32), lanes.astype(jnp.int32), region
+
+    # BASELINE_ECC / PACKED / RANK_SUBSET / PARITY: regular pages (either
+    # region) are row-wise; extras live in code-lane rows of their group.
+    ebase = extra_base_row(layout, boundary, row_words)
+    ex_rows = ebase + GROUP_ROWS * e[:, None] + k[None, :]
+    rows = jnp.where(is_extra[:, None], ex_rows, row_rows)
+    lanes = jnp.where(is_extra[:, None], CODE_LANE, row_lanes)
+    return rows.astype(jnp.int32), lanes.astype(jnp.int32), region

@@ -11,9 +11,14 @@ page-id convention:
     pages [R, R + extra)       extra pages reclaimed from the code lane
 
 All state transforms are functional (old state in, new state out). Page-level
-reads/writes with *static* page ids compose under jit; batched dynamic access
-for hot paths (KV cache) is in :func:`read_pages_batch` /
-:func:`write_pages_batch`, restricted to single-mode pools.
+reads/writes with *static* page ids compose under jit; the hot paths are the
+batched engines: :func:`read_pages_batch` / :func:`write_pages_batch` for
+single-mode pools, and the universal mixed-pool engine
+:func:`read_pages_any` / :func:`write_pages_any` — one
+:func:`repro.core.layouts.page_coords` translation, one gather/scatter, and
+masked batched SECDED / packed-parity codecs, jittable with *traced* page-id
+arrays for any boundary (``read_pages_any_jit`` etc. are the pre-jitted,
+donation-friendly entry points).
 """
 from __future__ import annotations
 
@@ -27,8 +32,9 @@ import numpy as np
 
 from repro.core import parity8, secded
 from repro.core.layouts import (CODE_LANE, DATA_LANES, DEFAULT_ROW_WORDS,
-                                GROUP_ROWS, LANES, Layout, PagePlacement,
-                                extra_page_count, place_page,
+                                GROUP_ROWS, LANES, REGION_SECDED, Layout,
+                                PagePlacement, extra_page_count, page_coords,
+                                parity_coords, place_page,
                                 _parity_row_of_page)
 
 
@@ -106,7 +112,6 @@ def _placement(state: PoolState, page: int) -> PagePlacement:
 
 
 def _gather(state: PoolState, pl: PagePlacement) -> jax.Array:
-    W = state.row_words
     if pl.kind == "rows":
         return state.storage[pl.row0, :DATA_LANES, :].reshape(-1)
     if pl.kind == "codelane":
@@ -118,15 +123,15 @@ def _gather(state: PoolState, pl: PagePlacement) -> jax.Array:
 
 
 def _scatter(state: PoolState, pl: PagePlacement, data: jax.Array) -> jax.Array:
-    W = state.row_words
     s = state.storage
     if pl.kind == "rows":
-        return s.at[pl.row0, :DATA_LANES, :].set(data.reshape(DATA_LANES, W))
+        return s.at[pl.row0, :DATA_LANES, :].set(
+            data.reshape(DATA_LANES, state.row_words))
     if pl.kind == "codelane":
         return s.at[pl.row0:pl.row0 + GROUP_ROWS, CODE_LANE, :].set(
-            data.reshape(GROUP_ROWS, W))
+            data.reshape(GROUP_ROWS, state.row_words))
     if pl.kind == "wrap":
-        chunks = data.reshape(DATA_LANES, W)
+        chunks = data.reshape(DATA_LANES, state.row_words)
         for k, (lane, row) in enumerate(pl.slices):
             s = s.at[row, lane, :].set(chunks[k])
         return s
@@ -201,32 +206,9 @@ def write_page(state: PoolState, page: int, data: jax.Array) -> PoolState:
 # ---------------------------------------------------------------------------
 
 
-def _wrap_index_tables(boundary: int) -> tuple[np.ndarray, np.ndarray]:
-    """lane/row tables: for slot s (0..8), the 8 (lane, rel_row) slices."""
-    lanes = np.empty((9, 8), np.int32)
-    rows = np.empty((9, 8), np.int32)
-    for s in range(9):
-        for k in range(8):
-            linear = 8 * s + k
-            lanes[s, k] = linear % LANES
-            rows[s, k] = linear // LANES
-    return lanes, rows
-
-
-_WRAP_LANES, _WRAP_ROWS = _wrap_index_tables(0)
-
-
-def page_to_wrap_coords(state: PoolState, pages: jax.Array
-                        ) -> tuple[jax.Array, jax.Array]:
-    """Vectorised (group, slot) -> (rows[n,8], lanes[n,8]) for INTERWRAP pools."""
-    nr = state.num_rows
-    is_extra = pages >= nr
-    e = pages - nr
-    group = jnp.where(is_extra, e, pages // GROUP_ROWS)
-    slot = jnp.where(is_extra, GROUP_ROWS, pages % GROUP_ROWS)
-    lanes = jnp.asarray(_WRAP_LANES)[slot]                  # (n, 8)
-    rows = GROUP_ROWS * group[:, None] + jnp.asarray(_WRAP_ROWS)[slot]
-    return rows, lanes
+def _single_mode(state: PoolState) -> bool:
+    return state.boundary == 0 or (state.layout == Layout.INTERWRAP
+                                   and state.boundary == state.num_rows)
 
 
 def read_pages_batch(state: PoolState, pages: jax.Array) -> jax.Array:
@@ -234,135 +216,200 @@ def read_pages_batch(state: PoolState, pages: jax.Array) -> jax.Array:
 
     Fast paths: whole-pool INTERWRAP (the Pallas ``interwrap`` kernel's
     access; this jnp version is its oracle and the CPU path) and whole-pool
-    SECDED (decode+correct on load).
+    SECDED (decode+correct on load). Mixed pools go through
+    :func:`read_pages_any`, which handles every boundary.
     """
-    if state.layout == Layout.INTERWRAP and state.boundary == state.num_rows:
-        rows, lanes = page_to_wrap_coords(state, pages)
-        return state.storage[rows, lanes, :].reshape(pages.shape[0], -1)
-    if state.boundary == 0:  # whole pool conventional SECDED
-        data = state.storage[pages, :DATA_LANES, :].reshape(
-            pages.shape[0], -1)
-        codes = state.storage[pages, CODE_LANE, :]
-        fixed, _, _ = secded.decode_block(data, codes)
-        return fixed
-    raise ValueError("batched access requires a single-mode pool")
+    if not _single_mode(state):
+        raise ValueError("batched access requires a single-mode pool")
+    return read_pages_any(state, pages)
 
 
 def read_pages_batch_status(state: PoolState, pages: jax.Array
                             ) -> tuple[jax.Array, jax.Array]:
-    """Batched read + worst decode status (0 clean .. 3 uncorrectable)."""
-    if state.boundary == 0:
-        data = state.storage[pages, :DATA_LANES, :].reshape(
-            pages.shape[0], -1)
-        codes = state.storage[pages, CODE_LANE, :]
-        fixed, _, status = secded.decode_block(data, codes)
-        return fixed, jnp.max(status)
-    return read_pages_batch(state, pages), jnp.zeros((), jnp.int32)
+    """Batched read + per-page worst decode status.
+
+    Contract: returns ``(data (n, page_words) uint32, status (n,) int32)``
+    on *both* branches — ``status[i]`` is the worst per-beat decode status of
+    page ``i`` (0 clean, 1/2 corrected, 3 detected-uncorrectable) for SECDED
+    pools and all-zeros for unprotected single-mode pools.
+    """
+    if not _single_mode(state):
+        raise ValueError("batched access requires a single-mode pool")
+    return read_pages_any_status(state, pages)
 
 
 def write_pages_batch(state: PoolState, pages: jax.Array,
                       data: jax.Array) -> PoolState:
     """Scatter a batch of pages (n, 8W). Single-mode pools only."""
-    data = data.astype(jnp.uint32)
-    if state.layout == Layout.INTERWRAP and state.boundary == state.num_rows:
-        rows, lanes = page_to_wrap_coords(state, pages)
-        chunks = data.reshape(pages.shape[0], DATA_LANES, -1)
-        storage = state.storage.at[rows, lanes, :].set(chunks)
-        return dataclasses.replace(state, storage=storage)
-    if state.boundary == 0:
-        chunks = data.reshape(pages.shape[0], DATA_LANES, state.row_words)
-        storage = state.storage.at[pages, :DATA_LANES, :].set(chunks)
-        codes = secded.encode_block(data.reshape(pages.shape[0], -1))
-        storage = storage.at[pages, CODE_LANE, :].set(codes)
-        return dataclasses.replace(state, storage=storage)
-    raise ValueError("batched access requires a single-mode pool")
+    if not _single_mode(state):
+        raise ValueError("batched access requires a single-mode pool")
+    return write_pages_any(state, pages, data)
 
 
 # ---------------------------------------------------------------------------
-# Mixed-pool batched access — any boundary, any page-id mix.
-# SECDED rows and (for INTERWRAP) CREAM/extra pages take vectorised paths;
-# other layouts fall back to per-page gather/scatter. Used by the VM layer
-# (``repro.vm``) whose pools are routinely mixed-mode.
+# Mixed-pool batched access engine — any boundary, any page-id mix.
+#
+# One `layouts.page_coords` translation turns an arbitrary page-id vector
+# into (rows, lanes, region); data then moves in a single advanced-indexing
+# gather/scatter and the codecs run batched + masked: SECDED decode/encode
+# over every page with the non-SECDED lanes masked out, and (for PARITY
+# pools) one packed-parity gather/scatter with `mode="drop"` routing. No
+# Python per-page loops — everything traces, so the VM data plane
+# (``repro.vm``) and serving engine jit straight through with *dynamic*
+# page-id arrays.
 # ---------------------------------------------------------------------------
+
+
+def _as_page_array(state: PoolState, pages) -> jax.Array:
+    """Coerce page ids to int32; range-validate only when they are concrete.
+
+    Traced ids (inside jit) skip host validation — out-of-range ids then
+    clamp, as standard for jnp indexing.
+    """
+    if isinstance(pages, jax.core.Tracer):
+        return pages.astype(jnp.int32).reshape(-1)
+    arr = np.asarray(pages, dtype=np.int64).reshape(-1)
+    bad = arr[(arr < 0) | (arr >= state.num_pages)]
+    if bad.size:
+        raise ValueError(
+            f"pages {bad.tolist()} out of range [0, {state.num_pages})")
+    if isinstance(pages, jax.Array) and pages.dtype == jnp.int32 \
+            and pages.ndim == 1:
+        return pages          # already device-resident: don't rebuild
+    return jnp.asarray(arr, jnp.int32)
+
+
+def read_pages_any_status(state: PoolState, pages
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Batch read with per-page status for an arbitrary page-id vector.
+
+    Handles every pool mode (``0 <= boundary <= num_rows``) and page-id mix
+    (CREAM regular / SECDED / extra) in one gather + masked batched codecs.
+    Returns ``(data (n, page_words) uint32, status (n,) int32)`` where
+    ``status[i]`` is the page's worst beat/line status: SECDED pages report
+    decode status (corrections applied to the returned data, *not*
+    persisted — see :func:`scrub`), PARITY-layout CREAM/extra pages report
+    0 or DETECTED_UNCORRECTABLE, unprotected pages report 0.
+    """
+    pages = _as_page_array(state, pages)
+    n = pages.shape[0]
+    if n == 0:
+        return (jnp.zeros((0, state.page_words), jnp.uint32),
+                jnp.zeros((0,), jnp.int32))
+    rows, lanes, region = page_coords(state.layout, state.num_rows,
+                                      state.boundary, pages, state.row_words)
+    data = state.storage[rows, lanes, :].reshape(n, -1)
+    is_sec = region == REGION_SECDED
+    status = jnp.zeros((n,), jnp.int32)
+    if state.boundary < state.num_rows:       # pool has SECDED rows
+        crow = jnp.clip(pages, state.boundary, state.num_rows - 1)
+        codes = state.storage[crow, CODE_LANE, :]
+        fixed, _, st = secded.decode_block(data, codes)
+        data = jnp.where(is_sec[:, None], fixed, data)
+        status = jnp.where(is_sec, jnp.max(st, axis=-1), 0).astype(jnp.int32)
+    if state.layout == Layout.PARITY and state.boundary > 0:
+        prow, off = parity_coords(state.num_rows, state.boundary, pages,
+                                  state.row_words)
+        idx = off[:, None] + jnp.arange(state.row_words // 8)
+        packed = state.storage[jnp.clip(prow, 0, state.num_rows - 1)[:, None],
+                               CODE_LANE, idx]
+        pst = jnp.max(parity8.check_lines_packed(data, packed), axis=-1) * 3
+        status = jnp.where(is_sec, status, pst.astype(jnp.int32))
+    return data, status
 
 
 def read_pages_any(state: PoolState, pages) -> jax.Array:
-    """Decode-corrected batch read for an arbitrary list of page ids.
+    """Decode-corrected batch read for an arbitrary page-id vector.
 
-    Unlike :func:`read_pages_batch` this handles mixed pools
-    (``0 < boundary < num_rows``). Returns ``(n, page_words)`` uint32.
+    Mixed-pool engine entry point: any boundary, any mix of CREAM / SECDED /
+    extra ids, fully traceable. Returns ``(n, page_words)`` uint32.
     """
-    pages = [int(p) for p in pages]
-    n = len(pages)
-    bad = [p for p in pages if not 0 <= p < state.num_pages]
-    if bad:
-        raise ValueError(f"pages {bad} out of range [0, {state.num_pages})")
-    if not n:
-        return jnp.zeros((0, state.page_words), jnp.uint32)
-    out: list = [None] * n
-    sec = [i for i, p in enumerate(pages)
-           if state.boundary <= p < state.num_rows]
-    other = [i for i in range(n) if state.boundary > pages[i]
-             or pages[i] >= state.num_rows]
-    if sec:
-        rows = jnp.asarray([pages[i] for i in sec], jnp.int32)
-        data = state.storage[rows, :DATA_LANES, :].reshape(len(sec), -1)
-        codes = state.storage[rows, CODE_LANE, :]
-        fixed, _, _ = secded.decode_block(data, codes)
-        for j, i in enumerate(sec):
-            out[i] = fixed[j]
-    if other:
-        if state.layout == Layout.INTERWRAP:
-            ids = jnp.asarray([pages[i] for i in other], jnp.int32)
-            rows, lanes = page_to_wrap_coords(state, ids)
-            data = state.storage[rows, lanes, :].reshape(len(other), -1)
-            for j, i in enumerate(other):
-                out[i] = data[j]
-        else:
-            for i in other:
-                out[i], _ = read_page(state, pages[i])
-    return jnp.stack(out)
+    return read_pages_any_status(state, pages)[0]
 
 
 def write_pages_any(state: PoolState, pages, data: jax.Array) -> PoolState:
-    """Batch write for an arbitrary list of page ids, maintaining codes.
+    """Batch write for an arbitrary page-id vector, maintaining codes.
 
-    Mixed-pool counterpart of :func:`write_pages_batch`; ``data`` is
-    ``(n, page_words)``.
+    One data scatter over the ``page_coords`` translation, one masked SECDED
+    encode scatter (``mode="drop"`` routes non-SECDED pages off the code
+    lane), and — for PARITY pools — one packed-parity scatter. Duplicate ids
+    within a batch leave that page's contents unspecified (scatter order).
+    ``data`` is ``(n, page_words)``.
     """
-    pages = [int(p) for p in pages]
-    n = len(pages)
-    bad = [p for p in pages if not 0 <= p < state.num_pages]
-    if bad:
-        raise ValueError(f"pages {bad} out of range [0, {state.num_pages})")
-    if not n:
+    pages = _as_page_array(state, pages)
+    n = pages.shape[0]
+    if n == 0:
         return state
     data = data.astype(jnp.uint32).reshape(n, -1)
     if data.shape[1] != state.page_words:
         raise ValueError(f"page data must be {state.page_words} words")
-    sec = [i for i, p in enumerate(pages)
-           if state.boundary <= p < state.num_rows]
-    other = [i for i in range(n) if state.boundary > pages[i]
-             or pages[i] >= state.num_rows]
-    if other:
-        if state.layout == Layout.INTERWRAP:
-            ids = jnp.asarray([pages[i] for i in other], jnp.int32)
-            rows, lanes = page_to_wrap_coords(state, ids)
-            chunks = data[jnp.asarray(other)].reshape(
-                len(other), DATA_LANES, state.row_words)
-            state = dataclasses.replace(
-                state, storage=state.storage.at[rows, lanes, :].set(chunks))
-        else:
-            for i in other:
-                state = write_page(state, pages[i], data[i])
-    if sec:
-        rows = jnp.asarray([pages[i] for i in sec], jnp.int32)
-        block = data[jnp.asarray(sec)]
-        storage = state.storage.at[rows, :DATA_LANES, :].set(
-            block.reshape(len(sec), DATA_LANES, state.row_words))
-        storage = storage.at[rows, CODE_LANE, :].set(secded.encode_block(block))
-        state = dataclasses.replace(state, storage=storage)
-    return state
+    rows, lanes, region = page_coords(state.layout, state.num_rows,
+                                      state.boundary, pages, state.row_words)
+    storage = state.storage.at[rows, lanes, :].set(
+        data.reshape(n, DATA_LANES, state.row_words))
+    is_sec = region == REGION_SECDED
+    if state.boundary < state.num_rows:       # pool has SECDED rows
+        codes = secded.encode_block(data)
+        crow = jnp.where(is_sec, pages, state.num_rows)   # OOB -> dropped
+        storage = storage.at[crow, CODE_LANE, :].set(codes, mode="drop")
+    if state.layout == Layout.PARITY and state.boundary > 0:
+        prow, off = parity_coords(state.num_rows, state.boundary, pages,
+                                  state.row_words)
+        prow = jnp.where(is_sec, state.num_rows, prow)    # OOB -> dropped
+        packed = parity8.encode_lines_packed(data)        # (n, W/8)
+        idx = off[:, None] + jnp.arange(state.row_words // 8)
+        storage = storage.at[prow[:, None], CODE_LANE, idx].set(
+            packed, mode="drop")
+    return dataclasses.replace(state, storage=storage)
+
+
+# Pre-jitted engine entry points for the hot paths (the VM data plane).
+# ``boundary`` / ``layout`` / ``row_words`` are static pytree metadata, so
+# each pool mode compiles once; page ids and data stay dynamic. Each wrapper
+# range-validates concrete page ids *before* dispatch (inside the trace they
+# are tracers and would silently clamp), so the pre-engine ValueError
+# behaviour is preserved on the jitted paths too.
+_read_pages_any_jitted = jax.jit(read_pages_any)
+_read_pages_any_status_jitted = jax.jit(read_pages_any_status)
+_write_pages_any_jitted = jax.jit(write_pages_any, donate_argnums=(0,))
+
+
+def read_pages_any_jit(state: PoolState, pages) -> jax.Array:
+    """Jitted :func:`read_pages_any` (validates concrete ids host-side)."""
+    return _read_pages_any_jitted(state, _as_page_array(state, pages))
+
+
+def read_pages_any_status_jit(state: PoolState, pages
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Jitted :func:`read_pages_any_status` (validates concrete ids)."""
+    return _read_pages_any_status_jitted(state, _as_page_array(state, pages))
+
+
+def write_pages_any_jit(state: PoolState, pages, data: jax.Array
+                        ) -> PoolState:
+    """Jitted, donating :func:`write_pages_any` (validates concrete ids).
+
+    The donation invalidates the *input* pool's storage on backends with
+    buffer donation — only use it when the old state is dropped immediately
+    (as ``repro.vm`` does).
+    """
+    return _write_pages_any_jitted(state, _as_page_array(state, pages), data)
+
+
+@partial(jax.jit, donate_argnums=(2,))
+def _migrate_pages(src: PoolState, src_pages, dst: PoolState,
+                   dst_pages) -> PoolState:
+    return write_pages_any(dst, dst_pages, read_pages_any(src, src_pages))
+
+
+def migrate_pages(src: PoolState, src_pages, dst: PoolState,
+                  dst_pages) -> PoolState:
+    """One-program live migration: decode-corrected read from ``src`` and
+    code-maintaining write into ``dst`` (whose storage is donated), fused
+    under a single jit so the whole transaction's data plane is one dispatch.
+    """
+    return _migrate_pages(src, _as_page_array(src, src_pages),
+                          dst, _as_page_array(dst, dst_pages))
 
 
 # ---------------------------------------------------------------------------
@@ -396,7 +443,11 @@ def repartition(state: PoolState, new_boundary: int
 
     Page *contents* of regular pages are preserved across the move: rows
     entering the SECDED region get fresh codes; rows leaving it keep data and
-    (for PARITY) get parity entries.
+    (for PARITY) get parity entries. Surviving *extra* pages are preserved
+    too: PACKED / RANK_SUBSET / INTERWRAP extras have boundary-independent
+    storage, and PARITY extras — whose physical home sits above the
+    boundary-sized parity tables — are read out and re-homed under the new
+    boundary, so every surviving page id keeps its contents.
     """
     if new_boundary % GROUP_ROWS or not 0 <= new_boundary <= state.num_rows:
         raise ValueError(f"bad boundary {new_boundary}")
@@ -408,28 +459,48 @@ def repartition(state: PoolState, new_boundary: int
 
     storage = state.storage
 
+    # PARITY extra-page storage moves with the parity tables: snapshot the
+    # survivors now (reads are functional — `state` never mutates) and
+    # re-home them after the boundary move.
+    extra_ids = None
+    if state.layout == Layout.PARITY:
+        new_extra = extra_page_count(state.layout, new_boundary,
+                                     state.row_words)
+        surviving = min(state.num_extra_pages, new_extra)
+        if surviving:
+            extra_ids = jnp.arange(state.num_rows,
+                                   state.num_rows + surviving,
+                                   dtype=jnp.int32)
+            extra_data = read_pages_any(state, extra_ids)
+
     if new_boundary < old:  # CREAM region shrinks -> protect more rows
         # 1) All extra pages with storage above the new CREAM span are lost.
         info["evicted_extra_pages"] = evicted_extra_pages(state, new_boundary)
-        # 2) Rows [new_boundary, old) need SECDED codes over their current data.
-        for row in range(new_boundary, old):
-            # Under INTERWRAP the row's data may be wrap-striped: read the
-            # logical page first, then rewrite in conventional layout.
-            data, _ = read_page(state, row)
-            storage = storage.at[row, :DATA_LANES, :].set(
-                data.reshape(DATA_LANES, state.row_words))
-            storage = storage.at[row, CODE_LANE, :].set(secded.encode_block(data))
-            info["pages_reencoded"] += 1
+        # 2) Rows [new_boundary, old) need SECDED codes over their current
+        #    data. Under INTERWRAP that data may be wrap-striped, so this is
+        #    one batched logical read of the affected span, one batched
+        #    encode, and two scatters (data rows + code lane).
+        affected = jnp.arange(new_boundary, old, dtype=jnp.int32)
+        data = read_pages_any(state, affected)
+        storage = storage.at[affected, :DATA_LANES, :].set(
+            data.reshape(-1, DATA_LANES, state.row_words))
+        storage = storage.at[affected, CODE_LANE, :].set(
+            secded.encode_block(data))
+        info["pages_reencoded"] = old - new_boundary
         new_state = PoolState(storage, new_boundary, state.layout,
                               state.row_words)
     else:  # CREAM region grows -> reclaim code lanes
+        # One batched decode of the surrendered span with its outgoing codes
+        # (last chance to correct), then one batched re-place under the CREAM
+        # layout (data scatter + code-lane scatter inside write_pages_any).
         tmp = PoolState(storage, new_boundary, state.layout, state.row_words)
-        for row in range(old, new_boundary):
-            data = state.storage[row, :DATA_LANES, :].reshape(-1)
-            # decode once with the outgoing codes (last chance to correct)
-            data, _, _ = secded.decode_block(data, state.storage[row, CODE_LANE, :])
-            tmp = write_page(tmp, row, data)   # re-place under CREAM layout
-            info["pages_reencoded"] += 1
-        # zero reclaimed code lanes that are now extra-page storage
-        new_state = tmp
+        affected = jnp.arange(old, new_boundary, dtype=jnp.int32)
+        block = state.storage[affected, :DATA_LANES, :].reshape(
+            affected.shape[0], -1)
+        fixed, _, _ = secded.decode_block(
+            block, state.storage[affected, CODE_LANE, :])
+        new_state = write_pages_any(tmp, affected, fixed)
+        info["pages_reencoded"] = new_boundary - old
+    if extra_ids is not None:      # re-home surviving PARITY extras
+        new_state = write_pages_any(new_state, extra_ids, extra_data)
     return new_state, info

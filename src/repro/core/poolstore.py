@@ -76,17 +76,11 @@ def store_tree(state: PoolState, tree, first_page: int = 0
     padded[:len(blob)] = blob
     # Batched write: one traced scatter instead of n_pages separate
     # static-index writes (each of which would re-trace — a 110M-param
-    # moment snapshot is ~10^5 pages).
-    try:
-        state = pool_lib.write_pages_batch(
-            state, jnp.arange(first_page, first_page + n_pages,
-                              dtype=jnp.int32),
-            jnp.asarray(padded.reshape(n_pages, pw)))
-    except ValueError:  # mixed-mode pool: fall back to per-page writes
-        for i in range(n_pages):
-            state = pool_lib.write_page(
-                state, first_page + i,
-                jnp.asarray(padded[i * pw:(i + 1) * pw]))
+    # moment snapshot is ~10^5 pages). The mixed-pool engine handles any
+    # boundary, so no per-page fallback is needed.
+    state = pool_lib.write_pages_any(
+        state, jnp.arange(first_page, first_page + n_pages, dtype=jnp.int32),
+        jnp.asarray(padded.reshape(n_pages, pw)))
     return state, TableOfContents(entries, n_pages)
 
 
@@ -95,18 +89,10 @@ def load_tree(state: PoolState, toc: TableOfContents, like,
     """Read the tree back. Returns (tree, worst_status)."""
     pw = state.page_words
     n = toc.total_pages
-    try:
-        idx = jnp.arange(first_page, first_page + n, dtype=jnp.int32)
-        data, status = pool_lib.read_pages_batch_status(state, idx)
-        blob = np.asarray(data).reshape(-1)
-        worst = int(status)
-    except ValueError:  # mixed-mode pool: per-page path
-        pages, worst = [], 0
-        for i in range(n):
-            data, status = pool_lib.read_page(state, first_page + i)
-            worst = max(worst, int(status))
-            pages.append(np.asarray(data))
-        blob = np.concatenate(pages) if pages else np.zeros(0, np.uint32)
+    idx = jnp.arange(first_page, first_page + n, dtype=jnp.int32)
+    data, status = pool_lib.read_pages_any_status(state, idx)
+    blob = np.asarray(data).reshape(-1)
+    worst = int(jnp.max(status)) if n else 0
 
     def rebuild(prefix, node):
         if isinstance(node, dict):

@@ -12,6 +12,8 @@ Catalogue:
   secded           Hsiao(72,64) encode / fused check+correct
   parity8          8-bit-per-line detection code
   interwrap        Solution-3 wrap-around page gather/scatter (scalar prefetch)
+  mixed            mixed-pool fused read: universal page_coords gather +
+                   masked SECDED correction for any boundary
   migrate          live migration: wrap gather fused with SECDED re-encode
   scrub            fused scrub sweep: decode + correct + census, one pass
   ecc_matmul       beyond-paper: SECDED decode-on-load fused into a matmul

@@ -1,13 +1,22 @@
-"""Public entry point for the migration gather/re-encode with dispatch."""
+"""Public entry point for the migration gather/re-encode with dispatch.
+
+``use_kernel=None`` (the default) auto-selects: the Pallas kernel where it
+lowers natively (TPU), the vectorised jnp oracle under interpret mode —
+where a per-slice grid walk would be pure overhead.
+"""
 from __future__ import annotations
 
 import jax
 
+from repro.kernels.common import use_interpret
 from repro.kernels.migrate import kernel, ref
 
 
 def gather_encode(storage: jax.Array, pages: jax.Array, num_rows: int,
-                  use_kernel: bool = True) -> tuple[jax.Array, jax.Array]:
+                  use_kernel: bool | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    if use_kernel is None:
+        use_kernel = not use_interpret()
     if use_kernel:
         return kernel.gather_encode(storage, pages, num_rows)
     return ref.gather_encode(storage, pages, num_rows)

@@ -1,12 +1,15 @@
 """Pure-jnp oracle for the fused migration gather/re-encode."""
 from __future__ import annotations
 
+import functools
+
 import jax
 
 from repro.core import secded
 from repro.kernels.interwrap import ref as interwrap_ref
 
 
+@functools.partial(jax.jit, static_argnames=("num_rows",))
 def gather_encode(storage: jax.Array, pages: jax.Array, num_rows: int
                   ) -> tuple[jax.Array, jax.Array]:
     """(R, 9, W), (n,) -> (data (n, 8W), packed SECDED codes (n, W))."""

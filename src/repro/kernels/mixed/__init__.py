@@ -1,0 +1,2 @@
+"""Fused mixed-pool page read: universal gather + masked SECDED correction."""
+from repro.kernels.mixed.ops import read_correct  # noqa: F401

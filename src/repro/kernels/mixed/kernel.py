@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for the fused mixed-pool page read.
+
+Extends ``repro.kernels.interwrap``'s scalar-prefetch pattern from the pure
+InterWrap pool to *any* boundary: the BlockSpec index map performs the
+universal coordinate translation of :func:`repro.core.layouts.page_coords`
+— SECDED rows, CREAM regular pages under every layout, and reclaimed extra
+pages — and the kernel body fuses the Hsiao SECDED check+correct for the
+slices that need it, so a mixed batch is one pass over HBM:
+
+  * grid = (n_pages, 8 slices); the page-id vector and a per-page
+    ``is_secded`` mask are scalar-prefetched (the paged-attention pattern),
+  * the storage BlockSpec fetches slice k of page i straight from its
+    physical (row, lane) home — the paper's §4.3 bridge-chip translation
+    for mixed layouts as a pure index map,
+  * a second BlockSpec streams the matching ``W/8``-word sub-range of the
+    page's code plane (each W-word slice covers an exact code sub-range,
+    as in ``repro.kernels.migrate``); non-SECDED pages fetch a clamped
+    dummy block whose decode result is masked off,
+  * the VPU decode (popcount syndromes + select-chain action table, shared
+    with ``repro.kernels.secded``) corrects in VMEM before write-back — no
+    second pass, no host round-trip.
+
+Layout, boundary, and geometry are static (they live in pool metadata), so
+each pool mode compiles once and page ids stay fully dynamic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.layouts import (CODE_LANE, DATA_LANES, GROUP_ROWS, LANES,
+                                Layout, extra_base_row)
+from repro.kernels.common import use_interpret
+from repro.kernels.secded.kernel import (_encode_beats, _syndrome_action,
+                                         _unpack4)
+
+
+def _coords(page, k, layout: Layout, num_rows: int, boundary: int,
+            ebase: int):
+    """Universal translation for slice k of `page` (traced scalars).
+
+    Mirrors :func:`repro.core.layouts.page_coords` one (page, k) at a time —
+    ``layout``/``boundary``/``ebase`` are static, so the branch structure
+    resolves at trace time.
+    """
+    is_extra = page >= num_rows
+    e = page - num_rows
+    if layout == Layout.INTERWRAP:
+        is_sec = jnp.logical_and(page >= boundary, page < num_rows)
+        group = jnp.where(is_extra, e, page // GROUP_ROWS)
+        slot = jnp.where(is_extra, GROUP_ROWS, page % GROUP_ROWS)
+        linear = 8 * slot + k
+        row = jnp.where(is_sec, page, GROUP_ROWS * group + linear // LANES)
+        lane = jnp.where(is_sec, k, linear % LANES)
+        return row, lane
+    row = jnp.where(is_extra, ebase + GROUP_ROWS * e + k, page)
+    lane = jnp.where(is_extra, CODE_LANE, k)
+    return row, lane
+
+
+def _read_correct_kernel(pages_ref, is_sec_ref, storage_ref, codes_ref,
+                         out_ref):
+    i = pl.program_id(0)
+    blk = storage_ref[...]                                # (1, 1, W)
+    flat = blk.reshape(1, -1)
+    pairs = flat.reshape(1, flat.shape[1] // 2, 2)
+    lo, hi = pairs[..., 0], pairs[..., 1]
+    stored = _unpack4(codes_ref[...].reshape(1, -1), lo.shape[1])
+    syndrome = (_encode_beats(lo, hi) ^ stored) & jnp.uint32(0xFF)
+    action = _syndrome_action(syndrome)
+    is_data = (action >= 0) & (action < 64)
+    bit = jnp.where(action >= 0, action, 0).astype(jnp.uint32)
+    lo = lo ^ jnp.where(is_data & (bit < 32), jnp.uint32(1) << (bit & 31), 0)
+    hi = hi ^ jnp.where(is_data & (bit >= 32), jnp.uint32(1) << (bit & 31), 0)
+    fixed = jnp.stack([lo, hi], axis=-1).reshape(blk.shape)
+    out_ref[...] = jnp.where(is_sec_ref[i] != 0, fixed, blk)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("layout", "num_rows", "boundary"))
+def read_correct(storage: jax.Array, pages: jax.Array, layout: Layout,
+                 num_rows: int, boundary: int) -> jax.Array:
+    """(R, 9, W) pool, (n,) int32 page ids -> (n, 8W) corrected page data."""
+    n = pages.shape[0]
+    W = storage.shape[2]
+    ebase = extra_base_row(layout, boundary, W)
+
+    def storage_index(i, k, pages_ref, sec_ref):
+        row, lane = _coords(pages_ref[i], k, layout, num_rows, boundary,
+                            ebase)
+        return row, lane, 0
+
+    def codes_index(i, k, pages_ref, sec_ref):
+        # SECDED codes live at (page, CODE_LANE); non-SECDED pages fetch a
+        # clamped in-range block that the kernel masks off.
+        return jnp.clip(pages_ref[i], 0, num_rows - 1), CODE_LANE, k
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n, DATA_LANES),
+        in_specs=[pl.BlockSpec((1, 1, W), storage_index),
+                  pl.BlockSpec((1, 1, W // 8), codes_index)],
+        out_specs=pl.BlockSpec((1, 1, W), lambda i, k, p, s: (i, k, 0)),
+    )
+    is_sec = ((pages >= boundary) & (pages < num_rows)).astype(jnp.int32)
+    out = pl.pallas_call(
+        _read_correct_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, DATA_LANES, W), jnp.uint32),
+        interpret=use_interpret(),
+    )(pages.astype(jnp.int32), is_sec, storage, storage)
+    return out.reshape(n, DATA_LANES * W)

@@ -1,0 +1,32 @@
+"""Public entry point for the fused mixed-pool read with kernel/ref dispatch.
+
+``use_kernel=None`` (the default) auto-selects: the Pallas kernel when it
+lowers natively (TPU), the vectorised jnp oracle — which *is* the engine's
+fast path — under interpret mode, where a per-slice grid walk would be pure
+overhead.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.layouts import Layout
+from repro.core.pool import PoolState
+from repro.kernels.common import use_interpret
+from repro.kernels.mixed import kernel, ref
+
+
+def read_correct(storage: jax.Array, pages: jax.Array, layout: Layout,
+                 num_rows: int, boundary: int,
+                 use_kernel: bool | None = None) -> jax.Array:
+    if use_kernel is None:
+        use_kernel = not use_interpret()
+    if use_kernel:
+        return kernel.read_correct(storage, pages, layout, num_rows, boundary)
+    return ref.read_correct(storage, pages, layout, num_rows, boundary)
+
+
+def read_pool(state: PoolState, pages: jax.Array,
+              use_kernel: bool | None = None) -> jax.Array:
+    """Convenience wrapper taking a :class:`PoolState`."""
+    return read_correct(state.storage, pages, state.layout, state.num_rows,
+                        state.boundary, use_kernel=use_kernel)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused mixed-pool read.
+
+Exactly the data path of :func:`repro.core.pool.read_pages_any` (which is
+built on the same :func:`repro.core.layouts.page_coords` translation), minus
+the parity *status* side channel — parity is detection-only and never alters
+the returned data, so the fused read's contract is data-only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import secded
+from repro.core.layouts import (CODE_LANE, REGION_SECDED, Layout, page_coords)
+
+
+def read_correct(storage: jax.Array, pages: jax.Array, layout: Layout,
+                 num_rows: int, boundary: int) -> jax.Array:
+    """(R, 9, W) pool, (n,) page ids -> (n, 8W) decode-corrected page data."""
+    n = pages.shape[0]
+    rows, lanes, region = page_coords(layout, num_rows, boundary, pages,
+                                      storage.shape[2])
+    data = storage[rows, lanes, :].reshape(n, -1)
+    if boundary < num_rows:
+        crow = jnp.clip(pages, boundary, num_rows - 1)
+        fixed, _, _ = secded.decode_block(data, storage[crow, CODE_LANE, :])
+        data = jnp.where((region == REGION_SECDED)[:, None], fixed, data)
+    return data

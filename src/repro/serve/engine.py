@@ -63,8 +63,16 @@ class Engine:
         self.cache.park(seq_id, blob)
         self._specs[seq_id] = spec
 
-    def resume(self, req: Request):
-        blob = self.cache.resume(req.seq_id)
+    def resume(self, req: Request, blob: np.ndarray | None = None,
+               prefetched: bool = False):
+        """Restore a request's decode state.
+
+        ``prefetched=True`` means ``blob`` came from a batched
+        :meth:`SequenceCache.resume_many` prefetch (possibly None on miss)
+        and the cache must not be consulted again.
+        """
+        if not prefetched:
+            blob = self.cache.resume(req.seq_id)
         if blob is None:
             tok, state = self.prefill_one(req)   # cache miss -> re-prefill
             if req.generated:
@@ -85,15 +93,19 @@ class Engine:
         queue = list(requests)
         first = True
         while any(len(r.generated) < r.max_new for r in queue):
-            for req in queue:
-                if len(req.generated) >= req.max_new:
-                    continue
+            active = [r for r in queue if len(r.generated) < r.max_new]
+            # batched prefetch: one mixed-pool engine dispatch per backing
+            # pool restores the whole turn's parked states together
+            blobs = {} if first else self.cache.resume_many(
+                [r.seq_id for r in active if r.seq_id in self._specs])
+            for req in active:
                 t0 = time.perf_counter()
                 if first or req.seq_id not in self._specs:
                     tok, state = self.prefill_one(req)
                     req.generated.append(tok)
                 else:
-                    _, state = self.resume(req)
+                    _, state = self.resume(req, blob=blobs.get(req.seq_id),
+                                           prefetched=True)
                     tok = req.generated[-1]
                 for _ in range(steps_per_turn):
                     if len(req.generated) >= req.max_new:

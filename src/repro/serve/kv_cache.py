@@ -17,7 +17,10 @@ Storage goes through :class:`repro.vm.VirtualMemory` — the cache is just a
 tenant with an LRU policy. It no longer owns raw pool page ids, so a
 protection upgrade on the underlying pool (driven by
 :class:`repro.vm.policy.VMPolicy`) live-migrates parked sequences instead of
-dropping them, and the pool can be shared with other tenants.
+dropping them, and the pool can be shared with other tenants. All device
+traffic rides the VM's jitted mixed-pool access engine (one vectorised
+gather/scatter per pool, any boundary); :meth:`SequenceCache.resume_many`
+batches whole decode waves into a single engine dispatch.
 """
 from __future__ import annotations
 
@@ -122,6 +125,57 @@ class SequenceCache:
         self.lru.move_to_end(seq_id)
 
     # -- read ----------------------------------------------------------------
+    def resume_many(self, seq_ids) -> dict[str, np.ndarray | None]:
+        """Batched :meth:`resume`: one engine dispatch per backing pool.
+
+        All device-resident pages of all known sequences are translated and
+        gathered together through the VM's mixed-pool engine (a single
+        ``page_coords`` gather + masked decode per pool) instead of one
+        round-trip per sequence — the decode batch assembling several parked
+        sequences is the serving hot path the engine exists for.
+        """
+        seq_ids = list(seq_ids)
+        out: dict[str, np.ndarray | None] = {}
+        known: list[tuple[str, _Entry, bool]] = []
+        all_vpns: list[int] = []
+        for sid in seq_ids:
+            entry = self.lru.get(sid)
+            if entry is None:
+                self.stats.misses += 1
+                out[sid] = None
+                continue
+            self.lru.move_to_end(sid)
+            on_host = self.vm.residency(self.tenant, entry.vpns) != "device"
+            known.append((sid, entry, on_host))
+            all_vpns.extend(entry.vpns)
+        if not known:
+            return out
+        t0 = time.perf_counter()
+        data = np.asarray(self.vm.read(self.tenant, all_vpns), np.uint32)
+        off = 0
+        host_blobs = []
+        for sid, entry, on_host in known:
+            pages = data[off:off + len(entry.vpns)]
+            off += len(entry.vpns)
+            blob = pages.view(np.uint8).reshape(-1)[:entry.nbytes]
+            out[sid] = np.asarray(blob, np.uint8).copy()
+            if on_host:
+                host_blobs.append(out[sid])
+                self.stats.host_hits += 1
+            else:
+                self.stats.device_hits += 1
+        if host_blobs:
+            # charge the host->device transfer (the "page fault"), exactly
+            # as the single-sequence resume() does — one batched upload
+            _ = jax.device_put(np.concatenate(host_blobs)).block_until_ready()
+        fetch_s = time.perf_counter() - t0
+        # charge the batch's wall time to the slower tier it touched
+        if host_blobs:
+            self.stats.host_fetch_s += fetch_s
+        else:
+            self.stats.device_fetch_s += fetch_s
+        return out
+
     def resume(self, seq_id: str) -> np.ndarray | None:
         """Fetch a sequence's state; None if unknown (caller must prefill)."""
         entry = self.lru.get(seq_id)

@@ -19,8 +19,12 @@ Terminology (OS analogue over the paper's hardware):
     frequency the capacity mode controls.
 
 All data-plane traffic goes through :meth:`VirtualMemory.read` /
-:meth:`VirtualMemory.write`, which batch per pool via
-:func:`repro.core.pool.read_pages_any` / ``write_pages_any``.
+:meth:`VirtualMemory.write`, which batch per pool through the mixed-pool
+access engine — the pre-jitted :func:`repro.core.pool.read_pages_any_jit` /
+``write_pages_any_jit`` (one ``page_coords`` gather/scatter + masked batched
+codecs per pool, donation-friendly on the write side). Page-table walks stay
+host-side (they are dict lookups); everything that touches pool storage is
+one traced dispatch per pool.
 """
 from __future__ import annotations
 
@@ -86,13 +90,17 @@ class AddressSpace:
 class FrameAllocator:
     """Free lists over one pool's frames, keyed by storage class.
 
-    ``owner`` maps a mapped frame to its ``(tenant, vpn)`` — the reverse
-    translation the migration engine walks when a boundary move dooms frames.
+    Free lists are insertion-ordered dicts (page-id order after a rebuild)
+    with a frame -> class side map, so ``claim`` is O(1) instead of a scan
+    over every free frame. ``owner`` maps a mapped frame to its
+    ``(tenant, vpn)`` — the reverse translation the migration engine walks
+    when a boundary move dooms frames.
     """
 
     def __init__(self, state: PoolState):
-        self.free: dict[Protection, list[int]] = {}
+        self.free: dict[Protection, dict[int, None]] = {}
         self.owner: dict[int, tuple[str, int]] = {}
+        self._class: dict[int, Protection] = {}
         self.rebuild(state)
 
     def rebuild(self, state: PoolState) -> None:
@@ -108,10 +116,13 @@ class FrameAllocator:
             raise RuntimeError(
                 f"frames {lost} are mapped but no longer exist; "
                 "relocate them before repartitioning")
-        self.free = {p: [] for p in _ORDER}
+        self.free = {p: {} for p in _ORDER}
+        self._class = {}
         for phys in range(state.num_pages):
             if phys not in self.owner:
-                self.free[frame_class(state, phys)].append(phys)
+                cls = frame_class(state, phys)
+                self.free[cls][phys] = None
+                self._class[phys] = cls
 
     def peek(self, reliability: Protection, count: int,
              exclude: set[int] | None = None) -> list[int]:
@@ -132,16 +143,18 @@ class FrameAllocator:
         return picks
 
     def claim(self, phys: int, tenant: str, vpn: int) -> None:
-        for lst in self.free.values():
-            if phys in lst:
-                lst.remove(phys)
-                self.owner[phys] = (tenant, vpn)
-                return
-        raise KeyError(f"frame {phys} is not free")
+        cls = self._class.get(phys)
+        if cls is None:
+            raise KeyError(f"frame {phys} is not free")
+        del self.free[cls][phys]
+        del self._class[phys]
+        self.owner[phys] = (tenant, vpn)
 
     def release(self, state: PoolState, phys: int) -> None:
         del self.owner[phys]
-        self.free[frame_class(state, phys)].append(phys)
+        cls = frame_class(state, phys)
+        self.free[cls][phys] = None
+        self._class[phys] = cls
 
     @property
     def used(self) -> int:
@@ -305,7 +318,7 @@ class VirtualMemory:
             for pool_name, phys in picks:
                 by_pool.setdefault(pool_name, []).append(phys)
             for pool_name, phys_list in by_pool.items():
-                self.pools[pool_name] = pool_lib.write_pages_any(
+                self.pools[pool_name] = pool_lib.write_pages_any_jit(
                     self.pools[pool_name], phys_list,
                     jnp.zeros((len(phys_list), self.page_words), jnp.uint32))
         return vpns
@@ -334,18 +347,22 @@ class VirtualMemory:
             raise ValueError(f"expected (n, {self.page_words}) words")
         space = self.tenants[tenant]
         by_pool: dict[str, list[tuple[int, int]]] = {}
+        host_view = None          # one D2H view for all host-resident pages
         for i, vpn in enumerate(vpns):
             pte = space.entries[vpn]
             if pte.pool is None:
-                self.swap[pte.phys] = np.asarray(data[i], np.uint32).copy()
+                if host_view is None:
+                    host_view = np.asarray(data, np.uint32)
+                self.swap[pte.phys] = host_view[i].copy()
                 self.stats.host_writes += 1
             else:
                 by_pool.setdefault(pte.pool, []).append((i, pte.phys))
         for pool_name, items in by_pool.items():
-            idx = [i for i, _ in items]
-            phys = [p for _, p in items]
-            self.pools[pool_name] = pool_lib.write_pages_any(
-                self.pools[pool_name], phys, data[jnp.asarray(idx)])
+            idx = jnp.asarray([i for i, _ in items], jnp.int32)
+            # page ids stay host-side: the engine wrapper validates and
+            # uploads them once (no device round-trip before dispatch)
+            self.pools[pool_name] = pool_lib.write_pages_any_jit(
+                self.pools[pool_name], [p for _, p in items], data[idx])
             self.stats.device_writes += len(items)
 
     def read(self, tenant: str, vpns) -> jax.Array:
@@ -356,26 +373,30 @@ class VirtualMemory:
         gathers per pool.
         """
         vpns = list(vpns)
+        n = len(vpns)
         space = self.tenants[tenant]
-        out: list = [None] * len(vpns)
+        out = jnp.zeros((n, self.page_words), jnp.uint32)
         by_pool: dict[str, list[tuple[int, int]]] = {}
+        host_items: list[tuple[int, int]] = []
         for i, vpn in enumerate(vpns):
             pte = space.entries[vpn]
             if pte.pool is None:
-                # the "page fault": host -> device transfer charged here
-                out[i] = jnp.asarray(self.swap[pte.phys])
+                host_items.append((i, pte.phys))
                 self.stats.host_reads += 1
             else:
                 by_pool.setdefault(pte.pool, []).append((i, pte.phys))
+        if host_items:
+            # the "page fault": host -> device transfer charged here
+            blob = np.stack([self.swap[slot] for _, slot in host_items])
+            out = out.at[jnp.asarray([i for i, _ in host_items])].set(
+                jnp.asarray(blob))
         for pool_name, items in by_pool.items():
-            data = pool_lib.read_pages_any(
-                self.pools[pool_name], [p for _, p in items])
-            for j, (i, _) in enumerate(items):
-                out[i] = data[j]
+            idx = jnp.asarray([i for i, _ in items], jnp.int32)
+            data = pool_lib.read_pages_any_jit(self.pools[pool_name],
+                                               [p for _, p in items])
+            out = out.at[idx].set(data)
             self.stats.device_reads += len(items)
-        if not out:
-            return jnp.zeros((0, self.page_words), jnp.uint32)
-        return jnp.stack(out)
+        return out
 
     # -- swap tier -----------------------------------------------------------
     def swap_out(self, tenant: str, vpns) -> int:
@@ -413,7 +434,7 @@ class VirtualMemory:
             pool_name, phys = home
             self.allocators[pool_name].claim(phys, tenant, vpn)
             blob = self.swap.pop(pte.phys)
-            self.pools[pool_name] = pool_lib.write_pages_any(
+            self.pools[pool_name] = pool_lib.write_pages_any_jit(
                 self.pools[pool_name], [phys], jnp.asarray(blob)[None, :])
             space.entries[vpn] = PTE(pool_name, phys, pte.reliability,
                                      pte.segment)

@@ -15,15 +15,21 @@ The engine turns two events into zero-loss relocations:
     the HARP-style "move hot data away from weakening rows" motion.
 
 Destination writes for SECDED frames reuse the codes the kernel already
-computed (no second encode pass); everything else goes through
-``write_pages_any`` which maintains codes per layout.
+computed (no second encode pass); everything else goes through the jitted
+mixed-pool engine (``write_pages_any_jit``), which maintains codes per
+layout. Every step that touches pool storage — source gather, decode,
+re-encode, destination scatter — is a single traced dispatch per pool, so a
+migration transaction's data plane is jitted end-to-end; only the page-table
+and free-list bookkeeping stays host-side.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from dataclasses import dataclass
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -53,10 +59,25 @@ class MigrationStats:
         return self.bytes_moved / 2**20 / self.seconds if self.seconds else 0.0
 
 
-class MigrationEngine:
-    """Relocates mapped pages between frames without losing contents."""
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_coded_rows(storage: jax.Array, rows: jax.Array,
+                        data: jnp.ndarray, codes: jnp.ndarray) -> jax.Array:
+    """Land pages in SECDED rows reusing precomputed codes — one dispatch."""
+    n = rows.shape[0]
+    storage = storage.at[rows, :DATA_LANES, :].set(
+        data.reshape(n, DATA_LANES, -1))
+    return storage.at[rows, CODE_LANE, :].set(codes)
 
-    def __init__(self, vm: VirtualMemory, use_kernel: bool = True):
+
+class MigrationEngine:
+    """Relocates mapped pages between frames without losing contents.
+
+    ``use_kernel=None`` auto-selects the fused Pallas path on TPU and the
+    vectorised jnp oracle under interpret mode (see
+    :mod:`repro.kernels.migrate.ops`).
+    """
+
+    def __init__(self, vm: VirtualMemory, use_kernel: bool | None = None):
         self.vm = vm
         self.use_kernel = use_kernel
         self.stats = MigrationStats()
@@ -64,7 +85,12 @@ class MigrationEngine:
     # -- building blocks -----------------------------------------------------
     def _read_frames(self, state: PoolState, phys: list[int]
                      ) -> tuple[jnp.ndarray, jnp.ndarray | None]:
-        """Batch-read frames -> (data, precomputed SECDED codes or None)."""
+        """Batch-read frames -> (data, precomputed SECDED codes or None).
+
+        Pure-CREAM InterWrap batches take the fused Pallas gather/re-encode
+        (codes for the destination come free); every other mix goes through
+        the jitted mixed-pool engine in one decode-corrected gather.
+        """
         if state.layout == Layout.INTERWRAP and all(
                 p < state.boundary or p >= state.num_rows for p in phys):
             data, codes = migrate_ops.gather_encode(
@@ -72,7 +98,7 @@ class MigrationEngine:
                 use_kernel=self.use_kernel)
             self.stats.kernel_batches += 1
             return data, codes
-        return pool_lib.read_pages_any(state, phys), None
+        return pool_lib.read_pages_any_jit(state, phys), None
 
     def _write_frames(self, pool_name: str, phys: list[int],
                       data: jnp.ndarray, codes: jnp.ndarray | None) -> None:
@@ -81,51 +107,59 @@ class MigrationEngine:
         state = vm.pools[pool_name]
         if codes is not None and all(
                 state.boundary <= p < state.num_rows for p in phys):
-            rows = jnp.asarray(phys, jnp.int32)
-            storage = state.storage.at[rows, :DATA_LANES, :].set(
-                data.reshape(len(phys), DATA_LANES, state.row_words))
-            storage = storage.at[rows, CODE_LANE, :].set(codes)
+            storage = _scatter_coded_rows(
+                state.storage, jnp.asarray(phys, jnp.int32), data, codes)
             vm.pools[pool_name] = dataclasses.replace(state, storage=storage)
         else:
-            vm.pools[pool_name] = pool_lib.write_pages_any(state, phys, data)
+            vm.pools[pool_name] = pool_lib.write_pages_any_jit(
+                state, phys, data)
 
     def _place(self, data: jnp.ndarray, codes: jnp.ndarray | None,
                victims: list[tuple[str, int, PTE]],
-               exclude: dict[str, set[int]]) -> None:
+               exclude: dict[str, set[int]],
+               avoid_pool: str | None = None) -> None:
         """Land read-out pages in fresh frames (or host) and remap PTEs.
 
         Destination pools are tried in registration order, except that a
-        victim's own source pool is tried last — migration should move data
-        *away* unless nowhere else has room.
+        victim's own source pool is tried last and ``avoid_pool`` is never a
+        destination — migration should move data *away* unless nowhere else
+        has room. Victims are placed in batches grouped by (source pool,
+        reliability class): one free-list peek per (group, destination pool)
+        instead of one walk per page, so the control plane scales with the
+        number of groups, not pages.
         """
         vm = self.vm
         by_pool: dict[str, list[tuple[int, int]]] = {}
         host = None                   # D2H copy made lazily, on first overflow
-        for i, (tenant, vpn, pte) in enumerate(victims):
-            home = None
-            ordered = sorted(vm.allocators.items(),
-                             key=lambda kv: kv[0] == pte.pool)
+        groups: dict[tuple[str | None, object], list[int]] = {}
+        for i, (_, _, pte) in enumerate(victims):
+            groups.setdefault((pte.pool, pte.reliability), []).append(i)
+        for (src_pool, rel), idxs in groups.items():
+            ordered = sorted(
+                (kv for kv in vm.allocators.items() if kv[0] != avoid_pool),
+                key=lambda kv: kv[0] == src_pool)
+            remaining = list(idxs)
             for pool_name, alloc in ordered:
-                picks = alloc.peek(pte.reliability, 1,
-                                   exclude=exclude.get(pool_name))
-                if picks:
-                    home = (pool_name, picks[0])
+                if not remaining:
                     break
-            space = vm.tenants[tenant]
-            if home is None:          # overflow -> host swap tier
+                picks = alloc.peek(rel, len(remaining),
+                                   exclude=exclude.get(pool_name))
+                for phys, i in zip(picks, remaining[:len(picks)]):
+                    tenant, vpn, pte = victims[i]
+                    alloc.claim(phys, tenant, vpn)
+                    vm.tenants[tenant].entries[vpn] = PTE(
+                        pool_name, phys, pte.reliability, pte.segment)
+                    by_pool.setdefault(pool_name, []).append((i, phys))
+                remaining = remaining[len(picks):]
+            for i in remaining:       # overflow -> host swap tier
+                tenant, vpn, pte = victims[i]
                 if host is None:
                     host = np.asarray(data, np.uint32)
                 slot = vm._new_slot()
                 vm.swap[slot] = host[i].copy()
-                space.entries[vpn] = PTE(None, slot, pte.reliability,
-                                         pte.segment)
+                vm.tenants[tenant].entries[vpn] = PTE(
+                    None, slot, pte.reliability, pte.segment)
                 self.stats.to_host += 1
-            else:
-                pool_name, phys = home
-                vm.allocators[pool_name].claim(phys, tenant, vpn)
-                space.entries[vpn] = PTE(pool_name, phys, pte.reliability,
-                                         pte.segment)
-                by_pool.setdefault(pool_name, []).append((i, phys))
         for pool_name, items in by_pool.items():
             idx = jnp.asarray([i for i, _ in items])
             sub_codes = codes[idx] if codes is not None else None
@@ -152,28 +186,29 @@ class MigrationEngine:
             by_pool.setdefault(pte.pool, []).append(len(victims) - 1)
         if not victims:
             return 0
-        datas: list = [None] * len(victims)
-        all_codes: list = [None] * len(victims)
+        # one gather per source pool, scattered straight into victim order —
+        # no per-page slicing on the host
+        n = len(victims)
+        data_all = jnp.zeros((n, vm.page_words), jnp.uint32)
+        codes_all = jnp.zeros((n, vm.row_words), jnp.uint32)
         have_codes = True
         for pool_name, idxs in by_pool.items():
             phys = [victims[i][2].phys for i in idxs]
             data, codes = self._read_frames(vm.pools[pool_name], phys)
-            for j, i in enumerate(idxs):
-                datas[i] = data[j]
-                all_codes[i] = codes[j] if codes is not None else None
-            have_codes = have_codes and codes is not None
-        # free the source frames, but bar them (and any avoided pool) as
+            idx = jnp.asarray(idxs, jnp.int32)
+            data_all = data_all.at[idx].set(data)
+            if codes is None:
+                have_codes = False
+            else:
+                codes_all = codes_all.at[idx].set(codes)
+        # free the source frames, but bar them (and the avoided pool) as
         # destinations for this transaction — relocation must actually move
         exclude: dict[str, set[int]] = {}
         for tenant_, vpn, pte in victims:
             vm.allocators[pte.pool].release(vm.pools[pte.pool], pte.phys)
             exclude.setdefault(pte.pool, set()).add(pte.phys)
-        if avoid_pool is not None:
-            exclude[avoid_pool] = set(range(
-                vm.pools[avoid_pool].num_pages))
-        self._place(jnp.stack(datas),
-                    jnp.stack(all_codes) if have_codes else None,
-                    victims, exclude)
+        self._place(data_all, codes_all if have_codes else None,
+                    victims, exclude, avoid_pool=avoid_pool)
         self.stats.transactions += 1
         self.stats.seconds += time.perf_counter() - t0
         return len(victims)

@@ -1,0 +1,219 @@
+"""Mixed-pool access engine vs. the per-page oracle (property-style).
+
+The vectorised ``read_pages_any`` / ``write_pages_any`` / batched
+``repartition`` must agree *bit-exactly* with the per-page
+``read_page`` / ``write_page`` reference across all four layouts, any
+boundary, and any page-id mix (CREAM regular / SECDED / extra) — and must
+trace with dynamic page-id arrays.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import injection
+from repro.core import pool as P
+from repro.core.layouts import (GROUP_ROWS, Layout, extra_page_count,
+                                page_coords, place_page)
+
+RNG = np.random.default_rng(3)
+ROW_WORDS = 64
+ALL_LAYOUTS = [Layout.PACKED, Layout.RANK_SUBSET, Layout.INTERWRAP,
+               Layout.PARITY]
+BOUNDARIES = [0, GROUP_ROWS, 16, 32]
+
+
+def rand_pages(n, pw):
+    return jnp.asarray(RNG.integers(0, 2**32, (n, pw), dtype=np.uint32))
+
+
+def mixed_ids(pool, n=12):
+    """A shuffled id sample covering CREAM, SECDED, and extra pages."""
+    ids = list(RNG.permutation(pool.num_pages)[:n])
+    for anchor in (0, pool.boundary, pool.num_rows - 1, pool.num_pages - 1):
+        if 0 <= anchor < pool.num_pages and anchor not in ids:
+            ids.append(anchor)
+    return [int(i) for i in ids]
+
+
+@pytest.mark.parametrize("layout", ALL_LAYOUTS)
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+def test_write_any_read_page_roundtrip(layout, boundary):
+    pool = P.make_pool(32, layout, boundary=boundary, row_words=ROW_WORDS)
+    ids = mixed_ids(pool)
+    data = rand_pages(len(ids), pool.page_words)
+    pool = P.write_pages_any(pool, ids, data)
+    for j, pid in enumerate(ids):
+        got, status = P.read_page(pool, pid)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(data[j]))
+        assert int(status) == 0
+
+
+@pytest.mark.parametrize("layout", ALL_LAYOUTS)
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+def test_write_page_read_any_roundtrip(layout, boundary):
+    pool = P.make_pool(32, layout, boundary=boundary, row_words=ROW_WORDS)
+    ids = mixed_ids(pool)
+    data = rand_pages(len(ids), pool.page_words)
+    for j, pid in enumerate(ids):
+        pool = P.write_page(pool, pid, data[j])
+    got, status = P.read_pages_any_status(pool, ids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(data))
+    assert not np.asarray(status).any()
+
+
+@pytest.mark.parametrize("layout", ALL_LAYOUTS)
+def test_engine_is_jittable_with_traced_ids(layout):
+    """read/write_pages_any must trace with *dynamic* page-id arrays."""
+    pool = P.make_pool(32, layout, boundary=16, row_words=ROW_WORDS)
+    ids = jnp.asarray(mixed_ids(pool, 8), jnp.int32)
+    data = rand_pages(ids.shape[0], pool.page_words)
+
+    write = jax.jit(P.write_pages_any)
+    read = jax.jit(P.read_pages_any)
+    pool = write(pool, ids, data)
+    np.testing.assert_array_equal(np.asarray(read(pool, ids)),
+                                  np.asarray(data))
+    # same trace serves a different id vector of the same length
+    ids2 = jnp.flip(ids)
+    got = read(pool, ids2)
+    for j, pid in enumerate(ids2.tolist()):
+        exp, _ = P.read_page(pool, pid)
+        np.testing.assert_array_equal(np.asarray(got[j]), np.asarray(exp))
+
+
+def test_engine_status_flags_secded_and_parity_errors():
+    pool = P.make_pool(16, Layout.INTERWRAP, boundary=8, row_words=ROW_WORDS)
+    d = rand_pages(1, pool.page_words)[0]
+    pool = P.write_page(pool, 12, d)
+    stor, _ = injection.inject_flips(pool.storage, RNG, 1, row_range=(12, 13),
+                                     lanes=tuple(range(8)))
+    got, status = P.read_pages_any_status(
+        dataclasses.replace(pool, storage=stor), [12, 0])
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(d))
+    assert int(status[0]) in (1, 2) and int(status[1]) == 0
+
+    pp = P.make_pool(16, Layout.PARITY, row_words=ROW_WORDS)
+    d2 = rand_pages(1, pp.page_words)[0]
+    pp = P.write_page(pp, 3, d2)
+    arr = np.asarray(pp.storage).copy()
+    arr[3, 2, 5] ^= np.uint32(1 << 3)
+    _, status = P.read_pages_any_status(
+        dataclasses.replace(pp, storage=jnp.asarray(arr)), [3, 4])
+    assert int(status[0]) == 3 and int(status[1]) == 0
+
+
+@pytest.mark.parametrize("layout", ALL_LAYOUTS)
+def test_batched_repartition_matches_per_page_oracle(layout):
+    """Boundary moves re-encode exactly like the per-page reference would.
+
+    Regular pages survive both directions under every layout; surviving
+    extra pages do too — PARITY extras are re-homed above the resized
+    parity tables, the other layouts' extras never move.
+    """
+    pool = P.make_pool(32, layout, boundary=16, row_words=ROW_WORDS)
+    pids = [0, 5, 15, 16, 30, 31]
+    if pool.num_pages > 32:
+        pids.append(32)
+    keep = {}
+    for pid in pids:
+        d = rand_pages(1, pool.page_words)[0]
+        keep[pid] = d
+        pool = P.write_page(pool, pid, d)
+    grown, info = P.repartition(pool, 32)
+    assert info["pages_reencoded"] == 16
+    for pid, d in keep.items():
+        got, status = P.read_page(grown, pid)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(d))
+        assert int(status) == 0
+    shrunk, info2 = P.repartition(grown, 8)
+    assert info2["pages_reencoded"] == 24
+    lim = 32 + extra_page_count(layout, 8, ROW_WORDS)
+    for pid, d in keep.items():
+        if pid >= lim:
+            continue
+        got, status = P.read_page(shrunk, pid)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(d))
+        assert int(status) == 0
+
+
+def test_parity_extra_pages_survive_boundary_moves_mapped_in_vm():
+    """A mapped PARITY extra page keeps its contents across a downgrade
+    (its storage is re-homed above the grown parity tables) and is
+    live-migrated on the upgrade that dooms it — zero loss either way."""
+    from repro.core.protection import Protection
+    from repro.vm import MigrationEngine, VirtualMemory
+    vm = VirtualMemory(row_words=ROW_WORDS)
+    vm.add_pool("p", 32, Layout.PARITY, boundary=16)
+    vm.create_tenant("t", default_reliability=Protection.NONE)
+    vpns = vm.alloc("t", vm.pools["p"].num_pages, allow_host=False)
+    data = rand_pages(len(vpns), vm.page_words)
+    vm.write("t", vpns, data)
+    eng = MigrationEngine(vm)
+    eng.repartition_with_migration("p", 32)          # downgrade: tables grow
+    np.testing.assert_array_equal(np.asarray(vm.read("t", vpns)),
+                                  np.asarray(data))
+    info = eng.repartition_with_migration("p", 8)    # upgrade: extras doomed
+    assert info["migrated"] >= 1
+    np.testing.assert_array_equal(np.asarray(vm.read("t", vpns)),
+                                  np.asarray(data))
+
+
+def test_batch_status_contract_shapes():
+    """Both read_pages_batch_status branches return ((n, pw), (n,)) int32."""
+    for layout, boundary in [(Layout.INTERWRAP, None), (Layout.INTERWRAP, 0)]:
+        pool = P.make_pool(16, layout, boundary=boundary, row_words=ROW_WORDS)
+        ids = jnp.asarray([0, 3, 9], jnp.int32)
+        data, status = P.read_pages_batch_status(pool, ids)
+        assert data.shape == (3, pool.page_words) and data.dtype == jnp.uint32
+        assert status.shape == (3,) and status.dtype == jnp.int32
+
+
+def test_migrate_pages_single_dispatch():
+    src = P.make_pool(16, Layout.INTERWRAP, row_words=ROW_WORDS)
+    dst = P.make_pool(16, Layout.INTERWRAP, boundary=0, row_words=ROW_WORDS)
+    ids = jnp.asarray([0, 9, 17], jnp.int32)   # includes an extra page
+    data = rand_pages(3, src.page_words)
+    src = P.write_pages_any(src, ids, data)
+    dst_ids = jnp.asarray([2, 3, 4], jnp.int32)
+    dst = P.migrate_pages(src, ids, dst, dst_ids)
+    got, status = P.read_pages_any_status(dst, dst_ids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(data))
+    assert not np.asarray(status).any()
+
+
+# -- hypothesis property sweep (optional dep, heavier => slow marker) --------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.slow
+    @given(st.integers(0, 10**9),
+           st.sampled_from(ALL_LAYOUTS),
+           st.integers(0, 4).map(lambda g: g * GROUP_ROWS))
+    @settings(max_examples=12, deadline=None)
+    def test_any_engine_agrees_with_oracle_property(seed, layout, boundary):
+        rng = np.random.default_rng(seed)
+        pool = P.make_pool(32, layout, boundary=boundary, row_words=ROW_WORDS)
+        n = int(rng.integers(1, 10))
+        ids = [int(p) for p in rng.integers(0, pool.num_pages, n)]
+        ids = list(dict.fromkeys(ids))             # dedup, keep order
+        data = jnp.asarray(rng.integers(0, 2**32, (len(ids), pool.page_words),
+                                        dtype=np.uint32))
+        batched = P.write_pages_any(pool, ids, data)
+        looped = pool
+        for j, pid in enumerate(ids):
+            looped = P.write_page(looped, pid, data[j])
+        np.testing.assert_array_equal(np.asarray(batched.storage),
+                                      np.asarray(looped.storage))
+        got = P.read_pages_any(batched, ids)
+        for j, pid in enumerate(ids):
+            exp, _ = P.read_page(batched, pid)
+            np.testing.assert_array_equal(np.asarray(got[j]), np.asarray(exp))

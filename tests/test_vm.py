@@ -293,3 +293,24 @@ def test_sequence_cache_survives_pool_upgrade():
     eng.repartition_with_migration(SequenceCache.POOL, 0)   # upgrade
     for sid, b in blobs.items():
         assert (cache.resume(sid) == b).all()      # nothing lost
+
+
+def test_sequence_cache_resume_many_batches_tiers():
+    """One engine dispatch resumes a device+host mix; unknowns miss cleanly."""
+    from repro.serve.kv_cache import SequenceCache
+    cache = SequenceCache(num_rows=16, mode="cream", row_words=ROW_WORDS)
+    blobs = {}
+    for i in range(6):
+        sid = f"s{i}"
+        blobs[sid] = RNG.integers(0, 256, size=2500, dtype=np.uint8)
+        cache.park(sid, blobs[sid])
+    for i in range(14):                     # overflow -> LRU demotions to host
+        sid = f"x{i}"
+        blobs[sid] = RNG.integers(0, 256, size=2500, dtype=np.uint8)
+        cache.park(sid, blobs[sid])
+    got = cache.resume_many(list(blobs) + ["unknown"])
+    assert got["unknown"] is None and cache.stats.misses == 1
+    for sid, b in blobs.items():
+        assert got[sid] is not None and (got[sid] == b).all()
+    assert cache.stats.host_hits > 0        # the batch really spanned tiers
+    assert (cache.resume("s0") == blobs["s0"]).all()   # singles still agree
