@@ -7,12 +7,18 @@ Two workload configs, as in §6.1:
 Per config we combine (a) the page-fault model at that config's effective
 capacity (+12.5% correction-free, +10.7% parity, 0% baseline) and (b) the
 DRAM-sim access-cost multiplier for the layout's extra operations.
+
+The model rows are cross-checked against the *real* data plane: the
+``fig8_memcached_real_*`` rows replay the same zipfian workload shape
+through :class:`repro.objcache.ObjCache` (values in actual CREAM pool
+pages, capacity set by the boundary register) via the shared
+``bench_objcache`` driver at reduced scale.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks import cache_sim
+from benchmarks import bench_objcache, cache_sim
 from benchmarks.dram_sim import run_workload
 from repro.core.layouts import CAPACITY_GAIN, Layout
 
@@ -70,11 +76,19 @@ def run(seed: int = 0) -> dict[str, dict[str, float]]:
     return results
 
 
-def main() -> list[tuple[str, float, str]]:
+def main(seed: int = 0) -> list[tuple[str, float, str]]:
     rows = []
-    for key, r in run().items():
+    for key, r in run(seed).items():
         rows.append((f"fig8_memcached_{key}", r["total_us"],
                      f"speedup={r['speedup']:.3f},faults={r['fault_rate']:.4f}"))
+    # real-data-plane cross-check: same workload shape, actual CREAM pools
+    real = bench_objcache.run(seed=seed, rows=32, n_accesses=2048,
+                              kinds=("zipf",))
+    for name, s in real["zipf"].items():
+        rows.append((f"fig8_memcached_real_{name}", s["model_total_us"],
+                     f"speedup={s['model_speedup']:.3f},"
+                     f"hit={s['hit_rate']:.4f},"
+                     f"capacity={s['capacity_pages']}pages"))
     return rows
 
 

@@ -26,9 +26,11 @@ LOADS = [0.5, 0.7, 0.9, 1.0]
 
 
 def _trace(rng: np.random.Generator, n: int) -> np.ndarray:
-    hot = rng.integers(0, HOT_PAGES, size=n)
-    cold = HOT_PAGES + rng.integers(0, COLD_PAGES, size=n)
-    return np.where(rng.random(n) < HOT_FRAC, hot, cold)
+    # shared generator, same as fig8 and bench_objcache. alpha=0 keeps the
+    # hot set uniform: Fig. 4's regime needs the *whole* hot working set in
+    # play (slightly larger than the smallest DRAM size), not a zipf head.
+    return cache_sim.websearch_trace(rng, HOT_PAGES, COLD_PAGES, n,
+                                     hot_frac=HOT_FRAC, alpha=0.0)
 
 
 def _steady_service(capacity: int, seed: int = 0) -> float:
@@ -94,8 +96,8 @@ def run(seed: int = 0) -> dict:
             "iso_latency_load_gain": load_gain}
 
 
-def main() -> list[tuple[str, float, str]]:
-    r = run()
+def main(seed: int = 0) -> list[tuple[str, float, str]]:
+    r = run(seed)
     rows = []
     for name, curve in r["curves"].items():
         rows.append((f"fig4_websearch_p95_{name}", curve[-1],

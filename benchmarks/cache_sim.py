@@ -85,9 +85,32 @@ def run_trace(capacity_pages: int, trace: np.ndarray,
 
 def zipf_trace(rng: np.random.Generator, n_pages: int, n_accesses: int,
                alpha: float = 0.99) -> np.ndarray:
-    """Zipfian page popularity (hot keys), shuffled page ids."""
+    """Zipfian page popularity (hot keys), shuffled page ids.
+
+    The single shared trace generator: ``bench_capacity`` (Fig. 8),
+    ``bench_websearch`` (Fig. 4, via :func:`websearch_trace`), and the
+    ``bench_objcache`` replay driver all draw from here, so the abstract
+    page-fault model and the real CREAM-Cache data plane see the same
+    workload shape.
+    """
     ranks = np.arange(1, n_pages + 1, dtype=np.float64)
     probs = ranks ** (-alpha)
     probs /= probs.sum()
     perm = rng.permutation(n_pages)
     return perm[rng.choice(n_pages, size=n_accesses, p=probs)]
+
+
+def websearch_trace(rng: np.random.Generator, hot_pages: int,
+                    cold_pages: int, n_accesses: int,
+                    hot_frac: float = 0.95,
+                    alpha: float = 0.99) -> np.ndarray:
+    """WebSearch-style index traffic: a zipfian hot set over a uniform tail.
+
+    ``hot_frac`` of accesses go to a :func:`zipf_trace` over the first
+    ``hot_pages`` ids; the rest fall uniformly on the ``cold_pages`` above
+    them — the paper's Fig. 4 regime (hot working set slightly larger than
+    the smallest DRAM size).
+    """
+    hot = zipf_trace(rng, hot_pages, n_accesses, alpha)
+    cold = hot_pages + rng.integers(0, cold_pages, size=n_accesses)
+    return np.where(rng.random(n_accesses) < hot_frac, hot, cold)

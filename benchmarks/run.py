@@ -8,13 +8,16 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract). Figure map:
   ops_* / kernel_*  layout + kernel overheads   (paper §4.4 analogue)
   serving_*         CREAM-pool serving engine   (beyond paper)
   vm_*              CREAM-VM multi-tenant sim   (beyond paper)
+  objcache_*        CREAM-Cache real-data-plane memcached (beyond paper)
 
 ``--only NAME[,NAME...]`` runs a subset of suites (CI smoke uses
-``--only vm,kernels``). ``--json [DIR]`` additionally writes one
+``--only vm,kernels,objcache``). ``--json [DIR]`` additionally writes one
 machine-readable ``BENCH_<suite>.json`` per suite (``{name: us_per_call}``)
-so successive PRs can diff the perf trajectory.
+so successive PRs can diff the perf trajectory. ``--seed N`` is forwarded
+to every suite whose entry point accepts a ``seed`` keyword.
 """
 import argparse
+import inspect
 import json
 import os
 import sys
@@ -23,9 +26,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_capacity, bench_kernels, bench_overheads,
-                            bench_parallelism, bench_sensitivity,
-                            bench_serving, bench_vm, bench_websearch)
+    from benchmarks import (bench_capacity, bench_kernels, bench_objcache,
+                            bench_overheads, bench_parallelism,
+                            bench_sensitivity, bench_serving, bench_vm,
+                            bench_websearch)
     suites = [
         ("fig4", bench_websearch.main),
         ("fig8", bench_capacity.main),
@@ -35,6 +39,7 @@ def main() -> None:
         ("kernels", bench_kernels.main),
         ("serving", bench_serving.main),
         ("vm", bench_vm.main),
+        ("objcache", bench_objcache.main),
     ]
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -43,6 +48,8 @@ def main() -> None:
                     metavar="DIR",
                     help="also write BENCH_<suite>.json (name -> us_per_call)"
                          " into DIR (default: current directory)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base RNG seed, forwarded to suites that take one")
     args = ap.parse_args()
     if args.only:
         wanted = set(args.only.split(","))
@@ -57,8 +64,10 @@ def main() -> None:
         t0 = time.time()
         results = {}
         suite_ok = True
+        kwargs = {"seed": args.seed} \
+            if "seed" in inspect.signature(fn).parameters else {}
         try:
-            for name, val, derived in fn():
+            for name, val, derived in fn(**kwargs):
                 print(f"{name},{val:.3f},{derived}", flush=True)
                 results[name] = val
         except Exception as e:  # noqa: BLE001

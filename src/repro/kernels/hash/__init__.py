@@ -1,0 +1,1 @@
+"""Fused hash-probe + mixed-pool page gather kernel (the objcache get path)."""

@@ -1,0 +1,34 @@
+"""Public entry point for the fused probe+gather with kernel/ref dispatch.
+
+Follows the ``kernels.mixed`` pattern: ``use_kernel=None`` auto-selects the
+Pallas kernel where it lowers natively (TPU) and the vectorised jnp oracle
+under interpret mode, where a per-slice grid walk would be pure overhead.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.layouts import Layout
+from repro.core.pool import PoolState
+from repro.kernels.common import use_interpret
+from repro.kernels.hash import kernel, ref
+from repro.objcache.hash_index import HashIndex
+
+
+def lookup_read(storage: jax.Array, slot_keys: jax.Array,
+                slot_pages: jax.Array, queries: jax.Array, layout: Layout,
+                num_rows: int, boundary: int, probe: int,
+                use_kernel: bool | None = None) -> jax.Array:
+    if use_kernel is None:
+        use_kernel = not use_interpret()
+    fn = kernel.lookup_read if use_kernel else ref.lookup_read
+    return fn(storage, slot_keys, slot_pages, queries, layout, num_rows,
+              boundary, probe)
+
+
+def lookup_pool(state: PoolState, index: HashIndex, queries: jax.Array,
+                use_kernel: bool | None = None) -> jax.Array:
+    """Convenience wrapper taking a :class:`PoolState` and :class:`HashIndex`."""
+    return lookup_read(state.storage, index.key, index.page, queries,
+                       state.layout, state.num_rows, state.boundary,
+                       index.probe, use_kernel=use_kernel)

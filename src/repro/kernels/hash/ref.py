@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the fused probe + gather read.
+
+Semantics: resolve each query key against the index's slot arrays with the
+canonical bounded linear probe (:mod:`repro.objcache.hash_index` is the
+single source of the probe sequence), then perform the decode-corrected
+mixed-pool gather of the matched pages — exactly
+:func:`repro.kernels.mixed.ref.read_correct` over the resolved page vector.
+Unmatched queries resolve to page 0; callers mask rows on their own found
+bit (the oracle and the kernel agree bit-for-bit on those rows too, both
+reading page 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layouts import Layout
+from repro.kernels.mixed import ref as mixed_ref
+from repro.objcache import hash_index as hix
+
+
+def resolve_pages(slot_keys: jax.Array, slot_pages: jax.Array,
+                  queries: jax.Array, probe: int) -> jax.Array:
+    """(C,) keys, (C,) pages, (n,) queries -> (n,) matched pages (0 if absent)."""
+    c = slot_keys.shape[0]
+    q = queries.astype(jnp.uint32)
+    cand = hix.probe_slots(q, c, probe)
+    hit = slot_keys[cand] == q[:, None]
+    first = jnp.argmax(hit, axis=1)
+    found = jnp.any(hit, axis=1)
+    slot = jnp.take_along_axis(cand, first[:, None], axis=1)[:, 0]
+    return jnp.where(found, slot_pages[slot], 0).astype(jnp.int32)
+
+
+def lookup_read(storage: jax.Array, slot_keys: jax.Array,
+                slot_pages: jax.Array, queries: jax.Array, layout: Layout,
+                num_rows: int, boundary: int, probe: int) -> jax.Array:
+    """(R, 9, W) pool + index arrays + (n,) keys -> (n, 8W) page data."""
+    pages = resolve_pages(slot_keys, slot_pages, queries, probe)
+    return mixed_ref.read_correct(storage, pages, layout, num_rows, boundary)

@@ -35,8 +35,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.layouts import (CODE_LANE, DATA_LANES, GROUP_ROWS, LANES,
                                 Layout, extra_base_row)
 from repro.kernels.common import use_interpret
-from repro.kernels.secded.kernel import (_encode_beats, _syndrome_action,
-                                         _unpack4)
+from repro.kernels.secded.kernel import decode_correct_block
 
 
 def _coords(page, k, layout: Layout, num_rows: int, boundary: int,
@@ -66,17 +65,7 @@ def _read_correct_kernel(pages_ref, is_sec_ref, storage_ref, codes_ref,
                          out_ref):
     i = pl.program_id(0)
     blk = storage_ref[...]                                # (1, 1, W)
-    flat = blk.reshape(1, -1)
-    pairs = flat.reshape(1, flat.shape[1] // 2, 2)
-    lo, hi = pairs[..., 0], pairs[..., 1]
-    stored = _unpack4(codes_ref[...].reshape(1, -1), lo.shape[1])
-    syndrome = (_encode_beats(lo, hi) ^ stored) & jnp.uint32(0xFF)
-    action = _syndrome_action(syndrome)
-    is_data = (action >= 0) & (action < 64)
-    bit = jnp.where(action >= 0, action, 0).astype(jnp.uint32)
-    lo = lo ^ jnp.where(is_data & (bit < 32), jnp.uint32(1) << (bit & 31), 0)
-    hi = hi ^ jnp.where(is_data & (bit >= 32), jnp.uint32(1) << (bit & 31), 0)
-    fixed = jnp.stack([lo, hi], axis=-1).reshape(blk.shape)
+    fixed = decode_correct_block(blk, codes_ref[...])
     out_ref[...] = jnp.where(is_sec_ref[i] != 0, fixed, blk)
 
 

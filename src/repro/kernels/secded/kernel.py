@@ -73,6 +73,30 @@ def _unpack4(packed: jax.Array, beats: int) -> jax.Array:
     return jnp.stack(parts, axis=-1).reshape(packed.shape[0], beats)
 
 
+def decode_correct_block(blk: jax.Array, packed_codes: jax.Array
+                         ) -> jax.Array:
+    """Fused Hsiao check+correct of one flattened block (VPU-only work).
+
+    ``blk`` is any uint32 block whose flattened words pair into 64-bit
+    beats; ``packed_codes`` holds the matching packed code bytes (one per
+    beat, 4 per word). Returns the block with single-bit *data* errors
+    corrected in place — code-bit and uncorrectable beats pass through
+    unchanged. Shared by every kernel that fuses correction into a gather
+    (``kernels.mixed``, ``kernels.hash``).
+    """
+    flat = blk.reshape(1, -1)
+    pairs = flat.reshape(1, flat.shape[1] // 2, 2)
+    lo, hi = pairs[..., 0], pairs[..., 1]
+    stored = _unpack4(packed_codes.reshape(1, -1), lo.shape[1])
+    syndrome = (_encode_beats(lo, hi) ^ stored) & jnp.uint32(0xFF)
+    action = _syndrome_action(syndrome)
+    is_data = (action >= 0) & (action < 64)
+    bit = jnp.where(action >= 0, action, 0).astype(jnp.uint32)
+    lo = lo ^ jnp.where(is_data & (bit < 32), jnp.uint32(1) << (bit & 31), 0)
+    hi = hi ^ jnp.where(is_data & (bit >= 32), jnp.uint32(1) << (bit & 31), 0)
+    return jnp.stack([lo, hi], axis=-1).reshape(blk.shape)
+
+
 def _encode_kernel(data_ref, codes_ref):
     lo, hi = _split(data_ref[...])
     codes_ref[...] = _pack4(_encode_beats(lo, hi))

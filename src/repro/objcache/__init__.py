@@ -1,0 +1,16 @@
+"""CREAM-Cache: a key-value object cache living on the CREAM data plane.
+
+The paper's memcached experiment (Fig. 8), made real: cached values are
+stored in CREAM pool pages allocated through :class:`repro.vm.VirtualMemory`,
+per-item reliability classes map hot/authoritative items onto SECDED frames
+and cold bulk onto PARITY/NONE frames, and the batched get/set hot path is
+one traced dispatch over the mixed-pool access engine — so capacity gains,
+reliability demotions, and repartition-driven migrations show up as measured
+hit rate and latency on actual data-plane traffic.
+"""
+from repro.objcache.cache import ObjCache, ObjCacheStats
+from repro.objcache.hash_index import HashIndex, make_index
+from repro.objcache.slab import SlabAllocator
+
+__all__ = ["ObjCache", "ObjCacheStats", "HashIndex", "make_index",
+           "SlabAllocator"]

@@ -1,0 +1,170 @@
+"""Vectorised open-addressing hash index over jnp arrays.
+
+The index is the device-resident half of the object cache's translation: it
+maps a uint32 key to the *physical pool page* (plus word offset and length)
+holding its value, so the batched get path resolves keys straight against
+pool storage with no host-side page-table walk. Everything here is pure
+functional jnp — traced key batches compose under jit, and the probe
+sequence below is the single definition shared with the fused Pallas probe
+kernel (:mod:`repro.kernels.hash`), which must match it slot for slot.
+
+Collision policy is bounded linear probing: a key lives in the first
+matching slot of its ``probe``-long candidate window; lookups scan the whole
+window (no early exit on empties, so tombstones need no special casing) and
+inserts claim the first EMPTY/TOMB slot via a first-writer-wins scatter —
+``probe`` rounds of pure vector work, never a per-key host loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+#: Slot-state sentinels in the key array. User keys must be < TOMB.
+EMPTY = 0xFFFFFFFF
+TOMB = 0xFFFFFFFE
+MAX_KEY = TOMB - 1
+
+#: Knuth's multiplicative constant (2^32 / golden ratio).
+_KNUTH = 2654435761
+
+
+def hash_u32(keys: jax.Array) -> jax.Array:
+    """Multiplicative hash with an xor-shift finaliser (uint32 -> uint32)."""
+    k = keys.astype(jnp.uint32) * jnp.uint32(_KNUTH)
+    return k ^ (k >> 16)
+
+
+def probe_slots(queries: jax.Array, capacity: int, probe: int) -> jax.Array:
+    """(n,) keys -> (n, probe) int32 candidate slots (linear window, mod C)."""
+    h = hash_u32(queries) % jnp.uint32(capacity)
+    r = jnp.arange(probe, dtype=jnp.uint32)
+    return ((h[:, None] + r[None, :]) % jnp.uint32(capacity)).astype(jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class HashIndex:
+    """Functional index state. ``probe`` is static; arrays are the leaves."""
+    key: jax.Array        # (C,) uint32 — stored key, or EMPTY / TOMB
+    page: jax.Array       # (C,) int32  — physical pool page of the value
+    off: jax.Array        # (C,) int32  — word offset within the page
+    length: jax.Array     # (C,) int32  — value length in words
+    probe: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def capacity(self) -> int:
+        return self.key.shape[0]
+
+    @property
+    def live(self) -> jax.Array:
+        return self.key < jnp.uint32(TOMB)
+
+
+def make_index(capacity: int, probe: int = 16) -> HashIndex:
+    """Create an empty index. ``probe`` bounds the displacement of any key."""
+    if probe < 1 or probe > capacity:
+        raise ValueError(f"bad probe window {probe} for capacity {capacity}")
+    return HashIndex(
+        key=jnp.full((capacity,), EMPTY, jnp.uint32),
+        page=jnp.zeros((capacity,), jnp.int32),
+        off=jnp.zeros((capacity,), jnp.int32),
+        length=jnp.zeros((capacity,), jnp.int32),
+        probe=probe)
+
+
+def find(index: HashIndex, queries: jax.Array
+         ) -> tuple[jax.Array, jax.Array]:
+    """Batched probe: (n,) keys -> (slot (n,) int32, found (n,) bool).
+
+    ``slot[i] == capacity`` when absent. One gather over the whole candidate
+    window per key; fully traceable.
+    """
+    c = index.capacity
+    q = queries.astype(jnp.uint32)
+    cand = probe_slots(q, c, index.probe)               # (n, P)
+    hit = index.key[cand] == q[:, None]
+    first = jnp.argmax(hit, axis=1)
+    found = jnp.any(hit, axis=1)
+    slot = jnp.take_along_axis(cand, first[:, None], axis=1)[:, 0]
+    return jnp.where(found, slot, c).astype(jnp.int32), found
+
+
+def lookup(index: HashIndex, queries: jax.Array
+           ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Resolve keys -> ``(page, off, length, slot, found)``, all (n,).
+
+    Values for absent keys are zeroed (page 0 / off 0 / length 0) — callers
+    mask on ``found``.
+    """
+    slot, found = find(index, queries)
+    cs = jnp.minimum(slot, index.capacity - 1)
+    page = jnp.where(found, index.page[cs], 0)
+    off = jnp.where(found, index.off[cs], 0)
+    length = jnp.where(found, index.length[cs], 0)
+    return page, off, length, slot, found
+
+
+def insert(index: HashIndex, queries: jax.Array, pages: jax.Array,
+           offs: jax.Array, lens: jax.Array
+           ) -> tuple[HashIndex, jax.Array, jax.Array]:
+    """Batched insert/update -> ``(index', slot (n,), ok (n,))``.
+
+    Present keys update their slot in place; absent keys claim the first
+    EMPTY/TOMB slot of their window over ``probe`` first-writer-wins rounds
+    (in-batch conflicts on a slot resolve to the lowest batch position —
+    callers must deduplicate keys within a batch). ``ok[i]`` is False when
+    key ``i``'s whole window is occupied by *other* live keys; the caller
+    evicts and retries.
+    """
+    c, p = index.capacity, index.probe
+    q = queries.astype(jnp.uint32)
+    n = q.shape[0]
+    batch = jnp.arange(n, dtype=jnp.int32)
+    slot, found = find(index, q)
+    placed = found
+    slots = jnp.where(found, slot, c)
+    key = index.key
+    cand_all = probe_slots(q, c, p)                     # (n, P)
+    for r in range(p):
+        cand = cand_all[:, r]
+        state = key[cand]
+        want = (~placed) & ((state == jnp.uint32(EMPTY))
+                            | (state == jnp.uint32(TOMB)))
+        # first-writer-wins: lowest batch index claims a contested slot
+        claim = jnp.full((c + 1,), n, jnp.int32).at[
+            jnp.where(want, cand, c)].min(batch)
+        win = want & (claim[cand] == batch)
+        key = key.at[jnp.where(win, cand, c)].set(q, mode="drop")
+        slots = jnp.where(win, cand, slots)
+        placed = placed | win
+    tgt = jnp.where(placed, slots, c)
+    new = dataclasses.replace(
+        index, key=key,
+        page=index.page.at[tgt].set(pages.astype(jnp.int32), mode="drop"),
+        off=index.off.at[tgt].set(offs.astype(jnp.int32), mode="drop"),
+        length=index.length.at[tgt].set(lens.astype(jnp.int32), mode="drop"))
+    return new, slots.astype(jnp.int32), placed
+
+
+def delete(index: HashIndex, queries: jax.Array
+           ) -> tuple[HashIndex, jax.Array]:
+    """Batched delete -> ``(index', found (n,))``. Slots become tombstones."""
+    slot, found = find(index, queries)
+    tgt = jnp.where(found, slot, index.capacity)
+    key = index.key.at[tgt].set(jnp.uint32(TOMB), mode="drop")
+    return dataclasses.replace(index, key=key), found
+
+
+def delete_slots(index: HashIndex, slots: jax.Array) -> HashIndex:
+    """Tombstone concrete slot ids (the eviction path — no probe needed)."""
+    key = index.key.at[slots].set(jnp.uint32(TOMB), mode="drop")
+    return dataclasses.replace(index, key=key)
+
+
+def replace_pages(index: HashIndex, pages: jax.Array) -> HashIndex:
+    """Swap in a rebuilt slot->page translation (post-migration refresh)."""
+    return dataclasses.replace(index,
+                               page=jnp.asarray(pages, jnp.int32))

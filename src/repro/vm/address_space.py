@@ -275,14 +275,16 @@ class VirtualMemory:
     # -- allocation ----------------------------------------------------------
     def alloc(self, tenant: str, n: int, segment: str = "default",
               reliability: Protection | None = None,
-              allow_host: bool = True, zero: bool = True
-              ) -> list[int] | None:
+              allow_host: bool = True, zero: bool = True,
+              pool: str | None = None) -> list[int] | None:
         """Allocate ``n`` virtual pages; returns their vpns.
 
         Frames come from any pool with storage class >= the segment's
-        reliability class (exact class preferred, then stronger). Overflow
-        lands in the host swap tier unless ``allow_host=False``, in which
-        case the allocation either fits on device or returns None untouched.
+        reliability class (exact class preferred, then stronger); ``pool``
+        restricts the search to one pool (callers like the object cache pin
+        their data plane to a single pool's storage). Overflow lands in the
+        host swap tier unless ``allow_host=False``, in which case the
+        allocation either fits on device or returns None untouched.
 
         ``zero=False`` skips scrubbing the claimed device frames — only for
         callers that overwrite every page before any read (the frames may
@@ -292,7 +294,9 @@ class VirtualMemory:
         rel = reliability if reliability is not None \
             else space.segments[segment]
         picks: list[tuple[str, int]] = []
-        for pool_name, alloc in self.allocators.items():
+        candidates = [(pool, self.allocators[pool])] if pool is not None \
+            else list(self.allocators.items())
+        for pool_name, alloc in candidates:
             for phys in alloc.peek(rel, n - len(picks)):
                 picks.append((pool_name, phys))
             if len(picks) == n:

@@ -1,0 +1,244 @@
+"""CREAM-Cache acceptance: batched hot path, reliability classes, the
+capacity bridge (demotion growth / zero-loss upgrade migration)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layouts import Layout
+from repro.core.protection import Protection
+from repro.objcache import ObjCache
+from repro.objcache.cache import _get_batch
+from repro.vm import MigrationEngine, VirtualMemory
+from repro.vm.address_space import frame_class
+from repro.vm.policy import VMPolicy
+from repro.core.monitor import MonitorConfig
+
+ROW_WORDS = 32
+
+
+def value_for(keys, span):
+    keys = np.asarray(keys, np.uint32)
+    return keys[:, None] * np.arange(1, span + 1, dtype=np.uint32)
+
+
+def make_cache(rows=16, layout=Layout.INTERWRAP, boundary=8, **kw):
+    vm = VirtualMemory(row_words=ROW_WORDS)
+    vm.add_pool("dimm", rows, layout, boundary=boundary)
+    cache = ObjCache(vm, "dimm", index_capacity=128, probe=8, **kw)
+    return vm, cache
+
+
+# ---------------------------------------------------------------------------
+# Batched get/set hot path
+# ---------------------------------------------------------------------------
+
+
+def test_set_get_roundtrip_and_misses():
+    _, cache = make_cache()
+    pw = cache.vm.page_words
+    keys = np.arange(1, 6)
+    assert cache.set_many(keys, value_for(keys, pw)).all()
+    got, lens, found = cache.get_many([3, 1, 99, 5])
+    assert found.tolist() == [True, True, False, True]
+    np.testing.assert_array_equal(got[0], value_for([3], pw)[0])
+    np.testing.assert_array_equal(got[3], value_for([5], pw)[0])
+    assert (got[2] == 0).all() and lens[2] == 0
+    assert cache.stats.hits == 3 and cache.stats.misses == 1
+
+
+def test_variable_value_lengths_share_pages():
+    """Sub-page values land in chunks; several share one pool page."""
+    _, cache = make_cache()
+    pw = cache.vm.page_words
+    span = pw // 8
+    keys = np.arange(10, 26)                 # 16 eighth-page values
+    assert cache.set_many(keys, value_for(keys, span)).all()
+    assert cache.capacity_report()["pages_claimed"] <= 2
+    got, lens, found = cache.get_many(keys)
+    assert found.all() and (lens == span).all()
+    np.testing.assert_array_equal(got[:, :span], value_for(keys, span))
+    assert (got[:, span:] == 0).all()
+
+
+def test_update_overwrites_and_delete():
+    _, cache = make_cache()
+    pw = cache.vm.page_words
+    cache.set_many([7], value_for([7], pw))
+    cache.set_many([7], value_for([777], pw))
+    np.testing.assert_array_equal(cache.get_many([7])[0][0],
+                                  value_for([777], pw)[0])
+    assert cache.stats.updates == 1
+    assert cache.delete_many([7, 8]).tolist() == [True, False]
+    assert not cache.get_many([7])[2][0]
+
+
+def test_duplicate_keys_in_batch_last_wins():
+    _, cache = make_cache()
+    pw = cache.vm.page_words
+    keys = np.asarray([5, 9, 5])
+    vals = np.stack([value_for([1], pw)[0], value_for([2], pw)[0],
+                     value_for([3], pw)[0]])
+    assert cache.set_many(keys, vals).all()
+    np.testing.assert_array_equal(cache.get_many([5])[0][0],
+                                  value_for([3], pw)[0])
+
+
+def test_get_set_trace_with_dynamic_key_batches():
+    """The jitted hot path is traced once per shape, not per key batch."""
+    _, cache = make_cache()
+    pw = cache.vm.page_words
+    keys = np.arange(1, 9)
+    cache.set_many(keys, value_for(keys, pw))
+    with jax.checking_leaks():
+        for batch in ([1, 2, 3, 4], [8, 7, 99, 1]):
+            got, _, found = cache.get_many(batch)
+            for i, k in enumerate(batch):
+                if found[i]:
+                    np.testing.assert_array_equal(got[i],
+                                                  value_for([k], pw)[0])
+    # the underlying engine traces with abstract key arrays
+    jax.eval_shape(lambda q: _get_batch(cache.pool, cache.index, q,
+                                        cache.max_value_words, None),
+                   jax.ShapeDtypeStruct((4,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Reliability classes
+# ---------------------------------------------------------------------------
+
+
+def test_reliability_classes_map_to_frame_classes():
+    vm, cache = make_cache()
+    pw = cache.vm.page_words
+    assert cache.set_many([1], value_for([1], pw),
+                          reliability=Protection.SECDED).all()
+    assert cache.set_many([2], value_for([2], pw),
+                          reliability=Protection.NONE).all()
+    for key, want in ((1, Protection.SECDED), (2, Protection.NONE)):
+        slot = int(np.asarray(
+            jax.device_get(_get_batch(cache.pool, cache.index,
+                                      jnp.asarray([key], jnp.uint32),
+                                      pw, None)[2]))[0])
+        pte = vm.tenants[cache.tenant].entries[int(cache._vpn[slot])]
+        assert frame_class(vm.pools[pte.pool], pte.phys) == want
+
+
+def test_secded_items_rejected_when_no_secded_frames():
+    _, cache = make_cache(boundary=16)       # whole pool correction-free
+    pw = cache.vm.page_words
+    stored = cache.set_many([1], value_for([1], pw),
+                            reliability=Protection.SECDED)
+    assert not stored.any()
+    assert cache.stats.rejected == 1
+
+
+def test_flip_in_secded_item_corrected_on_get():
+    vm, cache = make_cache()
+    pw = cache.vm.page_words
+    assert cache.set_many([42], value_for([42], pw),
+                          reliability=Protection.SECDED).all()
+    state = vm.pools["dimm"]
+    slot = int(np.flatnonzero(cache._live)[0])
+    pte = vm.tenants[cache.tenant].entries[int(cache._vpn[slot])]
+    arr = np.asarray(state.storage).copy()
+    arr[pte.phys, 2, 5] ^= np.uint32(1 << 13)
+    vm.pools["dimm"] = dataclasses.replace(state, storage=jnp.asarray(arr))
+    got, _, found = cache.get_many([42])
+    assert found[0]
+    np.testing.assert_array_equal(got[0], value_for([42], pw)[0])
+
+
+# ---------------------------------------------------------------------------
+# Eviction / 2Q
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_under_pressure_prefers_cold_probation():
+    _, cache = make_cache()
+    pw = cache.vm.page_words
+    first = np.arange(1, 9)
+    cache.set_many(first, value_for(first, pw))
+    cache.get_many(first[:4])                # promote 1..4 to the main queue
+    over = np.arange(100, 130)
+    stored = cache.set_many(over, value_for(over, pw))
+    assert cache.stats.evictions > 0 and stored.any()
+    # the promoted hot items outlive the cold probation ones
+    hot_alive = cache.get_many(first[:4])[2]
+    cold_alive = cache.get_many(first[4:])[2]
+    assert hot_alive.sum() >= cold_alive.sum()
+
+
+def test_oversized_batch_admits_what_fits():
+    _, cache = make_cache()
+    pw = cache.vm.page_words
+    cap = cache.vm.device_capacity_pages()
+    huge = np.arange(1000, 1000 + 3 * cap)
+    stored = cache.set_many(huge, value_for(huge, pw))
+    assert 0 < stored.sum() <= cap
+    got, _, found = cache.get_many(huge[stored][:4])
+    assert found.all()
+
+
+# ---------------------------------------------------------------------------
+# The capacity bridge
+# ---------------------------------------------------------------------------
+
+
+def _fill(cache, lo, hi):
+    keys = np.arange(lo, hi)
+    stored = cache.set_many(keys, value_for(keys, cache.vm.page_words))
+    return keys[stored]
+
+
+def test_demotion_grows_capacity_online():
+    vm, cache = make_cache(boundary=0)       # all-SECDED start
+    pw = cache.vm.page_words
+    kept = _fill(cache, 1, 100)              # fill to the brim
+    assert len(kept) == 16                   # baseline capacity
+    ev0 = cache.stats.evictions
+    MigrationEngine(vm).repartition_with_migration("dimm", 16)
+    cache.refresh_translation()
+    assert vm.device_capacity_pages() == 18  # +2 reclaimed extra pages
+    more = np.arange(200, 202)
+    assert cache.set_many(more, value_for(more, pw)).all()
+    # the reclaimed extra pages absorbed the new values: no eviction needed
+    assert cache.stats.evictions == ev0
+    got, _, found = cache.get_many(np.concatenate([kept, more]))
+    assert found.all()
+
+
+def test_upgrade_migration_loses_zero_values():
+    """Acceptance: every key readable before the boundary move is readable
+    after, bit-for-bit — including values bumped to the host swap tier."""
+    vm, cache = make_cache(boundary=16)      # whole pool correction-free
+    pw = cache.vm.page_words
+    kept = _fill(cache, 1, 60)
+    before = {int(k): cache.get_many([int(k)])[0][0].copy() for k in kept}
+    info = MigrationEngine(vm).repartition_with_migration("dimm", 0)
+    assert info["migrated"] > 0
+    cache.refresh_translation()
+    got, lens, found = cache.get_many(kept)
+    assert found.all(), "cached values lost in protection upgrade"
+    for i, k in enumerate(kept):
+        np.testing.assert_array_equal(got[i], before[int(k)])
+    assert cache.stats.host_hits > 0         # some rode the patch path
+
+
+def test_policy_driven_upgrade_keeps_cache_intact():
+    """The scrub->monitor->adapt loop upgrades the pool; the cache follows."""
+    vm, cache = make_cache(boundary=8)       # mixed pool: scrub sees SECDED
+    kept = _fill(cache, 1, 40)
+    policy = VMPolicy(vm, MigrationEngine(vm),
+                      MonitorConfig(window=1, upgrade_threshold=1e-9))
+    # an uncorrectable pattern in a SECDED row trips the monitor
+    state = vm.pools["dimm"]
+    arr = np.asarray(state.storage).copy()
+    arr[12, 1, 2] ^= np.uint32(0b11)
+    vm.pools["dimm"] = dataclasses.replace(state, storage=jnp.asarray(arr))
+    policy.step()
+    assert vm.pools["dimm"].boundary == 0    # upgraded to full SECDED
+    cache.refresh_translation()
+    got, _, found = cache.get_many(kept)
+    assert found.all()

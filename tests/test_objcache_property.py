@@ -1,0 +1,154 @@
+"""Property test: the hash index and cache against a Python-dict oracle.
+
+Random insert/get/delete/evict-pressure sequences across the three
+reliability classes, with a repartition (protection upgrade) forced
+mid-sequence — after which every key the oracle knows must still be
+readable bit-for-bit (the zero-loss acceptance criterion), and absent keys
+must still miss.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.layouts import Layout
+from repro.core.protection import Protection
+from repro.objcache import ObjCache, hash_index as hix
+from repro.vm import MigrationEngine, VirtualMemory
+
+ROW_WORDS = 32
+KEYS = list(range(1, 13))          # small keyspace; capacity never binds
+CLASSES = [Protection.NONE, Protection.PARITY, Protection.SECDED]
+
+
+# ---------------------------------------------------------------------------
+# Index-only state machine (pure jnp, fast)
+# ---------------------------------------------------------------------------
+
+_index_op = st.one_of(
+    st.tuples(st.just("insert"),
+              st.lists(st.sampled_from(KEYS), min_size=1, max_size=4,
+                       unique=True)),
+    st.tuples(st.just("delete"),
+              st.lists(st.sampled_from(KEYS), min_size=1, max_size=3,
+                       unique=True)),
+    st.tuples(st.just("lookup"),
+              st.lists(st.sampled_from(KEYS + [999]), min_size=1,
+                       max_size=4)),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(_index_op, min_size=1, max_size=12))
+def test_hash_index_matches_dict(ops):
+    index = hix.make_index(32, probe=8)
+    oracle: dict[int, tuple[int, int, int]] = {}
+    serial = 0
+    for op, keys in ops:
+        q = jnp.asarray(keys, jnp.uint32)
+        if op == "insert":
+            n = len(keys)
+            meta = [(serial + i, (serial + i) % 7, 1 + (serial + i) % 5)
+                    for i in range(n)]
+            serial += n
+            pages = jnp.asarray([m[0] for m in meta], jnp.int32)
+            offs = jnp.asarray([m[1] for m in meta], jnp.int32)
+            lens = jnp.asarray([m[2] for m in meta], jnp.int32)
+            index, _, ok = hix.insert(index, q, pages, offs, lens)
+            assert np.asarray(ok).all()
+            for k, m in zip(keys, meta):
+                oracle[k] = m
+        elif op == "delete":
+            index, found = hix.delete(index, q)
+            for k, f in zip(keys, np.asarray(found)):
+                assert bool(f) == (k in oracle)
+                oracle.pop(k, None)
+        else:
+            page, off, length, _, found = hix.lookup(index, q)
+            for j, k in enumerate(keys):
+                assert bool(np.asarray(found)[j]) == (k in oracle)
+                if k in oracle:
+                    assert (int(np.asarray(page)[j]),
+                            int(np.asarray(off)[j]),
+                            int(np.asarray(length)[j])) == oracle[k]
+
+
+# ---------------------------------------------------------------------------
+# Full-cache state machine (data plane + classes + repartition)
+# ---------------------------------------------------------------------------
+
+_cache_op = st.one_of(
+    st.tuples(st.just("set"),
+              st.lists(st.sampled_from(KEYS), min_size=1, max_size=3,
+                       unique=True),
+              st.sampled_from(range(len(CLASSES)))),
+    st.tuples(st.just("get"),
+              st.lists(st.sampled_from(KEYS + [777]), min_size=1,
+                       max_size=4),
+              st.just(0)),
+    st.tuples(st.just("delete"),
+              st.lists(st.sampled_from(KEYS), min_size=1, max_size=2,
+                       unique=True),
+              st.just(0)),
+)
+
+
+def _value(key: int, version: int, span: int) -> np.ndarray:
+    return (np.uint32(key * 1000 + version)
+            * np.arange(1, span + 1, dtype=np.uint32))
+
+
+def _check_against_oracle(cache, oracle, keys):
+    got, lens, found = cache.get_many(keys)
+    for j, k in enumerate(keys):
+        assert bool(found[j]) == (k in oracle), f"membership wrong for {k}"
+        if k in oracle:
+            version, span = oracle[k]
+            assert int(lens[j]) == span
+            np.testing.assert_array_equal(got[j, :span],
+                                          _value(k, version, span))
+            assert (got[j, span:] == 0).all()
+
+
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(st.lists(_cache_op, min_size=2, max_size=8),
+       st.integers(0, 2**31 - 1))
+def test_cache_matches_dict_across_repartition(ops, seed):
+    rng = np.random.default_rng(seed)
+    vm = VirtualMemory(row_words=ROW_WORDS)
+    # mixed pool: every reliability class is placeable before AND after the
+    # upgrade (over-protection is always allowed)
+    vm.add_pool("dimm", 24, Layout.INTERWRAP, boundary=16)
+    cache = ObjCache(vm, "dimm", index_capacity=64, probe=8)
+    engine = MigrationEngine(vm)
+    oracle: dict[int, tuple[int, int]] = {}
+    version = 0
+    spans = [ROW_WORDS, 2 * ROW_WORDS, 8 * ROW_WORDS]
+    mid = max(1, len(ops) // 2)
+    for step, (op, keys, relidx) in enumerate(ops):
+        if step == mid:
+            # protection upgrade mid-sequence: zero loss required
+            engine.repartition_with_migration("dimm", 0)
+            cache.refresh_translation()
+            _check_against_oracle(cache, oracle, list(oracle) or [777])
+        if op == "set":
+            version += 1
+            span = spans[int(rng.integers(len(spans)))]
+            vals = np.stack([_value(k, version, span) for k in keys])
+            stored = cache.set_many(keys, vals,
+                                    reliability=CLASSES[relidx])
+            assert stored.all()              # capacity never binds here
+            for k in keys:
+                oracle[k] = (version, span)
+        elif op == "delete":
+            found = cache.delete_many(keys)
+            for k, f in zip(keys, found):
+                assert bool(f) == (k in oracle)
+                oracle.pop(k, None)
+        else:
+            _check_against_oracle(cache, oracle, keys)
+    _check_against_oracle(cache, oracle, KEYS + [777])
