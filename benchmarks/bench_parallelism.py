@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.dram_sim import NUM_BANKS, Core, DRAMSim, make_core
+from benchmarks.dram_sim import Core, DRAMSim, make_core
 from repro.core.layouts import Layout
 
 CONFIGS = [

@@ -22,7 +22,6 @@ import numpy as np
 from repro.core.layouts import Layout
 from repro.core.softecc import CodeCache, plan_line_ops
 from benchmarks.dram_sim import DRAMSim, make_core
-from repro.core.layouts import plan_line_access
 
 NUM_ROWS = 256
 N_REQ = 600

@@ -1,0 +1,148 @@
+"""Bench-regression gate: diff fresh ``BENCH_*.json`` against baselines.
+
+``benchmarks/baselines/`` holds committed ``BENCH_<suite>.json`` snapshots
+(the CI smoke config). After ``benchmarks/run.py --json .`` writes fresh
+files, this script compares every baselined metric:
+
+  * time-like metrics (the default; us/call): fail when
+    ``fresh > baseline * tolerance``;
+  * higher-is-better metrics (weighted speedups, hit rates — matched by
+    name, see ``HIGHER_IS_BETTER``): fail when
+    ``fresh < baseline / tolerance``.
+
+A missing fresh file or metric fails too — a suite silently dropping rows
+is itself a regression. Metrics present only in the fresh output are
+reported but never fail (they gate once baselined). Partial-suite files
+(``BENCH_*.partial.json``) are ignored on both sides.
+
+Usage::
+
+    python benchmarks/check_regression.py [--baseline benchmarks/baselines]
+        [--fresh .] [--tolerance 1.5] [--suites vm,kernels]
+        [--update]        # rewrite baselines from fresh (rebaselining)
+
+Exit status 0 = within tolerance, 1 = regression (every violation listed).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+#: Substrings marking metrics where *larger* is better. Everything else is
+#: treated as a cost (us/call) where smaller is better. Covers the current
+#: suites: weighted speedups (`fig9_real_ws_*`), reclaimed-capacity page
+#: counts (`vm_*_capacity`), and the objcache demotion hit-rate gain
+#: (`objcache_demotion`).
+HIGHER_IS_BETTER = ("_ws_", "hit_rate", "hitrate", "speedup", "_gain",
+                    "_capacity", "demotion")
+
+
+def is_higher_better(name: str) -> bool:
+    return any(tag in name for tag in HIGHER_IS_BETTER)
+
+
+def _load(path: str) -> dict[str, float]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _suite_of(path: str) -> str | None:
+    base = os.path.basename(path)
+    if not base.startswith("BENCH_") or not base.endswith(".json") \
+            or base.endswith(".partial.json"):
+        return None
+    return base[len("BENCH_"):-len(".json")]
+
+
+def check(baseline_dir: str, fresh_dir: str, tolerance: float,
+          suites: set[str] | None = None) -> list[str]:
+    """Returns the list of violations (empty = gate passes)."""
+    violations: list[str] = []
+    seen_any = False
+    for bpath in sorted(glob.glob(os.path.join(baseline_dir,
+                                               "BENCH_*.json"))):
+        suite = _suite_of(bpath)
+        if suite is None or (suites is not None and suite not in suites):
+            continue
+        seen_any = True
+        fpath = os.path.join(fresh_dir, f"BENCH_{suite}.json")
+        if not os.path.exists(fpath):
+            violations.append(
+                f"{suite}: fresh file {fpath} missing "
+                "(suite failed or was not run)")
+            continue
+        base, fresh = _load(bpath), _load(fpath)
+        for name, bval in sorted(base.items()):
+            if name not in fresh:
+                violations.append(f"{suite}/{name}: metric disappeared "
+                                  f"(baseline {bval:.3f})")
+                continue
+            fval = fresh[name]
+            if is_higher_better(name):
+                limit = bval / tolerance
+                ok = fval >= limit
+                verdict = f"{fval:.3f} < {limit:.3f} (baseline {bval:.3f} " \
+                          f"/ {tolerance}x)"
+            else:
+                limit = bval * tolerance
+                ok = fval <= limit
+                verdict = f"{fval:.3f} > {limit:.3f} (baseline {bval:.3f} " \
+                          f"* {tolerance}x)"
+            if not ok:
+                violations.append(f"{suite}/{name}: {verdict}")
+        new = sorted(set(fresh) - set(base))
+        if new:
+            print(f"# {suite}: {len(new)} unbaselined metric(s) "
+                  f"(not gated): {', '.join(new[:8])}"
+                  + (" ..." if len(new) > 8 else ""))
+    if not seen_any:
+        violations.append(f"no baselines found under {baseline_dir}")
+    return violations
+
+
+def update(baseline_dir: str, fresh_dir: str,
+           suites: set[str] | None = None) -> None:
+    os.makedirs(baseline_dir, exist_ok=True)
+    for fpath in sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json"))):
+        suite = _suite_of(fpath)
+        if suite is None or (suites is not None and suite not in suites):
+            continue
+        out = os.path.join(baseline_dir, f"BENCH_{suite}.json")
+        with open(out, "w") as f:
+            json.dump(_load(fpath), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# rebaselined {out}")
+
+
+def main() -> None:
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap = argparse.ArgumentParser(
+        description="diff fresh BENCH_*.json against committed baselines")
+    ap.add_argument("--baseline", default=os.path.join(here, "baselines"))
+    ap.add_argument("--fresh", default=".")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="allowed slowdown/shrink factor (default 1.5x)")
+    ap.add_argument("--suites", default=None,
+                    help="comma-separated subset (default: every baseline)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines from the fresh files and exit")
+    args = ap.parse_args()
+    suites = set(args.suites.split(",")) if args.suites else None
+    if args.update:
+        update(args.baseline, args.fresh, suites)
+        return
+    violations = check(args.baseline, args.fresh, args.tolerance, suites)
+    if violations:
+        print(f"BENCH REGRESSION ({len(violations)} violation(s), "
+              f"tolerance {args.tolerance}x):", file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"# bench regression gate passed (tolerance {args.tolerance}x)")
+
+
+if __name__ == "__main__":
+    main()

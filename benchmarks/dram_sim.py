@@ -22,12 +22,11 @@ Packed < Packed+RS < Baseline < InterWrap.
 from __future__ import annotations
 
 import heapq
-import math
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.layouts import (GROUP_ROWS, LANES, Layout, extra_page_count,
+from repro.core.layouts import (LANES, Layout,
                                 plan_line_access, total_pages)
 
 

@@ -1,3 +1,13 @@
-import sys, os
+import os
+import sys
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
 sys.path.insert(0, os.path.dirname(__file__))
+
+# Expose 8 virtual host-platform devices so the sharded-pool (CREAM-Shard)
+# tests exercise a real multi-device `banks` mesh on CPU. Must run before
+# first jax init; a pre-set flag (CI, user) wins.
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FLAG}=8").strip()

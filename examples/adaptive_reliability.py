@@ -10,7 +10,6 @@ Run: PYTHONPATH=src python examples/adaptive_reliability.py
 """
 import dataclasses
 
-import numpy as np
 
 from repro.core.injection import FaultModel
 from repro.core.monitor import MonitorConfig

@@ -19,7 +19,6 @@ import os
 import threading
 from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

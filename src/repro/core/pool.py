@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 from functools import partial
+from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -79,6 +80,87 @@ class PoolState:
     def capacity_gain(self) -> float:
         """Fraction of baseline (all-SECDED) capacity reclaimed."""
         return self.num_extra_pages / self.num_rows
+
+    # -- PoolLike surface (the local data plane) ----------------------------
+    # Traceable engine entry points (compose under an enclosing jit) and
+    # pre-jitted hot-path wrappers, as methods so owners (the VM, the object
+    # cache, the serving tier) run unchanged on any PoolLike implementation
+    # (this local pool or ``repro.shard.ShardedPool``).
+
+    @property
+    def boundary_step(self) -> int:
+        """Boundary-register granularity (rows)."""
+        return GROUP_ROWS
+
+    def read_any(self, pages) -> jax.Array:
+        """Traceable batch read (see :func:`read_pages_any`)."""
+        return read_pages_any(self, pages)
+
+    def read_any_status(self, pages) -> tuple[jax.Array, jax.Array]:
+        """Traceable batch read + per-page status."""
+        return read_pages_any_status(self, pages)
+
+    def write_any(self, pages, data: jax.Array) -> "PoolState":
+        """Traceable code-maintaining batch write."""
+        return write_pages_any(self, pages, data)
+
+    def read_pages(self, pages) -> jax.Array:
+        """Jitted batch read (validates concrete ids host-side)."""
+        return read_pages_any_jit(self, pages)
+
+    def read_pages_status(self, pages) -> tuple[jax.Array, jax.Array]:
+        """Jitted batch read + per-page status."""
+        return read_pages_any_status_jit(self, pages)
+
+    def write_pages(self, pages, data: jax.Array) -> "PoolState":
+        """Jitted, donating batch write (old state must be dropped)."""
+        return write_pages_any_jit(self, pages, data)
+
+    def evict_prediction(self, new_boundary: int) -> list[int]:
+        """Extra-page ids a move to ``new_boundary`` would evict."""
+        return evicted_extra_pages(self, new_boundary)
+
+    def move_boundary(self, new_boundary: int) -> tuple["PoolState", dict]:
+        """Repartition (see :func:`repartition`)."""
+        return repartition(self, new_boundary)
+
+    def scrub(self, use_kernel: bool = False):
+        """Sweep + repair in place; returns ``(new_state, ScrubStats)``."""
+        from repro.core.scrubber import scrub as _scrub
+        return _scrub(self, use_kernel=use_kernel)
+
+
+@runtime_checkable
+class PoolLike(Protocol):
+    """The pool data-plane contract the VM / object-cache / serving layers
+    program against.
+
+    Implementations: :class:`PoolState` (single device) and
+    :class:`repro.shard.ShardedPool` (multi-device, ``banks`` mesh axis).
+    Both share the page-id convention (regular pages ``[0, num_rows)``,
+    reclaimed extras above) and the region semantics derived from
+    ``boundary`` / ``num_rows`` / ``layout``, so owners never branch on the
+    concrete type for translation, allocation, or capacity accounting.
+    """
+
+    layout: Layout
+    row_words: int
+    boundary: int
+    num_rows: int
+    num_pages: int
+    num_extra_pages: int
+    page_words: int
+    boundary_step: int
+
+    def read_any(self, pages) -> jax.Array: ...                     # noqa: E704
+    def read_any_status(self, pages) -> tuple: ...                  # noqa: E704
+    def write_any(self, pages, data) -> "PoolLike": ...             # noqa: E704
+    def read_pages(self, pages) -> jax.Array: ...                   # noqa: E704
+    def read_pages_status(self, pages) -> tuple: ...                # noqa: E704
+    def write_pages(self, pages, data) -> "PoolLike": ...           # noqa: E704
+    def evict_prediction(self, new_boundary) -> list[int]: ...      # noqa: E704
+    def move_boundary(self, new_boundary) -> tuple: ...             # noqa: E704
+    def scrub(self, use_kernel: bool = False) -> tuple: ...         # noqa: E704
 
 
 def make_pool(num_rows: int, layout: Layout = Layout.INTERWRAP,
@@ -327,7 +409,8 @@ def read_pages_any(state: PoolState, pages) -> jax.Array:
     return read_pages_any_status(state, pages)[0]
 
 
-def write_pages_any(state: PoolState, pages, data: jax.Array) -> PoolState:
+def write_pages_any(state: PoolState, pages, data: jax.Array,
+                    valid: jax.Array | None = None) -> PoolState:
     """Batch write for an arbitrary page-id vector, maintaining codes.
 
     One data scatter over the ``page_coords`` translation, one masked SECDED
@@ -335,6 +418,12 @@ def write_pages_any(state: PoolState, pages, data: jax.Array) -> PoolState:
     lane), and — for PARITY pools — one packed-parity scatter. Duplicate ids
     within a batch leave that page's contents unspecified (scatter order).
     ``data`` is ``(n, page_words)``.
+
+    ``valid`` (optional ``(n,)`` bool) masks rows out of the write entirely —
+    their data, code, and parity scatters are routed out of range and
+    dropped. This is the SPMD building block the sharded pool's per-shard
+    dispatch uses: every shard traces the same program over the full batch
+    and lands only the pages it owns.
     """
     pages = _as_page_array(state, pages)
     n = pages.shape[0]
@@ -345,9 +434,16 @@ def write_pages_any(state: PoolState, pages, data: jax.Array) -> PoolState:
         raise ValueError(f"page data must be {state.page_words} words")
     rows, lanes, region = page_coords(state.layout, state.num_rows,
                                       state.boundary, pages, state.row_words)
-    storage = state.storage.at[rows, lanes, :].set(
-        data.reshape(n, DATA_LANES, state.row_words))
     is_sec = region == REGION_SECDED
+    if valid is None:
+        storage = state.storage.at[rows, lanes, :].set(
+            data.reshape(n, DATA_LANES, state.row_words))
+    else:
+        valid = jnp.asarray(valid, bool).reshape(-1)
+        rows = jnp.where(valid[:, None], rows, state.num_rows)  # OOB -> drop
+        is_sec = is_sec & valid
+        storage = state.storage.at[rows, lanes, :].set(
+            data.reshape(n, DATA_LANES, state.row_words), mode="drop")
     if state.boundary < state.num_rows:       # pool has SECDED rows
         codes = secded.encode_block(data)
         crow = jnp.where(is_sec, pages, state.num_rows)   # OOB -> dropped
@@ -356,6 +452,8 @@ def write_pages_any(state: PoolState, pages, data: jax.Array) -> PoolState:
         prow, off = parity_coords(state.num_rows, state.boundary, pages,
                                   state.row_words)
         prow = jnp.where(is_sec, state.num_rows, prow)    # OOB -> dropped
+        if valid is not None:
+            prow = jnp.where(valid, prow, state.num_rows)
         packed = parity8.encode_lines_packed(data)        # (n, W/8)
         idx = off[:, None] + jnp.arange(state.row_words // 8)
         storage = storage.at[prow[:, None], CODE_LANE, idx].set(

@@ -24,7 +24,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.checkpoint.checkpointer import Checkpointer, unflatten_like
 from repro.train.trainer import Trainer
 
 

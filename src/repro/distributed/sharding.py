@@ -12,7 +12,6 @@ drop axis names the active mesh doesn't have (single-pod vs multi-pod).
 from __future__ import annotations
 
 import contextlib
-import re
 import threading
 
 import jax

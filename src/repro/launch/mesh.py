@@ -27,6 +27,23 @@ def make_host_mesh(model_axis: int = 1):
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
+def make_banks_mesh(num_banks: int):
+    """1-D ``banks`` mesh for the sharded CREAM data plane (CREAM-Shard).
+
+    Uses the first ``num_banks`` devices. On CPU, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (before first jax
+    init) to expose N virtual devices — CI and the repo conftest do.
+    """
+    devices = jax.devices()
+    if len(devices) < num_banks:
+        raise ValueError(
+            f"need {num_banks} devices for a {num_banks}-bank mesh, have "
+            f"{len(devices)}; on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count")
+    return jax.make_mesh((num_banks,), ("banks",),
+                         devices=devices[:num_banks])
+
+
 # TPU v5e hardware constants (roofline denominators; see EXPERIMENTS.md)
 PEAK_FLOPS_BF16 = 197e12          # per chip
 HBM_BW = 819e9                    # bytes/s per chip

@@ -8,7 +8,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import BlockKind, MixerKind, ModelConfig
+from repro.configs.base import MixerKind, ModelConfig
 from repro.models import transformer
 
 

@@ -46,8 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pool as pool_lib
-from repro.core.pool import PoolState
+from repro.core.pool import PoolLike, PoolState
 from repro.core.protection import _ORDER, Protection
 from repro.kernels.hash import ops as hash_ops
 from repro.objcache import hash_index as hix
@@ -62,18 +61,26 @@ from repro.vm.address_space import VirtualMemory
 
 
 @functools.partial(jax.jit, static_argnames=("max_len", "use_kernel"))
-def _get_batch(state: PoolState, index: HashIndex, queries: jax.Array,
+def _get_batch(state, index: HashIndex, queries: jax.Array,
                max_len: int, use_kernel: bool | None
                ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused batched get: probe + gather + per-value slice, one dispatch.
 
-    Returns ``(values (n, max_len) uint32, lens (n,), slot (n,), found (n,))``
-    with not-found / beyond-length words zeroed.
+    On a local pool the probe rides the fused hash kernel
+    (:mod:`repro.kernels.hash`); on a sharded pool the probe stays global
+    and the resolved pages take the per-shard fused mixed read
+    (``PoolLike.read_any``). Returns ``(values (n, max_len) uint32,
+    lens (n,), slot (n,), found (n,))`` with not-found / beyond-length
+    words zeroed.
     """
-    _, off, length, slot, found = hix.lookup(index, queries)
-    data = hash_ops.lookup_read(
-        state.storage, index.key, index.page, queries, state.layout,
-        state.num_rows, state.boundary, index.probe, use_kernel=use_kernel)
+    page, off, length, slot, found = hix.lookup(index, queries)
+    if isinstance(state, PoolState):
+        data = hash_ops.lookup_read(
+            state.storage, index.key, index.page, queries, state.layout,
+            state.num_rows, state.boundary, index.probe,
+            use_kernel=use_kernel)
+    else:
+        data = state.read_any(page)
     idx = jnp.minimum(off[:, None] + jnp.arange(max_len), data.shape[1] - 1)
     vals = jnp.take_along_axis(data, idx, axis=1)
     mask = (jnp.arange(max_len)[None, :] < length[:, None]) & found[:, None]
@@ -81,24 +88,24 @@ def _get_batch(state: PoolState, index: HashIndex, queries: jax.Array,
 
 
 @jax.jit
-def _write_values(state: PoolState, upages: jax.Array, inv: jax.Array,
-                  offs: jax.Array, lens: jax.Array, values: jax.Array
-                  ) -> PoolState:
+def _write_values(state, upages: jax.Array, inv: jax.Array,
+                  offs: jax.Array, lens: jax.Array, values: jax.Array):
     """Batched chunk write: RMW the touched pages in one gather/scatter.
 
     ``upages`` are unique page ids, ``inv[i]`` the row of value ``i``'s page
     within them; distinct values sharing a page scatter into disjoint chunk
     spans of the same RMW image, so nothing clobbers. Codes (SECDED/parity)
-    are maintained by the mixed-pool engine on the write-back.
+    are maintained by the pool's engine on the write-back — local or
+    sharded alike (``PoolLike.read_any`` / ``write_any``).
     """
-    imgs = pool_lib.read_pages_any(state, upages)
+    imgs = state.read_any(upages)
     w = imgs.shape[1]
     span = values.shape[1]
     col = offs[:, None] + jnp.arange(span)
     col = jnp.where(jnp.arange(span)[None, :] < lens[:, None], col, w)
     imgs = imgs.at[inv[:, None], col].set(values.astype(jnp.uint32),
                                           mode="drop")
-    return pool_lib.write_pages_any(state, upages, imgs)
+    return state.write_any(upages, imgs)
 
 
 _find_jit = jax.jit(hix.find)
@@ -173,7 +180,7 @@ class ObjCache:
 
     # -- plumbing ------------------------------------------------------------
     @property
-    def pool(self) -> PoolState:
+    def pool(self) -> PoolLike:
         return self.vm.pools[self.pool_name]
 
     @property

@@ -1,0 +1,17 @@
+"""CREAM-Shard: the CREAM data plane partitioned over a ``banks`` mesh axis.
+
+See :mod:`repro.shard.pool` for the sharded pool and its dispatch shapes,
+and :mod:`repro.shard.router` for the global-id -> (shard, local)
+translation.
+"""
+from repro.shard.pool import (ShardedPool, evicted_extra_pages,
+                              make_sharded_pool, migrate_pages, read_any,
+                              read_any_status, read_streams, repartition,
+                              scrub, write_any, write_streams)
+from repro.shard.router import route, unroute
+
+__all__ = [
+    "ShardedPool", "make_sharded_pool", "read_any", "read_any_status",
+    "write_any", "read_streams", "write_streams", "migrate_pages",
+    "repartition", "evicted_extra_pages", "scrub", "route", "unroute",
+]

@@ -1,0 +1,484 @@
+"""CREAM-Shard — the CREAM pool partitioned across a ``banks`` mesh axis.
+
+The paper's second headline claim is that CREAM *increases bank-level
+parallelism*: rank subsetting (§4.1.2) splits the DIMM into independently
+addressable subsets, and Figs. 9–11 measure the resulting concurrency win.
+This module is that mechanism on the real data plane: the pool's rows are
+striped round-robin over ``S`` devices of a 1-D ``banks`` mesh
+(:func:`repro.launch.mesh.make_banks_mesh`), every shard holds an
+identically-shaped mini CREAM pool ``(R_local, 9, W)`` with the same
+boundary register, and the whole mixed-pool access engine of
+:mod:`repro.core.pool` — one ``page_coords`` translation, one
+gather/scatter, masked batched codecs — runs unchanged *inside each shard*
+under ``shard_map``. On TPU the per-shard read is the fused Pallas mixed
+kernel; on CPU it is the vectorised engine (the kernel's oracle).
+
+Three dispatch shapes, by locality:
+
+  * :func:`read_any` / :func:`write_any` — arbitrary global page-id vectors.
+    The router (:mod:`repro.shard.router`) translates ids to (shard, local);
+    every shard traces the same program over the full batch and keeps only
+    the pages it owns (reads: owner-select on the stacked output; writes:
+    the engine's ``valid`` mask drops foreign pages). **No cross-shard
+    collectives** — the only inter-device motion is the final owner-select
+    gather that assembles the replicated result.
+  * :func:`read_streams` / :func:`write_streams` — bank-parallel hot path:
+    ``(S, n)`` page ids, stream ``s`` touching only shard ``s``'s pages
+    (``page % S == s``). Each bank serves its stream fully independently —
+    the measured Figs. 9–11 concurrency story (``benchmarks/bench_shard.py``).
+  * :func:`migrate_pages` — cross-shard relocation as an explicit
+    ``ppermute`` ring exchange: each shard reads its owned source pages,
+    the batch circulates around the ring, and every shard lands the pages
+    addressed to it with a masked code-maintaining write.
+
+:func:`repartition` moves every shard's boundary in lockstep (one
+``shard_map`` over the local repartition, which re-encodes in place), so
+the global page-id convention — and therefore every owner's bookkeeping —
+is preserved exactly as for the local pool.
+
+:class:`ShardedPool` implements :class:`repro.core.pool.PoolLike`; the VM
+(:mod:`repro.vm`), object cache (:mod:`repro.objcache`) and serving tier
+(:mod:`repro.serve`) run on it unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:                                    # jax >= 0.6 moved it to the top level
+    from jax import shard_map           # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
+from repro.core import pool as pool_lib
+from repro.core.layouts import (GROUP_ROWS, LANES, Layout, extra_page_count)
+from repro.core.pool import PoolState
+from repro.shard import router
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class ShardedPool:
+    """Functional sharded pool state. ``storage`` is the only traced leaf.
+
+    ``storage`` is ``(S, R_local, 9, W)`` uint32, laid out over the mesh's
+    ``banks`` axis (leading dim). All other fields are static pytree
+    metadata, so each (geometry, mesh) compiles once — exactly like the
+    local pool's (boundary, layout, row_words) treatment.
+    """
+    storage: jax.Array                  # (S, R_local, 9, W) uint32
+    boundary_local: int = dataclasses.field(metadata=dict(static=True))
+    layout: Layout = dataclasses.field(metadata=dict(static=True))
+    row_words: int = dataclasses.field(metadata=dict(static=True))
+    mesh: jax.sharding.Mesh = dataclasses.field(metadata=dict(static=True))
+    use_kernel: bool | None = dataclasses.field(
+        default=None, metadata=dict(static=True))
+
+    # -- geometry (global page-id convention, same as PoolState) ------------
+    @property
+    def num_shards(self) -> int:
+        return self.storage.shape[0]
+
+    @property
+    def rows_local(self) -> int:
+        return self.storage.shape[1]
+
+    @property
+    def num_rows(self) -> int:
+        return self.num_shards * self.rows_local
+
+    @property
+    def boundary(self) -> int:
+        return self.num_shards * self.boundary_local
+
+    @property
+    def boundary_step(self) -> int:
+        """Boundary moves in lockstep across shards: S * GROUP_ROWS rows."""
+        return self.num_shards * GROUP_ROWS
+
+    @property
+    def extra_pages_local(self) -> int:
+        return extra_page_count(self.layout, self.boundary_local,
+                                self.row_words)
+
+    @property
+    def num_extra_pages(self) -> int:
+        return self.num_shards * self.extra_pages_local
+
+    @property
+    def num_pages(self) -> int:
+        return self.num_rows + self.num_extra_pages
+
+    @property
+    def page_words(self) -> int:
+        return 8 * self.row_words
+
+    @property
+    def page_bytes(self) -> int:
+        return 4 * self.page_words
+
+    @property
+    def raw_bytes(self) -> int:
+        return self.storage.size * 4
+
+    @property
+    def effective_bytes(self) -> int:
+        return self.num_pages * self.page_bytes
+
+    def capacity_gain(self) -> float:
+        return self.num_extra_pages / self.num_rows
+
+    # -- PoolLike surface ---------------------------------------------------
+    def read_any(self, pages) -> jax.Array:
+        return read_any(self, pages)
+
+    def read_any_status(self, pages) -> tuple[jax.Array, jax.Array]:
+        return read_any_status(self, pages)
+
+    def write_any(self, pages, data: jax.Array) -> "ShardedPool":
+        return write_any(self, pages, data)
+
+    def read_pages(self, pages) -> jax.Array:
+        return _read_any_jitted(self, pool_lib._as_page_array(self, pages))
+
+    def read_pages_status(self, pages) -> tuple[jax.Array, jax.Array]:
+        return _read_any_status_jitted(
+            self, pool_lib._as_page_array(self, pages))
+
+    def write_pages(self, pages, data: jax.Array) -> "ShardedPool":
+        return _write_any_jitted(
+            self, pool_lib._as_page_array(self, pages), data)
+
+    def evict_prediction(self, new_boundary: int) -> list[int]:
+        return evicted_extra_pages(self, new_boundary)
+
+    def move_boundary(self, new_boundary: int) -> tuple["ShardedPool", dict]:
+        return repartition(self, new_boundary)
+
+    def scrub(self, use_kernel: bool = False):
+        return scrub(self, use_kernel=use_kernel)
+
+
+def make_sharded_pool(num_rows: int, layout: Layout = Layout.INTERWRAP,
+                      boundary: int | None = None, *, num_shards: int,
+                      row_words: int = 64,
+                      mesh: jax.sharding.Mesh | None = None,
+                      use_kernel: bool | None = None) -> ShardedPool:
+    """Create a zeroed sharded pool of ``num_rows`` *global* rows.
+
+    ``boundary`` is the global CREAM-region size (default: whole pool in
+    CREAM mode); both must shard evenly (multiples of
+    ``num_shards * GROUP_ROWS``). ``mesh`` defaults to a fresh 1-D
+    ``banks`` mesh over the first ``num_shards`` devices.
+    """
+    boundary = num_rows if boundary is None else boundary
+    if layout == Layout.BASELINE_ECC:
+        boundary = 0
+    router.check_geometry(num_rows, boundary, num_shards)
+    if mesh is None:
+        from repro.launch.mesh import make_banks_mesh
+        mesh = make_banks_mesh(num_shards)
+    if mesh.devices.size != num_shards or "banks" not in mesh.axis_names:
+        raise ValueError(
+            f"mesh must be a 1-D 'banks' mesh of {num_shards} devices")
+    storage = jax.device_put(
+        jnp.zeros((num_shards, num_rows // num_shards, LANES, row_words),
+                  jnp.uint32),
+        NamedSharding(mesh, P("banks")))
+    return ShardedPool(storage, boundary // num_shards, layout, row_words,
+                       mesh, use_kernel)
+
+
+def _local_state(state: ShardedPool, block: jax.Array) -> PoolState:
+    """Per-shard view: ``block`` is the shard's ``(1, R_local, 9, W)`` slice."""
+    return PoolState(block[0], state.boundary_local, state.layout,
+                     state.row_words)
+
+
+# ---------------------------------------------------------------------------
+# General dispatch: arbitrary global page-id vectors
+# ---------------------------------------------------------------------------
+
+
+def read_any_status(state: ShardedPool, pages
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Batch read + per-page status for arbitrary global page ids.
+
+    Every shard runs the mixed-pool engine over the routed local ids (same
+    trace on every device — pages it does not own read harmless garbage),
+    and the owner's rows are selected from the stacked per-shard output.
+    Traceable; returns ``(data (n, page_words) uint32, status (n,) int32)``.
+    """
+    pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+    n = pages.shape[0]
+    if n == 0:
+        return (jnp.zeros((0, state.page_words), jnp.uint32),
+                jnp.zeros((0,), jnp.int32))
+    shard, local = router.route(pages, state.num_rows, state.num_shards)
+
+    def body(block, loc):
+        data, status = pool_lib.read_pages_any_status(
+            _local_state(state, block), loc)
+        return data[None], status[None]
+
+    data_s, st_s = shard_map(
+        body, mesh=state.mesh, in_specs=(P("banks"), P(None)),
+        out_specs=(P("banks"), P("banks")))(state.storage, local)
+    pick = jnp.arange(n)
+    return data_s[shard, pick, :], st_s[shard, pick]
+
+
+def read_any(state: ShardedPool, pages) -> jax.Array:
+    """Decode-corrected batch read (owner-selected per-shard fused read).
+
+    The per-shard read dispatches :mod:`repro.kernels.mixed` — the fused
+    Pallas mixed-pool kernel on TPU, its vectorised oracle elsewhere —
+    honouring ``state.use_kernel``.
+    """
+    from repro.kernels.mixed import ops as mixed_ops
+    pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+    n = pages.shape[0]
+    if n == 0:
+        return jnp.zeros((0, state.page_words), jnp.uint32)
+    shard, local = router.route(pages, state.num_rows, state.num_shards)
+
+    def body(block, loc):
+        st = _local_state(state, block)
+        data = mixed_ops.read_correct(st.storage, loc, st.layout, st.num_rows,
+                                      st.boundary, use_kernel=state.use_kernel)
+        return data[None]
+
+    data_s = shard_map(
+        body, mesh=state.mesh, in_specs=(P("banks"), P(None)),
+        out_specs=P("banks"))(state.storage, local)
+    return data_s[shard, jnp.arange(n), :]
+
+
+def write_any(state: ShardedPool, pages, data: jax.Array) -> ShardedPool:
+    """Code-maintaining batch write for arbitrary global page ids.
+
+    Each shard traces the same masked engine write over the full batch; the
+    ``valid`` mask routes foreign pages' scatters out of range (dropped), so
+    no collectives are needed — each shard's storage slice is written purely
+    locally from the replicated data.
+    """
+    pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+    n = pages.shape[0]
+    if n == 0:
+        return state
+    data = data.astype(jnp.uint32).reshape(n, -1)
+    if data.shape[1] != state.page_words:
+        raise ValueError(f"page data must be {state.page_words} words")
+    shard, local = router.route(pages, state.num_rows, state.num_shards)
+    owned = router.owned_mask(shard, state.num_shards)
+
+    def body(block, loc, dat, own):
+        st = pool_lib.write_pages_any(_local_state(state, block), loc, dat,
+                                      valid=own[0])
+        return st.storage[None]
+
+    storage = shard_map(
+        body, mesh=state.mesh,
+        in_specs=(P("banks"), P(None), P(None), P("banks")),
+        out_specs=P("banks"))(state.storage, local, data, owned)
+    return dataclasses.replace(state, storage=storage)
+
+
+_read_any_jitted = jax.jit(read_any)
+_read_any_status_jitted = jax.jit(read_any_status)
+_write_any_jitted = jax.jit(write_any, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# Bank-parallel streams: the measured Figs. 9–11 hot path
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def read_streams(state: ShardedPool, pages: jax.Array) -> jax.Array:
+    """Serve ``S`` independent request streams, one per bank, concurrently.
+
+    ``pages`` is ``(S, n)`` *global* ids with stream ``s`` touching only
+    shard ``s``'s pages (``page % S == s`` for regular pages) — the caller
+    owns that alignment, mirroring how a bank-aware allocator hands each
+    client its own rank subset. Each shard gathers only its own ``n`` pages
+    (no masking, no replication, no collectives): per-bank work is ``n``
+    pages regardless of ``S``, which is exactly the paper's bank-level
+    parallelism claim. Returns ``(S, n, page_words)``, still sharded over
+    ``banks``.
+    """
+    S = state.num_shards
+    _, local = router.route(pages.reshape(-1), state.num_rows, S)
+    local = local.reshape(S, -1)
+
+    def body(block, loc):
+        data, _ = pool_lib.read_pages_any_status(
+            _local_state(state, block), loc[0])
+        return data[None]
+
+    return shard_map(
+        body, mesh=state.mesh, in_specs=(P("banks"), P("banks")),
+        out_specs=P("banks"))(state.storage, local)
+
+
+@jax.jit
+def write_streams(state: ShardedPool, pages: jax.Array,
+                  data: jax.Array) -> ShardedPool:
+    """Per-bank scatter of ``S`` aligned streams (see :func:`read_streams`).
+
+    ``pages`` is ``(S, n)`` shard-aligned global ids, ``data`` is
+    ``(S, n, page_words)``.
+    """
+    S = state.num_shards
+    _, local = router.route(pages.reshape(-1), state.num_rows, S)
+    local = local.reshape(S, -1)
+
+    def body(block, loc, dat):
+        st = pool_lib.write_pages_any(_local_state(state, block), loc[0],
+                                      dat[0].astype(jnp.uint32))
+        return st.storage[None]
+
+    storage = shard_map(
+        body, mesh=state.mesh, in_specs=(P("banks"), P("banks"), P("banks")),
+        out_specs=P("banks"))(state.storage, local, data)
+    return dataclasses.replace(state, storage=storage)
+
+
+# ---------------------------------------------------------------------------
+# Cross-shard migration: explicit ppermute ring exchange
+# ---------------------------------------------------------------------------
+
+
+def _migrate_impl(state: ShardedPool, src: jax.Array, dst: jax.Array
+                  ) -> ShardedPool:
+    S = state.num_shards
+    src_sh, src_lo = router.route(src, state.num_rows, S)
+    dst_sh, dst_lo = router.route(dst, state.num_rows, S)
+    ring = [(i, (i + 1) % S) for i in range(S)]
+
+    def body(block, s_sh, s_lo, d_sh, d_lo):
+        me = jax.lax.axis_index("banks")
+        st = _local_state(state, block)
+        data, _ = pool_lib.read_pages_any_status(st, s_lo)
+        buf = jnp.where((s_sh == me)[:, None], data, 0)
+        for step in range(S):
+            if step:
+                buf = jax.lax.ppermute(buf, "banks", ring)
+            deliver = (s_sh == (me - step) % S) & (d_sh == me)
+            st = pool_lib.write_pages_any(st, d_lo, buf, valid=deliver)
+        return st.storage[None]
+
+    storage = shard_map(
+        body, mesh=state.mesh,
+        in_specs=(P("banks"), P(None), P(None), P(None), P(None)),
+        out_specs=P("banks"))(state.storage, src_sh, src_lo, dst_sh, dst_lo)
+    return dataclasses.replace(state, storage=storage)
+
+
+_migrate_jitted = jax.jit(_migrate_impl, donate_argnums=(0,))
+_migrate_jitted_nodonate = jax.jit(_migrate_impl)
+
+
+def migrate_pages(state: ShardedPool, src_pages, dst_pages,
+                  donate: bool = True) -> ShardedPool:
+    """Live in-pool migration ``src -> dst`` across shard boundaries.
+
+    One fused dispatch: every shard decode-reads the source pages it owns,
+    the page batch circulates the ``banks`` ring via ``S`` explicit
+    ``ppermute`` steps (the rank-subset interconnect made visible), and at
+    each step every shard lands the pages addressed to it with a masked
+    code-maintaining write. Same-shard moves complete at step 0 without
+    touching the ring. ``donate=False`` keeps the input pool's storage
+    valid (benchmarks; callers that roll back).
+    """
+    src = pool_lib._as_page_array(state, src_pages)
+    dst = pool_lib._as_page_array(state, dst_pages)
+    fn = _migrate_jitted if donate else _migrate_jitted_nodonate
+    return fn(state, src, dst)
+
+
+# ---------------------------------------------------------------------------
+# Repartitioning: all shards move their boundary register in lockstep
+# ---------------------------------------------------------------------------
+
+
+def evicted_extra_pages(state: ShardedPool, new_boundary: int) -> list[int]:
+    """Global extra-page ids a move to ``new_boundary`` would evict.
+
+    Round-robin extra striping makes the surviving set a contiguous global
+    prefix, so — exactly as for the local pool — the evicted ids are the
+    trailing range.
+    """
+    if new_boundary >= state.boundary:
+        return []
+    x_new = extra_page_count(state.layout,
+                             new_boundary // state.num_shards,
+                             state.row_words)
+    return list(range(state.num_rows + state.num_shards * x_new,
+                      state.num_rows + state.num_extra_pages))
+
+
+def repartition(state: ShardedPool, new_boundary: int
+                ) -> tuple[ShardedPool, dict]:
+    """Move every shard's CREAM/SECDED boundary in lockstep.
+
+    Semantics mirror :func:`repro.core.pool.repartition` (page contents of
+    surviving ids preserved, codes re-established, evicted extras reported);
+    the data plane is one ``shard_map`` over the local repartition, so each
+    bank re-encodes its own span independently — no cross-shard traffic.
+    """
+    router.check_geometry(state.num_rows, new_boundary, state.num_shards)
+    old = state.boundary
+    info = {"old_boundary": old, "new_boundary": new_boundary,
+            "evicted_extra_pages": [], "pages_reencoded": 0}
+    if new_boundary == old:
+        return state, info
+    info["evicted_extra_pages"] = evicted_extra_pages(state, new_boundary)
+    info["pages_reencoded"] = abs(new_boundary - old)
+    nb_local = new_boundary // state.num_shards
+
+    def body(block):
+        new_st, _ = pool_lib.repartition(_local_state(state, block), nb_local)
+        return new_st.storage[None]
+
+    storage = jax.jit(shard_map(
+        body, mesh=state.mesh, in_specs=P("banks"),
+        out_specs=P("banks")))(state.storage)
+    return dataclasses.replace(state, storage=storage,
+                               boundary_local=nb_local), info
+
+
+# ---------------------------------------------------------------------------
+# Scrubbing (background sweep; per-shard, host-driven)
+# ---------------------------------------------------------------------------
+
+
+def scrub(state: ShardedPool, use_kernel: bool = False):
+    """Sweep every shard, repairing in place; returns (state', ScrubStats).
+
+    Background path (not latency-critical): shards are swept sequentially
+    host-side and the per-shard censuses merged, with corrupt row ids mapped
+    back to global rows (``global = local * S + shard``).
+    """
+    from repro.core.scrubber import ScrubStats
+    from repro.core.scrubber import scrub as _scrub
+    S = state.num_shards
+    blocks, merged, corrupt = [], {}, []
+    for s in range(S):
+        st = PoolState(state.storage[s], state.boundary_local, state.layout,
+                       state.row_words)
+        new_st, stats = _scrub(st, use_kernel=use_kernel)
+        blocks.append(new_st.storage)
+        for f in ("beats_checked", "corrected_data", "corrected_code",
+                  "detected_uncorrectable", "parity_lines_checked",
+                  "parity_corrupt_lines"):
+            merged[f] = merged.get(f, 0) + getattr(stats, f)
+        corrupt.extend(r * S + s for r in stats.corrupt_rows)
+    storage = jax.device_put(jnp.stack(blocks),
+                             NamedSharding(state.mesh, P("banks")))
+    return (dataclasses.replace(state, storage=storage),
+            ScrubStats(corrupt_rows=tuple(sorted(corrupt)), **merged))

@@ -1,0 +1,84 @@
+"""Shard router — global page ids -> (shard, local page), vectorised.
+
+The sharded pool stripes the global page-id space round-robin over the
+``banks`` mesh axis, the software analogue of DRAM bank interleaving and of
+the paper's rank subsetting (§4.1.2): every shard is an independent,
+identically-shaped CREAM mini-pool, and consecutive global pages land on
+consecutive shards so any dense access naturally fans out across all banks.
+
+Global convention (identical to :mod:`repro.core.pool`'s single-pool one):
+
+    pages [0, boundary)            CREAM-region regular pages
+    pages [boundary, num_rows)     SECDED-protected pages
+    pages [num_rows, num_pages)    reclaimed extra pages
+
+With ``S`` shards of ``R_local`` rows and local boundary ``b_local``:
+
+  * regular page ``p``  -> shard ``p % S``,  local page ``p // S``;
+  * extra page ``num_rows + e`` -> shard ``e % S``,
+    local page ``R_local + e // S``.
+
+Because ``boundary = S * b_local`` and ``p < S*b_local  <=>  p//S < b_local``,
+the *global* region of a page (CREAM / SECDED / extra) is exactly the *local*
+region of its routed id — the router never has to know where the boundary
+is, and a page's physical home never moves when the boundary does (the same
+invariant the local pool's repartition relies on for id stability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layouts import GROUP_ROWS
+
+
+def route(pages: jax.Array, num_rows: int, num_shards: int
+          ) -> tuple[jax.Array, jax.Array]:
+    """Translate global page ids -> ``(shard (n,), local (n,))`` int32.
+
+    ``num_rows`` is the *global* regular-page count (``S * R_local``); ids
+    follow the global convention above. Fully traceable.
+    """
+    pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+    rows_local = num_rows // num_shards
+    is_extra = pages >= num_rows
+    e = pages - num_rows
+    shard = jnp.where(is_extra, e % num_shards, pages % num_shards)
+    local = jnp.where(is_extra, rows_local + e // num_shards,
+                      pages // num_shards)
+    return shard.astype(jnp.int32), local.astype(jnp.int32)
+
+
+def unroute(shard, local, num_rows: int, num_shards: int) -> jax.Array:
+    """Inverse of :func:`route`: (shard, local) -> global page ids."""
+    shard = jnp.asarray(shard, jnp.int32)
+    local = jnp.asarray(local, jnp.int32)
+    rows_local = num_rows // num_shards
+    is_extra = local >= rows_local
+    e_local = local - rows_local
+    return jnp.where(is_extra, num_rows + e_local * num_shards + shard,
+                     local * num_shards + shard).astype(jnp.int32)
+
+
+def owned_mask(shard: jax.Array, num_shards: int) -> jax.Array:
+    """``(S, n)`` bool: row ``s`` flags the batch entries shard ``s`` owns.
+
+    Laid out shard-major so it can enter a ``shard_map`` with
+    ``P('banks')`` — each shard sees exactly its own ``(1, n)`` slice.
+    """
+    return shard[None, :] == jnp.arange(num_shards, dtype=jnp.int32)[:, None]
+
+
+def check_geometry(num_rows: int, boundary: int, num_shards: int) -> None:
+    """Validate that a (rows, boundary) pair shards evenly over S banks."""
+    step = num_shards * GROUP_ROWS
+    if num_shards < 1:
+        raise ValueError(f"need at least one shard, got {num_shards}")
+    if num_rows % step:
+        raise ValueError(
+            f"num_rows ({num_rows}) must be a multiple of shards*group "
+            f"({step})")
+    if boundary % step or not 0 <= boundary <= num_rows:
+        raise ValueError(
+            f"boundary ({boundary}) must be a multiple of {step} in "
+            f"[0, {num_rows}]")

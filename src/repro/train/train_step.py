@@ -9,9 +9,6 @@ collective term (visible in the dry-run HLO).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

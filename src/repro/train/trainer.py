@@ -22,10 +22,9 @@ from dataclasses import dataclass, field
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.checkpointer import Checkpointer, unflatten_like
+from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core import poolstore
 from repro.core.layouts import Layout

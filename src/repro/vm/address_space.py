@@ -19,12 +19,15 @@ Terminology (OS analogue over the paper's hardware):
     frequency the capacity mode controls.
 
 All data-plane traffic goes through :meth:`VirtualMemory.read` /
-:meth:`VirtualMemory.write`, which batch per pool through the mixed-pool
-access engine — the pre-jitted :func:`repro.core.pool.read_pages_any_jit` /
-``write_pages_any_jit`` (one ``page_coords`` gather/scatter + masked batched
-codecs per pool, donation-friendly on the write side). Page-table walks stay
-host-side (they are dict lookups); everything that touches pool storage is
-one traced dispatch per pool.
+:meth:`VirtualMemory.write`, which batch per pool through the
+:class:`repro.core.pool.PoolLike` engine methods — the pre-jitted
+``read_pages`` / ``write_pages`` (one ``page_coords`` gather/scatter +
+masked batched codecs per pool, donation-friendly on the write side).
+Pools may be single-device :class:`~repro.core.pool.PoolState`\\ s or
+multi-device :class:`repro.shard.ShardedPool`\\ s — the VM never branches
+on the concrete type. Page-table walks stay host-side (they are dict
+lookups); everything that touches pool storage is one traced dispatch per
+pool.
 """
 from __future__ import annotations
 
@@ -34,9 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pool as pool_lib
 from repro.core.layouts import DEFAULT_ROW_WORDS, Layout
-from repro.core.pool import PoolState, make_pool
+from repro.core.pool import PoolLike, make_pool
 from repro.core.protection import _ORDER, Protection
 
 
@@ -47,7 +49,7 @@ def cream_protection(layout: Layout) -> Protection:
     return Protection.PARITY if layout == Layout.PARITY else Protection.NONE
 
 
-def frame_class(state: PoolState, phys: int) -> Protection:
+def frame_class(state: PoolLike, phys: int) -> Protection:
     """Storage class of frame ``phys`` under the pool's current boundary."""
     if state.boundary <= phys < state.num_rows:
         return Protection.SECDED
@@ -97,13 +99,13 @@ class FrameAllocator:
     when a boundary move dooms frames.
     """
 
-    def __init__(self, state: PoolState):
+    def __init__(self, state: PoolLike):
         self.free: dict[Protection, dict[int, None]] = {}
         self.owner: dict[int, tuple[str, int]] = {}
         self._class: dict[int, Protection] = {}
         self.rebuild(state)
 
-    def rebuild(self, state: PoolState) -> None:
+    def rebuild(self, state: PoolLike) -> None:
         """Recompute free lists after a boundary move.
 
         Every surviving frame keeps its page id across repartitions (regular
@@ -150,7 +152,7 @@ class FrameAllocator:
         del self._class[phys]
         self.owner[phys] = (tenant, vpn)
 
-    def release(self, state: PoolState, phys: int) -> None:
+    def release(self, state: PoolLike, phys: int) -> None:
         del self.owner[phys]
         cls = frame_class(state, phys)
         self.free[cls][phys] = None
@@ -180,7 +182,7 @@ class VirtualMemory:
 
     def __init__(self, row_words: int = DEFAULT_ROW_WORDS):
         self.row_words = row_words
-        self.pools: dict[str, PoolState] = {}
+        self.pools: dict[str, PoolLike] = {}
         self.allocators: dict[str, FrameAllocator] = {}
         self.tenants: dict[str, AddressSpace] = {}
         self.swap: dict[int, np.ndarray] = {}
@@ -190,16 +192,30 @@ class VirtualMemory:
     # -- setup ---------------------------------------------------------------
     def add_pool(self, name: str, num_rows: int,
                  layout: Layout = Layout.INTERWRAP,
-                 boundary: int | None = None) -> PoolState:
+                 boundary: int | None = None, shards: int = 1,
+                 mesh=None) -> PoolLike:
+        """Create a pool under VM management.
+
+        ``shards > 1`` builds a :class:`repro.shard.ShardedPool` over a
+        ``banks`` mesh (CREAM-Shard) instead of a local pool; everything
+        above the pool — tenants, allocator, data plane, migration — is
+        oblivious to the difference.
+        """
         if name in self.pools:
             raise ValueError(f"pool {name!r} exists")
-        state = make_pool(num_rows, layout, boundary=boundary,
-                          row_words=self.row_words)
+        if shards > 1 or mesh is not None:
+            from repro.shard import make_sharded_pool
+            state = make_sharded_pool(num_rows, layout, boundary,
+                                      num_shards=shards,
+                                      row_words=self.row_words, mesh=mesh)
+        else:
+            state = make_pool(num_rows, layout, boundary=boundary,
+                              row_words=self.row_words)
         self.pools[name] = state
         self.allocators[name] = FrameAllocator(state)
         return state
 
-    def adopt_pool(self, name: str, state: PoolState) -> None:
+    def adopt_pool(self, name: str, state: PoolLike) -> None:
         """Bring an existing pool under VM management (frames all free)."""
         if state.row_words != self.row_words:
             raise ValueError("row_words mismatch")
@@ -322,8 +338,8 @@ class VirtualMemory:
             for pool_name, phys in picks:
                 by_pool.setdefault(pool_name, []).append(phys)
             for pool_name, phys_list in by_pool.items():
-                self.pools[pool_name] = pool_lib.write_pages_any_jit(
-                    self.pools[pool_name], phys_list,
+                self.pools[pool_name] = self.pools[pool_name].write_pages(
+                    phys_list,
                     jnp.zeros((len(phys_list), self.page_words), jnp.uint32))
         return vpns
 
@@ -365,8 +381,8 @@ class VirtualMemory:
             idx = jnp.asarray([i for i, _ in items], jnp.int32)
             # page ids stay host-side: the engine wrapper validates and
             # uploads them once (no device round-trip before dispatch)
-            self.pools[pool_name] = pool_lib.write_pages_any_jit(
-                self.pools[pool_name], [p for _, p in items], data[idx])
+            self.pools[pool_name] = self.pools[pool_name].write_pages(
+                [p for _, p in items], data[idx])
             self.stats.device_writes += len(items)
 
     def read(self, tenant: str, vpns) -> jax.Array:
@@ -396,8 +412,7 @@ class VirtualMemory:
                 jnp.asarray(blob))
         for pool_name, items in by_pool.items():
             idx = jnp.asarray([i for i, _ in items], jnp.int32)
-            data = pool_lib.read_pages_any_jit(self.pools[pool_name],
-                                               [p for _, p in items])
+            data = self.pools[pool_name].read_pages([p for _, p in items])
             out = out.at[idx].set(data)
             self.stats.device_reads += len(items)
         return out
@@ -438,8 +453,8 @@ class VirtualMemory:
             pool_name, phys = home
             self.allocators[pool_name].claim(phys, tenant, vpn)
             blob = self.swap.pop(pte.phys)
-            self.pools[pool_name] = pool_lib.write_pages_any_jit(
-                self.pools[pool_name], [phys], jnp.asarray(blob)[None, :])
+            self.pools[pool_name] = self.pools[pool_name].write_pages(
+                [phys], jnp.asarray(blob)[None, :])
             space.entries[vpn] = PTE(pool_name, phys, pte.reliability,
                                      pte.segment)
             promoted += 1

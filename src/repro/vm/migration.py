@@ -33,8 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pool as pool_lib
-from repro.core.layouts import CODE_LANE, DATA_LANES, GROUP_ROWS, Layout
+from repro.core.layouts import CODE_LANE, DATA_LANES, Layout
 from repro.core.pool import PoolState
 from repro.core.protection import at_least
 from repro.kernels.migrate import ops as migrate_ops
@@ -83,36 +82,38 @@ class MigrationEngine:
         self.stats = MigrationStats()
 
     # -- building blocks -----------------------------------------------------
-    def _read_frames(self, state: PoolState, phys: list[int]
+    def _read_frames(self, state, phys: list[int]
                      ) -> tuple[jnp.ndarray, jnp.ndarray | None]:
         """Batch-read frames -> (data, precomputed SECDED codes or None).
 
-        Pure-CREAM InterWrap batches take the fused Pallas gather/re-encode
-        (codes for the destination come free); every other mix goes through
-        the jitted mixed-pool engine in one decode-corrected gather.
+        Pure-CREAM InterWrap batches on a *local* pool take the fused Pallas
+        gather/re-encode (codes for the destination come free); every other
+        mix — including any sharded pool, whose per-shard reads are already
+        fused dispatches — goes through the pool's jitted engine in one
+        decode-corrected gather.
         """
-        if state.layout == Layout.INTERWRAP and all(
+        if isinstance(state, PoolState) \
+                and state.layout == Layout.INTERWRAP and all(
                 p < state.boundary or p >= state.num_rows for p in phys):
             data, codes = migrate_ops.gather_encode(
                 state.storage, jnp.asarray(phys, jnp.int32), state.num_rows,
                 use_kernel=self.use_kernel)
             self.stats.kernel_batches += 1
             return data, codes
-        return pool_lib.read_pages_any_jit(state, phys), None
+        return state.read_pages(phys), None
 
     def _write_frames(self, pool_name: str, phys: list[int],
                       data: jnp.ndarray, codes: jnp.ndarray | None) -> None:
         """Batch-write frames, reusing precomputed codes where they apply."""
         vm = self.vm
         state = vm.pools[pool_name]
-        if codes is not None and all(
+        if codes is not None and isinstance(state, PoolState) and all(
                 state.boundary <= p < state.num_rows for p in phys):
             storage = _scatter_coded_rows(
                 state.storage, jnp.asarray(phys, jnp.int32), data, codes)
             vm.pools[pool_name] = dataclasses.replace(state, storage=storage)
         else:
-            vm.pools[pool_name] = pool_lib.write_pages_any_jit(
-                state, phys, data)
+            vm.pools[pool_name] = state.write_pages(phys, data)
 
     def _place(self, data: jnp.ndarray, codes: jnp.ndarray | None,
                victims: list[tuple[str, int, PTE]],
@@ -229,8 +230,10 @@ class MigrationEngine:
         alloc = vm.allocators[pool_name]
         old = state.boundary
         # validate before touching any mapping: a bad boundary must not
-        # leave half-unmapped victims behind
-        if new_boundary % GROUP_ROWS or not 0 <= new_boundary <= state.num_rows:
+        # leave half-unmapped victims behind (sharded pools move their
+        # boundary in shard lockstep, so their step is S * GROUP_ROWS)
+        if new_boundary % state.boundary_step \
+                or not 0 <= new_boundary <= state.num_rows:
             raise ValueError(f"bad boundary {new_boundary}")
         t0 = time.perf_counter()
         info = {"pool": pool_name, "old_boundary": old,
@@ -241,7 +244,7 @@ class MigrationEngine:
         host_before = self.stats.to_host
 
         if new_boundary < old:      # upgrade: SECDED region grows
-            doomed = pool_lib.evicted_extra_pages(state, new_boundary)
+            doomed = state.evict_prediction(new_boundary)
             victims = []
             for phys in doomed:
                 if phys in alloc.owner:
@@ -256,7 +259,7 @@ class MigrationEngine:
                     state, [pte.phys for _, _, pte in victims])
                 for _, _, pte in victims:     # unmap before the frame dies
                     del alloc.owner[pte.phys]
-            new_state, _ = pool_lib.repartition(state, new_boundary)
+            new_state, _ = state.move_boundary(new_boundary)
             vm.pools[pool_name] = new_state
             alloc.rebuild(new_state)
             if victims:
@@ -278,7 +281,7 @@ class MigrationEngine:
                     state, [pte.phys for _, _, pte in victims])
                 for _, _, pte in victims:
                     del alloc.owner[pte.phys]
-            new_state, _ = pool_lib.repartition(state, new_boundary)
+            new_state, _ = state.move_boundary(new_boundary)
             vm.pools[pool_name] = new_state
             alloc.rebuild(new_state)
             if victims:

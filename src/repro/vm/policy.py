@@ -19,14 +19,14 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.monitor import ErrorMonitor, MonitorConfig
-from repro.core.pool import PoolState
+from repro.core.pool import PoolLike
 from repro.core.protection import Protection, at_least
-from repro.core.scrubber import ScrubStats, scrub
+from repro.core.scrubber import ScrubStats
 from repro.vm.address_space import VirtualMemory, cream_protection
 from repro.vm.migration import MigrationEngine
 
 
-def pool_protection(state: PoolState) -> Protection:
+def pool_protection(state: PoolLike) -> Protection:
     """The protection level a pool currently *guarantees* (its weakest part)."""
     if state.boundary == 0:
         return Protection.SECDED
@@ -60,8 +60,8 @@ class VMPolicy:
         """Sweep every pool, repairing SECDED rows and feeding the monitor."""
         stats = {}
         for name in list(self.vm.pools):
-            self.vm.pools[name], s = scrub(self.vm.pools[name],
-                                           use_kernel=use_kernel)
+            self.vm.pools[name], s = self.vm.pools[name].scrub(
+                use_kernel=use_kernel)
             self.monitor.record(name, s)
             stats[name] = s
         return stats

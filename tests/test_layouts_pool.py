@@ -10,9 +10,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import injection, parity8
 from repro.core import pool as P
-from repro.core.layouts import (GROUP_ROWS, Layout, count_device_ops,
+from repro.core.layouts import (Layout, count_device_ops,
                                 extra_page_count, interwrap_slices,
-                                plan_line_access, total_pages)
+                                total_pages)
 
 RNG = np.random.default_rng(1)
 ALL_LAYOUTS = [Layout.PACKED, Layout.RANK_SUBSET, Layout.INTERWRAP,

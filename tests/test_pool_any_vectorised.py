@@ -15,8 +15,7 @@ import pytest
 
 from repro.core import injection
 from repro.core import pool as P
-from repro.core.layouts import (GROUP_ROWS, Layout, extra_page_count,
-                                page_coords, place_page)
+from repro.core.layouts import GROUP_ROWS, Layout, extra_page_count
 
 RNG = np.random.default_rng(3)
 ROW_WORDS = 64

@@ -1,0 +1,219 @@
+"""Shard/local parity: the sharded pool is bit-exact with the local engine.
+
+For every layout and shard count the same logical traffic — code-maintaining
+writes, decode-corrected reads, boundary moves, in-pool migration — must
+produce identical data and per-page status on a :class:`repro.shard.
+ShardedPool` and a same-geometry local :class:`repro.core.pool.PoolState`,
+for page-id vectors spanning shard boundaries (CREAM + SECDED + extra mix).
+
+Capacity notes baked into the assertions: the uniform layouts shard with
+*equal* capacity and identical eviction sets; PARITY duplicates its parity
+tables per shard, so the sharded pool may offer slightly fewer extras — the
+common id range must still behave identically.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import pool as pool_lib  # noqa: E402
+from repro.core.layouts import Layout  # noqa: E402
+from repro import shard  # noqa: E402
+from repro.shard import router  # noqa: E402
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8; the repo conftest sets it)")
+
+ROWS, ROW_WORDS = 128, 32
+LAYOUTS = [Layout.INTERWRAP, Layout.PACKED, Layout.RANK_SUBSET,
+           Layout.PARITY, Layout.BASELINE_ECC]
+SHARDS = [1, 2, 4, 8]
+
+
+def _pools(layout, num_shards, boundary):
+    sp = shard.make_sharded_pool(ROWS, layout, boundary,
+                                 num_shards=num_shards, row_words=ROW_WORDS)
+    lp = pool_lib.make_pool(ROWS, layout, boundary=boundary,
+                            row_words=ROW_WORDS)
+    return sp, lp
+
+
+def _spanning_ids(rng, npages, n=48):
+    """Unique page ids crossing every shard boundary: dense run + random mix.
+
+    Unique because duplicate ids within one batch have *unspecified* contents
+    (scatter order) on both engines — parity is only contractual without
+    duplicates.
+    """
+    dense = np.arange(min(16, npages))
+    rest = rng.permutation(np.arange(len(dense), npages))[:n - len(dense)]
+    return np.concatenate([dense, rest]).astype(np.int32)
+
+
+def _assert_parity(sp, lp, ids):
+    ds, ss = sp.read_pages_status(ids)
+    dl, sl = lp.read_pages_status(ids)
+    np.testing.assert_array_equal(np.asarray(ds), np.asarray(dl))
+    np.testing.assert_array_equal(np.asarray(ss), np.asarray(sl))
+    # the data-only path (per-shard fused mixed read) agrees too
+    np.testing.assert_array_equal(np.asarray(sp.read_pages(ids)),
+                                  np.asarray(dl))
+
+
+@needs_devices
+@pytest.mark.parametrize("num_shards", SHARDS)
+@pytest.mark.parametrize("layout", LAYOUTS, ids=lambda l: l.value)
+def test_read_write_repartition_parity(layout, num_shards):
+    rng = np.random.default_rng(7 * num_shards)
+    boundary = 0 if layout == Layout.BASELINE_ECC else 64
+    sp, lp = _pools(layout, num_shards, boundary)
+
+    # capacity: equal for uniform layouts; PARITY pays per-shard tables
+    if layout == Layout.PARITY:
+        assert sp.num_pages <= lp.num_pages
+    else:
+        assert sp.num_pages == lp.num_pages
+    assert sp.num_rows == lp.num_rows and sp.boundary == lp.boundary
+
+    npages = min(sp.num_pages, lp.num_pages)
+    ids = _spanning_ids(rng, npages)
+    data = rng.integers(0, 2**32, (len(ids), sp.page_words), dtype=np.uint32)
+    sp = sp.write_pages(ids, jnp.asarray(data))
+    lp = lp.write_pages(ids, jnp.asarray(data))
+    _assert_parity(sp, lp, ids)
+
+    # boundary moves: surviving pages stay bit-exact; ids evicted along the
+    # way (extras whose storage was reclaimed) have unspecified contents
+    # until rewritten, so the parity set is the still-alive prefix
+    if layout != Layout.BASELINE_ECC:
+        alive = np.ones(len(ids), bool)
+        for nb in (0, ROWS, 64):      # upgrade-all, downgrade-all, back
+            sp, si = shard.repartition(sp, nb)
+            lp, li = lp.move_boundary(nb)
+            if layout != Layout.PARITY:
+                assert si["evicted_extra_pages"] == li["evicted_extra_pages"]
+                assert sp.evict_prediction(0) == lp.evict_prediction(0)
+            alive &= ids < min(sp.num_pages, lp.num_pages)
+            _assert_parity(sp, lp, ids[alive])
+        # a fresh write re-defines every page, incl. recreated extras
+        ids2 = _spanning_ids(rng, min(sp.num_pages, lp.num_pages))
+        data2 = rng.integers(0, 2**32, (len(ids2), sp.page_words),
+                             dtype=np.uint32)
+        sp = sp.write_pages(ids2, jnp.asarray(data2))
+        lp = lp.write_pages(ids2, jnp.asarray(data2))
+        _assert_parity(sp, lp, ids2)
+
+
+@needs_devices
+@pytest.mark.parametrize("num_shards", [2, 8])
+def test_migrate_pages_crosses_shards(num_shards):
+    rng = np.random.default_rng(3)
+    sp, lp = _pools(Layout.INTERWRAP, num_shards, 64)
+    # sources and destinations deliberately land on different shards and
+    # span all three regions (CREAM, SECDED, extra)
+    src = np.asarray([0, 1, 5, 9, 64, 65, 128, 130], np.int32)
+    dst = np.asarray([3, 66, 10, 131, 2, 70, 11, 129], np.int32)
+    data = rng.integers(0, 2**32, (len(src), sp.page_words), dtype=np.uint32)
+    sp = sp.write_pages(src, jnp.asarray(data))
+    lp = lp.write_pages(src, jnp.asarray(data))
+    sp = shard.migrate_pages(sp, src, dst)
+    lp = lp.write_pages(dst, lp.read_pages(src))   # local in-pool move
+    _assert_parity(sp, lp, dst)
+    np.testing.assert_array_equal(np.asarray(sp.read_pages(dst)), data)
+
+
+@needs_devices
+@pytest.mark.parametrize("num_shards", [2, 4, 8])
+def test_stream_reads_match_general_path(num_shards):
+    rng = np.random.default_rng(11)
+    sp, _ = _pools(Layout.INTERWRAP, num_shards, 64)
+    ids = rng.permutation(ROWS)[:ROWS // 2].astype(np.int32)
+    data = rng.integers(0, 2**32, (len(ids), sp.page_words), dtype=np.uint32)
+    sp = sp.write_pages(ids, jnp.asarray(data))
+    # bank-aligned streams: stream s gets pages with page % S == s
+    n = ROWS // num_shards
+    streams = np.stack([np.arange(n) * num_shards + s
+                        for s in range(num_shards)]).astype(np.int32)
+    got = np.asarray(shard.read_streams(sp, jnp.asarray(streams)))
+    want = np.asarray(sp.read_pages(streams.reshape(-1))).reshape(got.shape)
+    np.testing.assert_array_equal(got, want)
+    # and write_streams lands where the general path reads it back
+    fresh = rng.integers(0, 2**32, got.shape, dtype=np.uint32)
+    sp = shard.write_streams(sp, jnp.asarray(streams), jnp.asarray(fresh))
+    np.testing.assert_array_equal(
+        np.asarray(sp.read_pages(streams.reshape(-1))),
+        fresh.reshape(-1, sp.page_words))
+
+
+def test_router_roundtrip_and_geometry():
+    pages = np.arange(0, 144, dtype=np.int32)      # 128 regular + 16 extra
+    for S in SHARDS:
+        sh, lo = router.route(jnp.asarray(pages), 128, S)
+        back = router.unroute(sh, lo, 128, S)
+        np.testing.assert_array_equal(np.asarray(back), pages)
+        # regular pages stripe round-robin; region is preserved globally
+        np.testing.assert_array_equal(np.asarray(sh[:128]),
+                                      pages[:128] % S)
+    with pytest.raises(ValueError):
+        router.check_geometry(128, 60, 4)          # boundary not S*8-aligned
+    with pytest.raises(ValueError):
+        router.check_geometry(120, 0, 16)          # rows not S*8-aligned
+
+
+def _property_case(layout, S, boundary, seed, n_ops):
+    """One property example: interleaved write/read/repartition traffic is
+    bit-exact between the sharded and the local pool."""
+    sp, lp = _pools(layout, S, boundary)
+    rng = np.random.default_rng(seed)
+    for _ in range(n_ops):
+        npages = min(sp.num_pages, lp.num_pages)
+        ids = rng.permutation(npages)[:24].astype(np.int32)
+        blob = rng.integers(0, 2**32, (len(ids), sp.page_words),
+                            dtype=np.uint32)
+        sp = sp.write_pages(ids, jnp.asarray(blob))
+        lp = lp.write_pages(ids, jnp.asarray(blob))
+        _assert_parity(sp, lp, ids)
+        if layout != Layout.BASELINE_ECC and rng.random() < 0.5:
+            nb = int(rng.choice([0, 64, 128]))
+            sp, _ = shard.repartition(sp, nb)
+            lp, _ = lp.move_boundary(nb)
+            surv = ids[ids < min(sp.num_pages, lp.num_pages)]
+            _assert_parity(sp, lp, surv)
+
+
+@needs_devices
+@pytest.mark.slow
+def test_shard_parity_property():
+    """Property sweep: random interleaved write/read/repartition traffic is
+    bit-exact between sharded and local pools for every layout and shard
+    count, with ids spanning shard boundaries. Hypothesis-driven when
+    available; otherwise a seeded random sweep over the same space."""
+    try:
+        import hypothesis as hyp
+        import hypothesis.strategies as st
+    except ImportError:
+        rng = np.random.default_rng(0)
+        for layout in LAYOUTS:
+            for S in SHARDS:
+                boundary = 0 if layout == Layout.BASELINE_ECC else \
+                    int(rng.choice([0, 64, 128]))
+                _property_case(layout, S, boundary,
+                               int(rng.integers(2**31)), n_ops=2)
+        return
+
+    @hyp.settings(max_examples=20, deadline=None,
+                  suppress_health_check=list(hyp.HealthCheck))
+    @hyp.given(data=st.data())
+    def run(data):
+        layout = data.draw(st.sampled_from(LAYOUTS), label="layout")
+        S = data.draw(st.sampled_from(SHARDS), label="shards")
+        boundary = 0 if layout == Layout.BASELINE_ECC else \
+            data.draw(st.sampled_from([0, 64, 128]), label="boundary")
+        _property_case(layout, S, boundary,
+                       data.draw(st.integers(0, 2**31 - 1), label="seed"),
+                       n_ops=data.draw(st.integers(1, 3), label="ops"))
+
+    run()
