@@ -7,6 +7,13 @@ big slice of the residual hot-set misses, so the p95-vs-load curve crosses
 the queue-saturation knee; paper: 67%/24% latency drops per step, 2× load
 at iso-latency). Misses pay the 500µs fault penalty; a 4-server M/G/c-style
 discrete simulation sweeps offered load for four sizes w < x < y < z.
+
+The trace comes from the shared :func:`benchmarks.cache_sim
+.websearch_trace` generator — the same workload definition the
+``bench_objcache`` replay and the ``serving_websearch_*`` rows of
+``bench_serving`` consume, so the model, the object-cache data plane, and
+the live serving engine all see one WebSearch shape (see
+``docs/paper-map.md``).
 """
 from __future__ import annotations
 

@@ -32,12 +32,13 @@ import os
 import sys
 
 #: Substrings marking metrics where *larger* is better. Everything else is
-#: treated as a cost (us/call) where smaller is better. Covers the current
-#: suites: weighted speedups (`fig9_real_ws_*`), reclaimed-capacity page
-#: counts (`vm_*_capacity`), and the objcache demotion hit-rate gain
-#: (`objcache_demotion`).
+#: treated as a cost (us/call, latency ms) where smaller is better. Covers
+#: the current suites: weighted speedups (`fig9_real_ws_*`), reclaimed-
+#: capacity page counts (`vm_*_capacity`), the objcache demotion hit-rate
+#: gain (`objcache_demotion`), and the serving suite's token throughput
+#: (`serving_*_tokens_per_s`) and CREAM speedups (`serving_*_speedup`).
 HIGHER_IS_BETTER = ("_ws_", "hit_rate", "hitrate", "speedup", "_gain",
-                    "_capacity", "demotion")
+                    "_capacity", "demotion", "_per_s")
 
 
 def is_higher_better(name: str) -> bool:

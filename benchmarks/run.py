@@ -6,7 +6,8 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract). Figure map:
   fig9_*   multiprogrammed weighted speedup     (paper Figs. 9, 10a/b, 11a/b)
   fig12_*  SECDED-fraction sensitivity vs SoftECC (paper Fig. 12)
   ops_* / kernel_*  layout + kernel overheads   (paper §4.4 analogue)
-  serving_*         CREAM-pool serving engine   (beyond paper)
+  serving_*         CREAM-Serve paged-KV engine — the real Fig. 8 serving
+                    analogue (CREAM vs SECDED throughput + p50/p99)
   vm_*              CREAM-VM multi-tenant sim   (beyond paper)
   objcache_*        CREAM-Cache real-data-plane memcached (beyond paper)
   fig9_real_*       CREAM-Shard measured bank parallelism (shard suite)

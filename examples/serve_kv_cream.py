@@ -1,30 +1,37 @@
-"""Serving with a CREAM-expanded sequence cache: the paper's capacity win, live.
+"""Serving with a CREAM-paged KV cache: the paper's capacity win, live.
 
-Serves the same multi-turn request mix twice — once with the pool in SECDED
-mode, once in CREAM (Inter-Wrap) mode with +12.5% device pages — and prints
-page-fault rates and throughput. The CREAM run keeps more parked sequences
-device-resident.
+Serves the same multi-turn session mix twice — once with the KV pool in
+SECDED mode, once in CREAM (Inter-Wrap) mode with +12.5% device pages.
+Every sequence's KV blocks live directly in pool pages (one batched page
+gather per decode step); sessions park on the pool between turns, and
+when frames run out the scheduler preempts the least-recently-used
+batch-tier session to the host swap tier. The CREAM run keeps more
+sessions device-resident, so fewer turns pay the host round-trip.
 
 Run: PYTHONPATH=src python examples/serve_kv_cream.py
 """
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.serve.engine import Engine, Request
-from repro.serve.kv_cache import SequenceCache
+from repro.serve import Engine, ServeRequest
 
 cfg = ModelConfig(name="serve-demo", family="dense", num_layers=2,
                   d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
                   vocab_size=256, head_dim=16, dtype="float32")
 
+N_SESSIONS, N_TURNS = 10, 24
 for mode in ("secded", "cream"):
     rng = np.random.default_rng(0)
-    reqs = [Request(f"s{i}", rng.integers(0, 256, size=24).astype(np.int32),
-                    max_new=10) for i in range(10)]
-    cache = SequenceCache(num_rows=48, mode=mode)
-    eng = Engine(cfg, batch_size=4, max_len=64, cache=cache)
-    out = eng.serve(reqs, steps_per_turn=4)
+    prompts = [rng.integers(0, 256, size=12).astype(np.int32)
+               for _ in range(N_SESSIONS)]
+    # several turns per session: later turns resume the parked KV
+    reqs = [ServeRequest(f"s{t % N_SESSIONS}", prompts[t % N_SESSIONS],
+                         max_new=6) for t in range(N_TURNS)]
+    eng = Engine(cfg, max_batch=4, max_len=48, mode=mode, num_rows=40,
+                 row_words=64)
+    out = eng.serve(reqs)
     print(f"{mode:7s}: pages={out['device_pages']:3d} "
-          f"fault_rate={out['fault_rate']:.3f} "
-          f"tokens/s={out['tokens_per_s']:.1f} "
-          f"evictions={out['evictions']}")
+          f"tokens/s={out['tokens_per_s']:7.1f} "
+          f"p99={out['p99_latency_ms']:7.1f}ms "
+          f"preempt={out['preemptions']} restores={out['restores']} "
+          f"host_reads={out['host_reads']}")

@@ -155,6 +155,60 @@ def apply_attn_decode(p: dict, cfg: ModelConfig, x: jax.Array,
     return y, (ck, cv)
 
 
+def apply_attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array,
+                            kv: tuple[jax.Array, jax.Array],
+                            cache_len: jax.Array
+                            ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """One-token decode against a paged-KV *view* (CREAM-Serve read path).
+
+    ``kv`` is (k, v), each ``(B, S_pad, Hkv, D)`` — not a cache this layer
+    owns, but a dense view the serving tier gathered from CREAM pool pages
+    in one batched mixed-pool dispatch (the per-sequence block table is the
+    gather's index map, the paged-attention pattern of
+    :mod:`repro.kernels.mixed`). Unlike :func:`apply_attn_decode` the cache
+    is NOT updated in place: the new token's (k, v) are inserted at
+    ``cache_len`` for this attention computation only and returned as
+    ``(B, Hkv, D)`` pairs so the block-table owner can scatter the updated
+    block back to its pool page (one batched scatter per decode step).
+
+    Positions at and beyond ``cache_len`` in the gathered view may hold
+    arbitrary pool bytes (partially-filled or freshly-allocated blocks);
+    they are masked out of the softmax here, so garbage never attends.
+    """
+    b = x.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    pos = cache_len                                    # (B,) current lengths
+    q = (x @ p["wq"]).reshape(b, 1, hq, hd)
+    k_new = (x @ p["wk"]).reshape(b, 1, hkv, hd)
+    v_new = (x @ p["wv"]).reshape(b, 1, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k_new = rms_norm(k_new, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    ck, cv = kv
+    smax = ck.shape[1]
+    at_pos = (jnp.arange(smax)[None, :] == pos[:, None])       # (B, S_pad)
+    ck = jnp.where(at_pos[:, :, None, None], k_new.astype(ck.dtype), ck)
+    cv = jnp.where(at_pos[:, :, None, None], v_new.astype(cv.dtype), cv)
+
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    valid = jnp.arange(smax)[None, :] <= pos[:, None]          # (B, S_pad)
+    # pool garbage can bit-cast to NaN/Inf; a NaN value would survive the
+    # softmax mask as 0 * NaN, so zero the masked positions outright
+    cv = jnp.where(valid[:, :, None, None], cv, 0)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) / (hd ** 0.5)
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, cv.astype(jnp.float32))
+    out = out.reshape(b, 1, hq * hd).astype(x.dtype)
+    y = out @ p["wo"]
+    return y, (k_new.reshape(b, hkv, hd), v_new.reshape(b, hkv, hd))
+
+
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_attn: int,
                   dtype) -> tuple[jax.Array, jax.Array]:
     """Stacked (n_attn_layers, B, S_max, Hkv, D) cache pair."""

@@ -246,6 +246,90 @@ def decode_step(params: Params, cfg: ModelConfig, state: Params,
     return logits[:, 0], new_state
 
 
+def attn_pattern_positions(cfg: ModelConfig) -> list[int]:
+    """Pattern indices whose block is attention (= has a KV cache)."""
+    return [i for i, (bk, _) in enumerate(cfg.pattern)
+            if bk == BlockKind.ATTN]
+
+
+def num_attn_layers(cfg: ModelConfig) -> int:
+    """Total attention layers = stages x attention positions per period.
+
+    This is the leading ``n_attn`` axis of the paged-KV tensors consumed by
+    :func:`decode_step_paged`; layers are ordered stage-major (stage 0's
+    attention positions first, in pattern order).
+    """
+    return cfg.num_stages * len(attn_pattern_positions(cfg))
+
+
+def decode_step_paged(params: Params, cfg: ModelConfig, state: Params,
+                      tokens: jax.Array, kv: tuple[jax.Array, jax.Array]
+                      ) -> tuple[jax.Array, Params,
+                                 tuple[jax.Array, jax.Array]]:
+    """One decode step against externally gathered paged KV (CREAM-Serve).
+
+    ``kv`` = (k, v), each ``(n_attn, B, S_pad, Hkv, D)`` — dense views of
+    every sequence's KV blocks, gathered from CREAM pool pages by the
+    serving tier in ONE batched mixed-pool dispatch per step (the block
+    table is the gather's index map); ``n_attn`` is stage-major (see
+    :func:`num_attn_layers`). ``state`` carries only ``cache_len``: paged
+    serving supports attention-only patterns, whose entire per-sequence
+    state lives in pool pages (recurrent-state blocks for hybrid patterns
+    are future work — we raise rather than silently keep dense state).
+
+    Returns ``(logits (B, V), new_state, (k_new, v_new))`` where
+    k_new/v_new are ``(n_attn, B, Hkv, D)`` — the one token of KV this step
+    produced, for the caller to scatter into its current blocks (one
+    batched pool scatter per step).
+    """
+    apos = attn_pattern_positions(cfg)
+    if len(apos) != len(cfg.pattern):
+        raise ValueError(
+            f"{cfg.name}: paged decode supports attention-only patterns; "
+            f"pattern has non-attention blocks at "
+            f"{[i for i in range(len(cfg.pattern)) if i not in apos]}")
+    x = apply_embed(params["embed"], tokens[:, None])
+    cache_len = state["cache_len"]
+    ns, na = cfg.num_stages, len(apos)
+    k_all, v_all = kv
+    k_all = k_all.reshape((ns, na) + k_all.shape[1:])
+    v_all = v_all.reshape((ns, na) + v_all.shape[1:])
+
+    def stage(carry, scanned):
+        sp, ks, vs = scanned                     # ks/vs: (na, B, S_pad, h, d)
+        x = carry
+        news_k, news_v = [], []
+        for a, i in enumerate(apos):
+            entry = sp[f"pos{i}"]
+            _, mk = cfg.pattern[i]
+            h = rms_norm(x, entry["norm1"], cfg.norm_eps)
+            y, (kn, vn) = attention.apply_attn_decode_paged(
+                entry["block"], cfg, h, (ks[a], vs[a]), cache_len)
+            news_k.append(kn)
+            news_v.append(vn)
+            x = x + y
+            if mk != MixerKind.NONE:
+                h2 = rms_norm(x, entry["norm2"], cfg.norm_eps)
+                if mk == MixerKind.MLP:
+                    x = x + apply_mlp(entry["mixer"], h2)
+                else:
+                    y2, _ = moe.apply_moe(entry["mixer"], cfg, h2)
+                    x = x + y2
+        return x, (jnp.stack(news_k), jnp.stack(news_v))
+
+    x, (k_new, v_new) = jax.lax.scan(stage, x,
+                                     (params["stages"], k_all, v_all))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = apply_lm_head(params["lm_head"], x)
+    b = tokens.shape[0]
+    sh = (ns * na, b) + k_new.shape[3:]
+    return (logits[:, 0], {"cache_len": cache_len + 1},
+            (k_new.reshape(sh), v_new.reshape(sh)))
+
+
 # ---------------------------------------------------------------------------
 # Prefill: forward + decode-state extraction
 # ---------------------------------------------------------------------------

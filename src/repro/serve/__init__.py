@@ -1,1 +1,24 @@
-"""repro.serve subpackage."""
+"""CREAM-Serve: paged-KV continuous batching on the CREAM data plane.
+
+Paper anchor: §6.1 / Fig. 8 (capacity → end-to-end serving speedups) and
+Fig. 1's reliability-tolerance quadrants (KV blocks are the cache-class
+data that trades protection for capacity).
+
+Layers:
+
+  * :mod:`repro.serve.paged_kv`  — block tables mapping (seq, layer,
+    block) → CREAM page ids, with per-request reliability tiers;
+  * :mod:`repro.serve.scheduler` — admission control, parking,
+    preempt-to-host;
+  * :mod:`repro.serve.engine`    — the continuous-batching engine: one
+    pool gather + one pool scatter per decode step;
+  * :mod:`repro.serve.kv_cache`  — the earlier whole-state
+    :class:`~repro.serve.kv_cache.SequenceCache` park/resume tier, kept
+    as the VM-tenant exemplar the VM test-suite exercises.
+"""
+from repro.serve.engine import Engine
+from repro.serve.paged_kv import PagedKV, token_words_for
+from repro.serve.scheduler import Scheduler, ServeRequest
+
+__all__ = ["Engine", "PagedKV", "Scheduler", "ServeRequest",
+           "token_words_for"]

@@ -1,134 +1,310 @@
-"""Serving engine: batched decode with CREAM-tiered sequence parking.
+"""CREAM-Serve: continuous batching with KV paged onto the CREAM pool.
 
-A deliberately compact continuous-batching engine:
+Paper anchor: §6.1 / Fig. 8 — the end-to-end capacity claim (memcached
++23.0 %, WebSearch +37.3 %) restated for LLM serving: the KV cache IS the
+capacity-sensitive working set, stored page-for-page in a CREAM pool, and
+the boundary register's reclaimed code-lane pages are extra sequences
+served without a host round-trip.
 
-  * requests (prompt, max_new) are admitted into decode slots;
-  * when a request pauses (multi-turn think time) its per-sequence decode
-    state is packed and parked in the :class:`SequenceCache`, which
-    allocates through the CREAM-VM (:mod:`repro.vm`) — device pool tier
-    first, host swap on overflow — so pool repartitions live-migrate
-    parked state instead of dropping it;
-  * on resume the state is fetched back — a host fetch is the page fault
-    whose frequency the pool's capacity mode controls.
+The engine is vLLM-shaped but the data plane is this repo's:
 
-The decode batch itself is a dense jitted ``decode_step`` over B slots;
-per-sequence state slices in/out of the batch via tree indexing.
+  * every (sequence, layer, KV block) lives in one CREAM pool page; the
+    :class:`repro.serve.paged_kv.PagedKV` block table maps them and the
+    :class:`repro.serve.scheduler.Scheduler` decides residency
+    (admission, parking between turns, preempt-to-host under pressure);
+  * a decode step is exactly three dispatches on any
+    :class:`repro.core.pool.PoolLike` (local or CREAM-Shard): ONE batched
+    page gather (``read_pages`` with the flattened block tables as index
+    map — the mixed-pool engine's scalar-prefetch pattern), one fused
+    model step (:func:`repro.models.transformer.decode_step_paged` over
+    all slots), and ONE batched scatter of the updated current blocks
+    (``write_pages``). No Python per-sequence loop touches KV;
+  * prefill extracts the prompt's KV from the dense
+    :func:`repro.models.transformer.prefill` state and packs it into the
+    sequence's blocks with a single batched write.
+
+All shapes are fixed by ``(max_batch, n_layers, max_blocks)``: unbound
+slots read and write a scratch page and are masked by ``cache_len = 0``,
+so the whole serving loop runs three compiled programs regardless of which
+sequences are live.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.layouts import Layout
+from repro.core.pool import PoolState
+from repro.kernels.mixed import ops as mixed_ops
 from repro.models import build_model
-from repro.serve.kv_cache import SequenceCache, pack_tree, unpack_tree
+from repro.models import transformer
+from repro.serve.paged_kv import PagedKV, token_words_for
+from repro.serve.scheduler import Scheduler, ServeRequest
+from repro.vm.address_space import VirtualMemory
+
+# Re-export: the old engine's request type moved to the scheduler.
+Request = ServeRequest
 
 
-@dataclass
-class Request:
-    seq_id: str
-    prompt: np.ndarray
-    max_new: int
-    generated: list[int] = field(default_factory=list)
-    latency_s: float = 0.0
+def _percentile(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, batch_size: int, max_len: int,
-                 cache: SequenceCache, seed: int = 0):
+    """Paged-KV continuous-batching engine on a CREAM pool.
+
+    ``mode='cream'`` runs the pool boundary-free (InterWrap, +12.5 %
+    pages); ``'secded'`` pins ``boundary=0`` (all rows SECDED — the
+    conventional-ECC baseline with the same arithmetic). Pass an existing
+    ``vm`` (with pool ``pool`` already added, possibly sharded) to share
+    the data plane with other tenants; the engine never branches on the
+    pool's concrete type.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_batch: int, max_len: int,
+                 vm: VirtualMemory | None = None, pool: str = "kv",
+                 mode: str = "cream", num_rows: int = 64,
+                 row_words: int = 64, max_sessions: int = 128,
+                 secded_rows: int = 0, seed: int = 0):
+        if mode not in ("cream", "secded"):
+            raise ValueError(mode)
+        if len(transformer.attn_pattern_positions(cfg)) != len(cfg.pattern):
+            raise ValueError(f"{cfg.name}: CREAM-Serve pages KV only; "
+                             "attention-only patterns required")
+        if vm is None:
+            vm = VirtualMemory(row_words=row_words)
+            # cream: boundary-free pool, except `secded_rows` kept in the
+            # SECDED region so paid-tier requests have frames of their class
+            vm.add_pool(pool, num_rows, Layout.INTERWRAP,
+                        boundary=num_rows - secded_rows
+                        if mode == "cream" else 0)
         self.cfg = cfg
-        self.batch = batch_size
+        self.vm = vm
+        self.pool_name = pool
+        self.mode = mode
+        self.max_batch = max_batch
         self.max_len = max_len
-        self.cache = cache
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.key(seed))
-        self._decode = jax.jit(self.model.decode_step)
-        self._specs: dict = {}
+        self.n_layers = transformer.num_attn_layers(cfg)
+        self.kv = PagedKV(
+            vm, pool, n_layers=self.n_layers,
+            token_words=token_words_for(cfg.num_kv_heads, cfg.head_dim_,
+                                        cfg.activation_dtype),
+            max_seqs=max_sessions, max_tokens=max_len)
+        self.sched = Scheduler(self.kv, max_batch, token_limit=max_len)
+        # host-side per-slot decode registers
+        self._lens = np.zeros(max_batch, np.int32)
+        self._toks = np.zeros(max_batch, np.int32)
+        self.steps = 0
         self._prefill = jax.jit(
             lambda p, toks: self.model.prefill(p, toks, max_len))
+        self._attend = jax.jit(self._attend_fn)
+        self._pack = jax.jit(self._pack_fn)
+        # the paged-attention gather: the kernels/mixed fused read with the
+        # flattened block table as its scalar-prefetched index map (geometry
+        # is static → one compile per pool mode, page ids stay dynamic)
+        self._mixed_read = jax.jit(
+            mixed_ops.read_correct,
+            static_argnames=("layout", "num_rows", "boundary",
+                             "use_kernel"))
 
-    # -- single-sequence building blocks -------------------------------------
-    def prefill_one(self, req: Request):
-        toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+    # -- geometry shorthands -------------------------------------------------
+    @property
+    def pool(self):
+        return self.vm.pools[self.pool_name]
+
+    @property
+    def _bt(self) -> int:
+        return self.kv.block_tokens
+
+    @property
+    def _s_pad(self) -> int:
+        return self.kv.max_blocks * self.kv.block_tokens
+
+    # -- the fused per-step compute (one compiled program) -------------------
+    def _attend_fn(self, params, pages_u32, lens, toks):
+        """(B*L*maxB, page_words) gathered pages -> (logits, next token,
+        updated current-block pages (B*L, page_words))."""
+        cfg, kvw = self.cfg, self.kv.kv_words
+        B, L, maxB, bt = (self.max_batch, self.n_layers,
+                          self.kv.max_blocks, self._bt)
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim_
+        pages = pages_u32.reshape(B, L, maxB, -1)
+        used, tail = pages[..., :kvw], pages[..., kvw:]
+        kvv = jax.lax.bitcast_convert_type(used, jnp.float32)
+        kvv = kvv.reshape(B, L, maxB, 2, bt, hkv, hd)
+        k = kvv[:, :, :, 0].transpose(1, 0, 2, 3, 4, 5) \
+            .reshape(L, B, maxB * bt, hkv, hd)
+        v = kvv[:, :, :, 1].transpose(1, 0, 2, 3, 4, 5) \
+            .reshape(L, B, maxB * bt, hkv, hd)
+        logits, _, (k_new, v_new) = transformer.decode_step_paged(
+            params, cfg, {"cache_len": lens}, toks, (k, v))
+        # write-back: insert the new token into each slot's current block
+        blk = lens // bt
+        off = lens - blk * bt
+        idx = jnp.broadcast_to(blk.reshape(B, 1, 1, 1, 1, 1, 1),
+                               (B, L, 1, 2, bt, hkv, hd))
+        curr = jnp.take_along_axis(kvv, idx, axis=2)[:, :, 0]
+        new_tok = jnp.stack([k_new.transpose(1, 0, 2, 3),
+                             v_new.transpose(1, 0, 2, 3)], axis=2)
+        onehot = jnp.arange(bt) == off[:, None]              # (B, bt)
+        curr = jnp.where(onehot[:, None, None, :, None, None],
+                         new_tok[:, :, :, None], curr)
+        cur_used = jax.lax.bitcast_convert_type(curr, jnp.uint32) \
+            .reshape(B, L, kvw)
+        tidx = jnp.broadcast_to(blk.reshape(B, 1, 1, 1),
+                                (B, L, 1, tail.shape[-1]))
+        cur_tail = jnp.take_along_axis(tail, tidx, axis=2)[:, :, 0]
+        cur_pages = jnp.concatenate([cur_used, cur_tail], axis=-1)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, nxt, cur_pages.reshape(B * L, -1)
+
+    def _pack_fn(self, k, v):
+        """Prefill KV (L, S, Hkv, D) pair -> (L*maxB, page_words) pages."""
+        L, maxB, bt = self.n_layers, self.kv.max_blocks, self._bt
+        pad = self._s_pad - k.shape[1]
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv = jnp.stack([k.reshape(L, maxB, bt, *k.shape[2:]),
+                        v.reshape(L, maxB, bt, *v.shape[2:])], axis=2)
+        used = jax.lax.bitcast_convert_type(kv, jnp.uint32) \
+            .reshape(L, maxB, self.kv.kv_words)
+        tail = jnp.zeros((L, maxB, self.kv.page_words - self.kv.kv_words),
+                         jnp.uint32)
+        return jnp.concatenate([used, tail], axis=-1) \
+            .reshape(L * maxB, self.kv.page_words)
+
+    def _gather_pages(self, phys: np.ndarray) -> jax.Array:
+        """The decode step's ONE page gather. Local pools take the
+        :mod:`repro.kernels.mixed` fused read — the Pallas scalar-prefetch
+        kernel on TPU, its vectorised jnp oracle (= the mixed-pool engine's
+        fast path) on CPU; sharded pools take the owner-select
+        ``read_pages`` dispatch."""
+        pool = self.pool
+        if isinstance(pool, PoolState):
+            return self._mixed_read(pool.storage,
+                                    jnp.asarray(phys, jnp.int32),
+                                    layout=pool.layout,
+                                    num_rows=pool.num_rows,
+                                    boundary=pool.boundary)
+        return pool.read_pages(phys)
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        self.sched.submit(req)
+
+    def refresh_translation(self) -> list[int]:
+        """Call after an external repartition/migration on the serve pool:
+        refreshes the block tables' physical mirror and preempts bound
+        sequences whose pages left the device. Returns the dropped slots."""
+        return self.sched.sync_residency()
+
+    # -- the serving loop ------------------------------------------------------
+    def _do_prefill(self, slot: int, req: ServeRequest, sess) -> None:
+        toks = jnp.asarray(np.asarray(req.prompt)[None, :], jnp.int32)
         logits, state = self._prefill(self.params, toks)
-        next_tok = int(jnp.argmax(logits[0, -1]))
-        return next_tok, state
+        apos = transformer.attn_pattern_positions(self.cfg)
+        ks = jnp.stack([state[f"pos{i}"]["k"][:, 0] for i in apos], axis=1)
+        vs = jnp.stack([state[f"pos{i}"]["v"][:, 0] for i in apos], axis=1)
+        sh = (self.n_layers,) + ks.shape[2:]
+        pages = self._pack(ks.reshape(sh).astype(jnp.float32),
+                           vs.reshape(sh).astype(jnp.float32))
+        p = len(req.prompt)
+        nb = self.kv.blocks_for(p)
+        phys = self.kv.gather_phys(np.asarray([sess.row]))[0]   # (L, maxB)
+        ids = phys[:, :nb].reshape(-1)
+        data = pages.reshape(self.n_layers, self.kv.max_blocks, -1)[:, :nb] \
+            .reshape(len(ids), -1)
+        self.vm.pools[self.pool_name] = self.pool.write_pages(ids, data)
+        sess.cache_len = p
+        sess.last_tok = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(sess.last_tok)
+        self._lens[slot] = sess.cache_len
+        self._toks[slot] = sess.last_tok
 
-    def park(self, seq_id: str, state) -> None:
-        blob, spec = pack_tree(state)
-        self.cache.park(seq_id, blob)
-        self._specs[seq_id] = spec
+    def step(self) -> list[ServeRequest]:
+        """One decode step over every bound slot: one page gather, one
+        model dispatch, one page scatter. Returns requests that finished."""
+        self.sched.ensure_step()
+        rows = np.asarray([s.row if s is not None else -1
+                           for s in self.sched.slots])
+        active = rows >= 0
+        if not active.any():
+            return []
+        lens = np.where(active, self._lens, 0).astype(np.int32)
+        toks = np.where(active, self._toks, 0).astype(np.int32)
+        phys = self.kv.gather_phys(rows)                    # (B, L, maxB)
+        pages = self._gather_pages(phys.reshape(-1))        # ONE gather
+        _, nxt, cur_pages = self._attend(self.params, pages,
+                                         jnp.asarray(lens),
+                                         jnp.asarray(toks))
+        cur_ids = self.kv.current_block_phys(rows, lens)    # (B, L)
+        self.vm.pools[self.pool_name] = self.pool.write_pages(
+            cur_ids.reshape(-1), cur_pages)                 # ONE scatter
+        nxt = np.asarray(nxt)
+        self.steps += 1
+        finished = []
+        for slot in np.flatnonzero(active):
+            sess = self.sched.slots[slot]
+            sess.cache_len += 1
+            sess.last_tok = int(nxt[slot])
+            sess.req.generated.append(sess.last_tok)
+            self._lens[slot] = sess.cache_len
+            self._toks[slot] = sess.last_tok
+            if len(sess.req.generated) >= sess.req.max_new:
+                finished.append(self.sched.finish(slot))
+        return finished
 
-    def resume(self, req: Request, blob: np.ndarray | None = None,
-               prefetched: bool = False):
-        """Restore a request's decode state.
+    def poll(self) -> list[ServeRequest]:
+        """One serving-loop iteration: an admission pass (prefilling the
+        newly admitted sessions) followed by one batched decode step.
+        Returns requests that completed; raises on an unserveable queue."""
+        admitted = self.sched.tick()
+        done: list[ServeRequest] = []
+        for adm in admitted:
+            if adm.is_prefill:
+                self._do_prefill(adm.slot, adm.req, adm.session)
+                if len(adm.req.generated) >= adm.req.max_new:
+                    done.append(self.sched.finish(adm.slot))
+            else:
+                self._lens[adm.slot] = adm.session.cache_len
+                self._toks[adm.slot] = adm.session.last_tok
+        if self.sched.active_slots():
+            done.extend(self.step())
+        elif not admitted and self.sched.waiting:
+            raise RuntimeError(
+                "deadlock: waiting requests cannot be admitted "
+                f"({self.sched.stats})")
+        return done
 
-        ``prefetched=True`` means ``blob`` came from a batched
-        :meth:`SequenceCache.resume_many` prefetch (possibly None on miss)
-        and the cache must not be consulted again.
-        """
-        if not prefetched:
-            blob = self.cache.resume(req.seq_id)
-        if blob is None:
-            tok, state = self.prefill_one(req)   # cache miss -> re-prefill
-            if req.generated:
-                # replay generated tokens to rebuild state
-                for t in req.generated:
-                    _, state = self._decode(self.params, state,
-                                            jnp.asarray([t], jnp.int32))
-                tok = req.generated[-1]
-            return tok, state
-        return None, unpack_tree(blob, self._specs[req.seq_id])
-
-    # -- serving loop ----------------------------------------------------------
-    def serve(self, requests: list[Request], steps_per_turn: int = 8
-              ) -> dict:
-        """Round-robin multi-turn serving: each request decodes
-        ``steps_per_turn`` tokens per turn, parking between turns."""
-        t_start = time.perf_counter()
-        queue = list(requests)
-        first = True
-        while any(len(r.generated) < r.max_new for r in queue):
-            active = [r for r in queue if len(r.generated) < r.max_new]
-            # batched prefetch: one mixed-pool engine dispatch per backing
-            # pool restores the whole turn's parked states together
-            blobs = {} if first else self.cache.resume_many(
-                [r.seq_id for r in active if r.seq_id in self._specs])
-            for req in active:
-                t0 = time.perf_counter()
-                if first or req.seq_id not in self._specs:
-                    tok, state = self.prefill_one(req)
-                    req.generated.append(tok)
-                else:
-                    _, state = self.resume(req, blob=blobs.get(req.seq_id),
-                                           prefetched=True)
-                    tok = req.generated[-1]
-                for _ in range(steps_per_turn):
-                    if len(req.generated) >= req.max_new:
-                        break
-                    logits, state = self._decode(
-                        self.params, state, jnp.asarray([tok], jnp.int32))
-                    tok = int(jnp.argmax(logits[0]))
-                    req.generated.append(tok)
-                self.park(req.seq_id, state)
-                req.latency_s += time.perf_counter() - t0
-            first = False
-        wall = time.perf_counter() - t_start
-        total_tokens = sum(len(r.generated) for r in queue)
+    def serve(self, requests: list[ServeRequest]) -> dict:
+        """Serve a request list to completion; returns the run's stats."""
+        for req in requests:
+            self.submit(req)
+        done: list[ServeRequest] = []
+        t0 = time.perf_counter()
+        while self.sched.has_work():
+            done.extend(self.poll())
+        wall = time.perf_counter() - t0
+        lats = [r.latency_s for r in done]
+        tokens = sum(len(r.generated) for r in done)
         return {
             "wall_s": wall,
-            "tokens": total_tokens,
-            "tokens_per_s": total_tokens / wall,
-            "fault_rate": self.cache.stats.fault_rate,
-            "device_hits": self.cache.stats.device_hits,
-            "host_hits": self.cache.stats.host_hits,
-            "evictions": self.cache.stats.evictions,
-            "device_pages": self.cache.device_capacity_pages,
-            "device_util": self.cache.device_utilisation,
-            "vm_fault_rate": self.cache.vm.stats.fault_rate,
-            "mode": self.cache.mode,
+            "tokens": tokens,
+            "tokens_per_s": tokens / wall if wall else 0.0,
+            "requests": len(done),
+            "p50_latency_ms": _percentile(lats, 50) * 1e3,
+            "p99_latency_ms": _percentile(lats, 99) * 1e3,
+            "decode_steps": self.steps,
+            "device_pages": self.vm.device_capacity_pages(self.pool_name),
+            "device_util": self.vm.utilisation(self.pool_name),
+            "vm_fault_rate": self.vm.stats.fault_rate,
+            "host_reads": self.vm.stats.host_reads,
+            "mode": self.mode,
+            **self.sched.stats,
         }

@@ -1,5 +1,12 @@
 """CREAM-VM-backed sequence-state cache: the paper's capacity story, served.
 
+Paper anchor: §6.1's memcached experiment (Fig. 8) with the SSD replaced
+by host DRAM, and Fig. 1's loss-tolerant cache quadrant (KV pages run
+protection-free by policy). Superseded on the serving hot path by the
+paged-KV engine (:mod:`repro.serve.paged_kv`), which keeps KV blocks
+natively in pool pages instead of packing/parking whole decode states;
+kept as the whole-blob VM-tenant exemplar the VM acceptance tests drive.
+
 Serving keeps many more sequences than fit in one decode batch; parked
 sequences' KV/recurrent state must live *somewhere*. The tier order is
 

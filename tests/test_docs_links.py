@@ -1,0 +1,34 @@
+"""Docs stay navigable: every relative link in README/docs/ must resolve.
+
+Mirrors the CI "Docs link check" step (``tools/check_links.py``) so a dead
+link fails locally too, and sanity-checks that the paper map covers every
+``fig*`` benchmark row family the suites actually emit.
+"""
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_no_dead_relative_links():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_links.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr + proc.stdout
+
+
+def test_paper_map_covers_every_fig_row_family():
+    """docs/paper-map.md must mention every fig-row prefix emitted by the
+    benchmark suites (fig4_websearch, fig8_memcached, fig8_memcached_real,
+    fig9_ws, fig9_real, fig12_sensitivity, ...)."""
+    fams = set()
+    for bench in (ROOT / "benchmarks").glob("bench_*.py"):
+        for m in re.finditer(r"f?\"(fig\d+_[a-z]+(?:_real)?)",
+                             bench.read_text()):
+            fams.add(m.group(1))
+    assert fams, "no fig rows found — benchmark layout changed?"
+    paper_map = (ROOT / "docs" / "paper-map.md").read_text()
+    missing = sorted(f for f in fams if f not in paper_map)
+    assert not missing, f"docs/paper-map.md misses row families: {missing}"

@@ -1,0 +1,227 @@
+"""CREAM-Serve acceptance: paged-KV decode parity and preempt-to-host.
+
+The paged engine's whole value rests on two claims:
+
+  * the paged read path (one batched pool gather per decode step, on local
+    or sharded pools, in CREAM or SECDED mode) produces *exactly* the
+    tokens the dense-KV decode path produces;
+  * preempting a sequence's KV to the host tier — by capacity pressure or
+    by a mid-decode repartition that shrinks the weak-class pool — and
+    resuming it later is bit-exact (same tokens as an unpreempted run).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.layouts import Layout
+from repro.core.pool import PoolState
+from repro.core.protection import Protection
+from repro.serve import Engine, ServeRequest
+from repro.vm.address_space import VirtualMemory
+from repro.vm.migration import MigrationEngine
+
+CFG = ModelConfig(name="serve-test", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=256, head_dim=16, dtype="float32")
+
+
+def _prompts(n, rng=None):
+    rng = rng or np.random.default_rng(1)
+    return [rng.integers(0, 256, size=12).astype(np.int32)
+            for _ in range(n)]
+
+
+def _reqs(prompts, max_new=8):
+    return [ServeRequest(f"s{i}", p, max_new)
+            for i, p in enumerate(prompts)]
+
+
+def _dense_reference(eng, prompts, max_new=8):
+    """Greedy decode each prompt with the dense decode_step path."""
+    model, params = eng.model, eng.params
+    step = jax.jit(model.decode_step)
+    pre = jax.jit(lambda p, t: model.prefill(p, t, eng.max_len))
+    out = []
+    for p in prompts:
+        logits, state = pre(params, jnp.asarray(p[None, :], jnp.int32))
+        tok = int(jnp.argmax(logits[0, -1]))
+        gen = [tok]
+        for _ in range(max_new - 1):
+            lg, state = step(params, state, jnp.asarray([tok], jnp.int32))
+            tok = int(jnp.argmax(lg[0]))
+            gen.append(tok)
+        out.append(gen)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parity vs the dense-KV reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shards", [1, 2])
+def test_paged_decode_matches_dense(shards):
+    """One batched pool gather per step == dense per-sequence KV decode,
+    on both the local pool and a 2-shard CREAM-Shard pool."""
+    prompts = _prompts(6)
+    reqs = _reqs(prompts)
+    if shards > 1:
+        if jax.device_count() < shards:
+            pytest.skip("needs multiple devices")
+        vm = VirtualMemory(row_words=64)
+        vm.add_pool("kv", 64, Layout.INTERWRAP, boundary=None,
+                    shards=shards)
+        eng = Engine(CFG, max_batch=4, max_len=32, vm=vm, seed=0)
+    else:
+        eng = Engine(CFG, max_batch=4, max_len=32, num_rows=64,
+                     row_words=64, seed=0)
+    eng.serve(reqs)
+    ref = _dense_reference(eng, prompts)
+    assert [r.generated for r in reqs] == ref
+
+
+def test_secded_mode_parity_and_capacity():
+    """SECDED pool mode decodes identical tokens with fewer pages."""
+    prompts = _prompts(4)
+    reqs_c = _reqs(prompts)
+    reqs_s = _reqs(prompts)
+    eng_c = Engine(CFG, max_batch=4, max_len=32, mode="cream",
+                   num_rows=64, row_words=64, seed=0)
+    eng_s = Engine(CFG, max_batch=4, max_len=32, mode="secded",
+                   num_rows=64, row_words=64, seed=0)
+    out_c = eng_c.serve(reqs_c)
+    out_s = eng_s.serve(reqs_s)
+    assert [r.generated for r in reqs_c] == [r.generated for r in reqs_s]
+    assert out_c["device_pages"] > out_s["device_pages"]
+
+
+def test_one_gather_one_scatter_per_step(monkeypatch):
+    """A decode step touches the pool exactly twice: one batched read of
+    every block, one batched write of the current blocks."""
+    calls = {"read": 0, "write": 0}
+    orig_write = PoolState.write_pages
+
+    def counting_write(self, pages, data):
+        calls["write"] += 1
+        return orig_write(self, pages, data)
+
+    eng = Engine(CFG, max_batch=4, max_len=32, num_rows=64, row_words=64)
+    for r in _reqs(_prompts(4), max_new=4):
+        eng.submit(r)
+    eng.poll()                      # admissions + prefill + first step
+    orig_gather = eng._gather_pages
+
+    def counting_gather(phys):
+        calls["read"] += 1
+        return orig_gather(phys)
+
+    eng._gather_pages = counting_gather
+    monkeypatch.setattr(PoolState, "write_pages", counting_write)
+    eng.poll()                      # a pure decode step
+    assert calls == {"read": 1, "write": 1}
+    b, L, maxb = eng.max_batch, eng.n_layers, eng.kv.max_blocks
+    # and the read really is the whole batch's block tables at once
+    rows = np.asarray([s.row if s is not None else -1
+                       for s in eng.sched.slots])
+    assert eng.kv.gather_phys(rows).shape == (b, L, maxb)
+
+
+# ---------------------------------------------------------------------------
+# Preemption / capacity pressure
+# ---------------------------------------------------------------------------
+
+
+def test_overflow_preemption_is_bit_exact():
+    """A pool too small for the working set forces preempt-to-host; the
+    token streams must not change."""
+    prompts = _prompts(8)
+    reqs_big = _reqs(prompts)
+    reqs_small = _reqs(prompts)
+    Engine(CFG, max_batch=4, max_len=32, num_rows=64, row_words=64,
+           seed=0).serve(reqs_big)
+    out = Engine(CFG, max_batch=4, max_len=32, num_rows=24, row_words=64,
+                 seed=0).serve(reqs_small)
+    assert out["preemptions"] > 0
+    assert [r.generated for r in reqs_small] == \
+        [r.generated for r in reqs_big]
+
+
+def test_tight_token_budget_resume_does_not_reset():
+    """A preempted-then-resumed request carries partial ``generated``; the
+    scheduler must measure the *remaining* tokens against the block table
+    (not the full max_new), or it would spuriously reset the session and
+    decode the tail against a truncated context."""
+    prompts = _prompts(8)
+    # 12-token prompt + 20 new = 31 <= the 32-token table: zero slack
+    ref = _reqs(prompts, max_new=20)
+    got = _reqs(prompts, max_new=20)
+    Engine(CFG, max_batch=4, max_len=32, num_rows=64, row_words=64,
+           seed=0).serve(ref)
+    out = Engine(CFG, max_batch=4, max_len=32, num_rows=24, row_words=64,
+                 seed=0).serve(got)
+    assert out["preemptions"] > 0 and out["restores"] > 0
+    assert out["resets"] == 0
+    assert [r.generated for r in got] == [r.generated for r in ref]
+
+
+def test_over_budget_request_fails_fast():
+    """prompt + max_new beyond the block table raises at submit, not as a
+    mid-serve crash."""
+    eng = Engine(CFG, max_batch=2, max_len=32, num_rows=32, row_words=64)
+    with pytest.raises(ValueError, match="exceed"):
+        eng.submit(ServeRequest("x", _prompts(1)[0], max_new=30))
+
+
+def _drive(repartition_at=None, new_boundary=0):
+    """Serve 8 sessions, optionally repartitioning mid-decode."""
+    prompts = _prompts(8)
+    reqs = _reqs(prompts, max_new=10)
+    eng = Engine(CFG, max_batch=4, max_len=32, num_rows=32, row_words=64,
+                 seed=0)
+    for r in reqs:
+        eng.submit(r)
+    mig = MigrationEngine(eng.vm)
+    info = None
+    k = 0
+    while eng.sched.has_work():
+        eng.poll()
+        k += 1
+        if k == repartition_at:
+            info = mig.repartition_with_migration("kv", new_boundary)
+            eng.refresh_translation()
+    return [r.generated for r in reqs], eng, info
+
+
+def test_midrun_repartition_preempts_and_resumes_bit_exact():
+    """The satellite scenario: a mid-decode protection upgrade shrinks the
+    NONE pool; mapped extra pages migrate (some to host), the scheduler
+    preempts the affected batch-tier sequences, resumes them when frames
+    free up, and the decoded tokens are bit-exact vs an unpreempted run."""
+    base, _, _ = _drive()
+    got, eng, info = _drive(repartition_at=12, new_boundary=0)
+    assert info is not None and info["migrated"] > 0
+    assert info["to_host"] > 0, "repartition should overflow to host"
+    assert eng.sched.restores > 0, "a preempted sequence must resume"
+    assert eng.vm.stats.host_reads > 0, "resume pays the page fault"
+    assert got == base
+
+
+def test_paid_tier_lands_on_secded_frames():
+    """HRM-style tiers: paid sequences' pages must sit on frames whose
+    storage class is SECDED even in cream mode."""
+    eng = Engine(CFG, max_batch=2, max_len=32, mode="cream", num_rows=32,
+                 secded_rows=16, row_words=64, seed=0)
+    reqs = [ServeRequest("paid0", _prompts(1)[0], 4, tier="paid"),
+            ServeRequest("batch0", _prompts(1)[0], 4, tier="batch")]
+    eng.serve(reqs)
+    kv = eng.kv
+    for seq, want in (("paid0", {Protection.SECDED}),
+                      ("batch0", {Protection.SECDED, Protection.NONE})):
+        row = eng.sched.sessions[seq].row
+        vpns = kv._table[row][kv._table[row] >= 0]
+        assert len(vpns)
+        prot = {eng.vm.effective_protection(kv.tenant, int(v))
+                for v in vpns}
+        assert prot <= want, f"{seq}: {prot}"

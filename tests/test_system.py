@@ -128,9 +128,11 @@ def test_adaptive_region_manager_moves_capacity():
 
 def test_serving_cream_vs_secded_capacity():
     from benchmarks.bench_serving import run
-    r = run(num_rows=48, n_requests=8, max_new=8)
+    r = run(num_rows=32, n_turns=12)
     assert r["cream"]["device_pages"] > r["secded"]["device_pages"]
-    assert r["cream"]["fault_rate"] <= r["secded"]["fault_rate"]
+    # +12.5% device pages => no more host round-trips than the baseline
+    assert r["cream"]["restores"] <= r["secded"]["restores"]
+    assert r["cream"]["tokens"] == r["secded"]["tokens"]
 
 
 def test_grad_compression_roundtrip():

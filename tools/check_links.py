@@ -1,0 +1,75 @@
+"""Docs link check: fail on dead *relative* links in README.md and docs/.
+
+Scans markdown files for inline links/images ``[text](target)`` and
+verifies that every relative target resolves to a file or directory in
+the repo (``#anchor`` fragments are checked for existence of the file
+part only; external ``http(s)://`` and ``mailto:`` targets are skipped).
+Run from anywhere: paths resolve against the repo root (this file's
+parent's parent).
+
+Usage::
+
+    python tools/check_links.py [FILE_OR_DIR ...]   # default: README docs/
+
+Exit status 0 = all links resolve, 1 = dead links (each one listed).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+#: inline markdown link/image: [text](target) — stops at the first ')',
+#: good enough for the plain relative paths these docs use
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _targets(md: Path):
+    text = md.read_text(encoding="utf-8")
+    in_code = False
+    for line in text.splitlines():
+        if line.strip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        yield from LINK_RE.findall(line)
+
+
+def check_file(md: Path) -> list[str]:
+    dead = []
+    for target in _targets(md):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            dead.append(f"{md.relative_to(ROOT)}: dead link -> {target}")
+    return dead
+
+
+def main(argv: list[str]) -> int:
+    roots = [Path(a) for a in argv] if argv else \
+        [ROOT / "README.md", ROOT / "docs"]
+    files: list[Path] = []
+    for r in roots:
+        if r.is_dir():
+            files.extend(sorted(r.rglob("*.md")))
+        elif r.exists():
+            files.append(r)
+        else:
+            print(f"missing input {r}", file=sys.stderr)
+            return 1
+    dead = [d for f in files for d in check_file(f)]
+    for d in dead:
+        print(d, file=sys.stderr)
+    print(f"# checked {len(files)} file(s): "
+          + ("all links resolve" if not dead else f"{len(dead)} dead"))
+    return 1 if dead else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
