@@ -46,8 +46,29 @@ def is_higher_better(name: str) -> bool:
 
 
 def _load(path: str) -> dict[str, float]:
+    """Load one BENCH file, keeping only gateable numeric metrics.
+
+    ``--profile`` runs embed non-scalar rows (the ``_metrics`` telemetry
+    blob); a rebaselined file may therefore carry them too. Those are
+    warned about and skipped on both sides — never a format crash, never
+    a spurious violation; only real metric regressions exit nonzero.
+    """
     with open(path) as f:
-        return json.load(f)
+        raw = json.load(f)
+    out: dict[str, float] = {}
+    skipped: list[str] = []
+    for name, val in raw.items():
+        if name.startswith("_") or isinstance(val, bool) \
+                or not isinstance(val, (int, float)):
+            skipped.append(name)
+            continue
+        out[name] = float(val)
+    if skipped:
+        print(f"# {os.path.basename(path)}: skipping "
+              f"{len(skipped)} non-metric entr(y/ies): "
+              + ", ".join(skipped[:8])
+              + (" ..." if len(skipped) > 8 else ""))
+    return out
 
 
 def _suite_of(path: str) -> str | None:

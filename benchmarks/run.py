@@ -64,7 +64,18 @@ def main() -> None:
                          " into DIR (default: current directory)")
     ap.add_argument("--seed", type=int, default=0,
                     help="base RNG seed, forwarded to suites that take one")
+    ap.add_argument("--profile", action="store_true",
+                    help="attach the CREAM-Scope telemetry plane: embed a "
+                         "metrics snapshot (_metrics) into each "
+                         "BENCH_<suite>.json and write TRACE_<suite>.json "
+                         "(Perfetto) + METRICS_<suite>.prom next to them")
     args = ap.parse_args()
+    if args.profile:
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import slo as obs_slo
+        from repro.obs import tracing as obs_tracing
+        obs_metrics.enable()
+        obs_tracing.enable()
     if args.only:
         wanted = set(args.only.split(","))
         unknown = wanted - {s for s, _ in suites}
@@ -80,6 +91,12 @@ def main() -> None:
         suite_ok = True
         kwargs = {"seed": args.seed} \
             if "seed" in inspect.signature(fn).parameters else {}
+        if args.profile:
+            # fresh telemetry per suite: each BENCH json's _metrics blob and
+            # TRACE file describe that suite alone
+            obs_metrics.reset()
+            obs_tracing.reset()
+            obs_slo.TRACKER.reset()
         try:
             for name, val, derived in fn(**kwargs):
                 print(f"{name},{val:.3f},{derived}", flush=True)
@@ -89,6 +106,16 @@ def main() -> None:
             suite_ok = False
             print(f"{suite},nan,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+        if args.profile:
+            outdir = args.json if args.json is not None else "."
+            os.makedirs(outdir, exist_ok=True)
+            results["_metrics"] = obs_metrics.collect()
+            obs_tracing.export(os.path.join(outdir, f"TRACE_{suite}.json"))
+            with open(os.path.join(outdir, f"METRICS_{suite}.prom"),
+                      "w") as f:
+                f.write(obs_metrics.snapshot())
+            print(f"# wrote TRACE_{suite}.json, METRICS_{suite}.prom",
+                  flush=True)
         if args.json is not None:
             # flush per suite, immediately: a crash in a later suite (or in
             # this one) must never discard trajectory already earned

@@ -47,7 +47,12 @@ class ErrorMonitor:
         self._health: dict[str, RegionHealth] = {}
 
     def record(self, region: str, stats: ScrubStats) -> None:
-        h = self._health.setdefault(region, RegionHealth())
+        h = self._health.get(region)
+        if h is None:
+            # size the rate history from the configured window (a fixed
+            # maxlen would silently truncate estimates for window > 64)
+            h = RegionHealth(rates=deque(maxlen=max(1, self.config.window)))
+            self._health[region] = h
         h.rates.append(stats.error_rate)
         h.uncorrectable_seen += stats.detected_uncorrectable + \
             stats.parity_corrupt_lines
@@ -55,6 +60,39 @@ class ErrorMonitor:
             h.quiet_windows += 1
         else:
             h.quiet_windows = 0
+        self._emit(region, stats, h)
+
+    def _emit(self, region: str, stats: ScrubStats,
+              h: RegionHealth) -> None:
+        """Feed the telemetry plane: SLO tracker always, metrics when on."""
+        from repro.obs import metrics, slo
+        slo.TRACKER.record_scrub(region, stats)
+        if not metrics.enabled():
+            return
+        metrics.counter(metrics.NAME_SCRUB_SWEEPS,
+                        "scrub sweeps recorded per region",
+                        labels=("region",)).labels(region=region).inc()
+        metrics.counter(metrics.NAME_SCRUB_BEATS,
+                        "beats + parity lines checked by scrub",
+                        labels=("region",)).labels(region=region).inc(
+            stats.beats_checked + stats.parity_lines_checked)
+        c = metrics.counter(metrics.NAME_SCRUB_CORRECTED,
+                            "errors repaired in place by scrub",
+                            labels=("region", "kind"))
+        if stats.corrected_data:
+            c.labels(region=region, kind="data").inc(stats.corrected_data)
+        if stats.corrected_code:
+            c.labels(region=region, kind="code").inc(stats.corrected_code)
+        if stats.detected_uncorrectable or stats.parity_corrupt_lines:
+            metrics.counter(
+                metrics.NAME_SCRUB_UNCORRECTABLE,
+                "detected-uncorrectable beats + corrupt parity lines",
+                labels=("region",)).labels(region=region).inc(
+                stats.detected_uncorrectable + stats.parity_corrupt_lines)
+        metrics.gauge(metrics.NAME_REGION_ERROR_RATE,
+                      "windowed error-rate estimate per region",
+                      labels=("region",)).labels(region=region).set(
+            h.rate(self.config.window))
 
     def rate(self, region: str) -> float:
         h = self._health.get(region)

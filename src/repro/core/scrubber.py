@@ -65,6 +65,14 @@ def scrub(state: PoolState, use_kernel: bool = False
     are checked (detection only) and reported via ``corrupt_rows`` so the
     owner can restore them from a checkpoint (targeted recovery, DESIGN §2.4).
     """
+    from repro.obs import tracing
+    with tracing.span("scrub.sweep", rows=state.num_rows,
+                      boundary=state.boundary, layout=state.layout.value):
+        return _scrub_impl(state, use_kernel)
+
+
+def _scrub_impl(state: PoolState, use_kernel: bool
+                ) -> tuple[PoolState, ScrubStats]:
     storage = state.storage
     B, R = state.boundary, state.num_rows
     kw: dict = {}

@@ -52,6 +52,8 @@ from repro.kernels.hash import ops as hash_ops
 from repro.objcache import hash_index as hix
 from repro.objcache.hash_index import HashIndex
 from repro.objcache.slab import SlabAllocator
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from repro.vm.address_space import VirtualMemory
 
 
@@ -296,11 +298,25 @@ class ObjCache:
         # keep the LAST occurrence of each duplicated key
         _, ridx = np.unique(keys[::-1], return_index=True)
         take = np.sort(n - 1 - ridx)
-        ok_u = self._set_unique(keys[take], values[take], lens[take],
-                                reliability)
+        before = (self.stats.sets, self.stats.rejected, self.stats.evictions)
+        with obs_tracing.span("objcache.set", n=n,
+                              cls=reliability.value):
+            ok_u = self._set_unique(keys[take], values[take], lens[take],
+                                    reliability)
         order = np.argsort(keys[take], kind="stable")
         stored = ok_u[order][np.searchsorted(keys[take][order], keys)]
         self.stats.set_s += time.perf_counter() - t0
+        if obs_metrics.enabled():
+            c = obs_metrics.counter(
+                obs_metrics.NAME_OBJCACHE_OPS,
+                "object-cache operations by outcome", labels=("op",))
+            for op, delta in zip(
+                    ("set", "rejected", "evicted"),
+                    (self.stats.sets - before[0],
+                     self.stats.rejected - before[1],
+                     self.stats.evictions - before[2])):
+                if delta:
+                    c.labels(op=op).inc(delta)
         return stored
 
     def _set_unique(self, keys: np.ndarray, values: np.ndarray,
@@ -398,9 +414,10 @@ class ObjCache:
             return (np.zeros((0, self.max_value_words), np.uint32),
                     np.zeros(0, np.int32), np.zeros(0, bool))
         qdev = jnp.asarray(keys.astype(np.uint32))
-        vals_d, lens_d, slot_d, found_d = _get_batch(
-            self.pool, self.index, qdev, self.max_value_words,
-            self.use_kernel)
+        with obs_tracing.span("objcache.get", n=n):
+            vals_d, lens_d, slot_d, found_d = _get_batch(
+                self.pool, self.index, qdev, self.max_value_words,
+                self.use_kernel)
         vals = np.array(vals_d, np.uint32)     # writable: host patch below
         lens, slot, found = jax.device_get((lens_d, slot_d, found_d))
         hs = slot[found]
@@ -428,6 +445,15 @@ class ObjCache:
         self.stats.hits += int(found.sum())
         self.stats.misses += n - int(found.sum())
         self.stats.get_s += time.perf_counter() - t0
+        if obs_metrics.enabled():
+            c = obs_metrics.counter(
+                obs_metrics.NAME_OBJCACHE_OPS,
+                "object-cache operations by outcome", labels=("op",))
+            c.labels(op="get").inc(n)
+            if found.any():
+                c.labels(op="hit").inc(int(found.sum()))
+            if n - int(found.sum()):
+                c.labels(op="miss").inc(n - int(found.sum()))
         return vals, lens.astype(np.int32), found
 
     # -- delete --------------------------------------------------------------

@@ -1,0 +1,27 @@
+"""CREAM-Scope — the unified telemetry plane.
+
+Three cooperating pieces, all host-side control plane (nothing here ever
+runs inside jit; device-side accumulators are tiny status arrays produced
+by the existing fused reads and *folded* into the registry between steps):
+
+  * :mod:`repro.obs.metrics` — a process-global registry of counters /
+    gauges / histograms with labelled series (pool, reliability class,
+    tier, region), a Prometheus-style text exposition, and fold helpers
+    for device-side status accumulators;
+  * :mod:`repro.obs.tracing` — nestable spans with a Perfetto /
+    chrome-tracing JSON exporter, instrumenting the named hot paths
+    (``Engine.step`` gather/compute/scatter, the shard router dispatch
+    and ``ppermute`` migration ring, ``repartition_with_migration``,
+    scrub sweeps, objcache batched get/set);
+  * :mod:`repro.obs.slo` + :mod:`repro.obs.dashboard` — per-reliability-
+    class SLO tracking (uncorrectable reads on SECDED frames must be 0;
+    capacity reclaimed rides the boundary register) and a terminal
+    snapshot dashboard (``tools/creamtop.py``).
+
+Everything is opt-in: with both planes disabled (the default) every
+instrumentation site reduces to one boolean check, so the hot paths stay
+one-gather/one-scatter with no extra dispatches.
+"""
+from repro.obs import dashboard, metrics, slo, tracing
+
+__all__ = ["metrics", "tracing", "slo", "dashboard"]

@@ -1,0 +1,107 @@
+"""Terminal snapshot dashboard over the metrics registry + SLO tracker.
+
+Renders a fixed-width text report — the same thing ``tools/creamtop.py``
+prints — either live (from the process-global registry/tracker) or from a
+previously collected snapshot dict (e.g. the ``_metrics`` blob
+``benchmarks/run.py --profile`` embeds into ``BENCH_<suite>.json``).
+"""
+from __future__ import annotations
+
+from repro.obs import metrics as _metrics
+from repro.obs import slo as _slo
+
+_W = 78
+
+
+def _rule(ch: str = "-") -> str:
+    return ch * _W
+
+
+def _fmt_labels(labels: dict) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(labels.items())) or "-"
+
+
+def _counter_rows(snap: dict, name: str) -> list[tuple[str, float]]:
+    m = snap.get(name)
+    if not m:
+        return []
+    return [(_fmt_labels(r["labels"]), r.get("value", 0.0))
+            for r in m["series"]]
+
+
+def render_slo(statuses: list[_slo.SLOStatus]) -> str:
+    lines = [_rule("="), "SLO".center(_W), _rule("=")]
+    lines.append(f"{'scope':<22}{'objective':<30}{'value':>12}  state")
+    lines.append(_rule())
+    for s in statuses:
+        state = "OK " if s.ok else "BREACH"
+        lines.append(f"{s.scope:<22}{s.objective:<30}{s.value:>12.4g}  "
+                     f"{state}  {s.detail}")
+    if not statuses:
+        lines.append("(no objectives recorded)")
+    return "\n".join(lines)
+
+
+def render_metrics(snap: dict) -> str:
+    lines = [_rule("="), "METRICS".center(_W), _rule("=")]
+    interesting = (
+        ("capacity", (_metrics.NAME_CAPACITY_PAGES,
+                      _metrics.NAME_CAPACITY_RECLAIMED)),
+        ("reliability", (_metrics.NAME_READ_STATUS,
+                         _metrics.NAME_SCRUB_CORRECTED,
+                         _metrics.NAME_SCRUB_UNCORRECTABLE,
+                         _metrics.NAME_SCRUB_SWEEPS)),
+        ("data plane", (_metrics.NAME_VM_READS, _metrics.NAME_VM_WRITES,
+                        _metrics.NAME_PAGES_MIGRATED,
+                        _metrics.NAME_MIGRATION_TO_HOST,
+                        _metrics.NAME_SHARD_DISPATCH,
+                        _metrics.NAME_SHARD_RING_PAGES)),
+        ("serving", (_metrics.NAME_TOKENS_DECODED,
+                     _metrics.NAME_DECODE_STEPS, _metrics.NAME_PREFILLS,
+                     _metrics.NAME_PREEMPTIONS, _metrics.NAME_RESTORES)),
+        ("objcache", (_metrics.NAME_OBJCACHE_OPS,)),
+    )
+    shown: set[str] = set()
+    for section, names in interesting:
+        rows = []
+        for name in names:
+            shown.add(name)
+            for lab, val in _counter_rows(snap, name):
+                rows.append((f"{name}{{{lab}}}" if lab != "-" else name, val))
+        if not rows:
+            continue
+        lines.append(f"[{section}]")
+        for label, val in rows:
+            lines.append(f"  {label:<62}{val:>14g}")
+    other = sorted(set(snap) - shown)
+    leftovers = []
+    for name in other:
+        if snap[name]["kind"] == "histogram":
+            for r in snap[name]["series"]:
+                c, s = r.get("count", 0), r.get("sum", 0.0)
+                if c:
+                    leftovers.append(
+                        (f"{name}{{{_fmt_labels(r['labels'])}}}",
+                         f"n={c} mean={s / c:.1f}us"))
+        else:
+            for lab, val in _counter_rows(snap, name):
+                leftovers.append(
+                    (f"{name}{{{lab}}}" if lab != "-" else name, f"{val:g}"))
+    if leftovers:
+        lines.append("[other]")
+        for label, val in leftovers:
+            lines.append(f"  {label:<58}{val:>18}")
+    return "\n".join(lines)
+
+
+def render(snap: dict | None = None,
+           statuses: list[_slo.SLOStatus] | None = None) -> str:
+    """The full dashboard: SLO verdicts on top, metric sections below.
+
+    With no arguments, reads the live process-global registry and tracker.
+    """
+    if snap is None:
+        snap = _metrics.collect()
+    if statuses is None:
+        statuses = _slo.TRACKER.report()
+    return render_slo(statuses) + "\n\n" + render_metrics(snap) + "\n"

@@ -30,6 +30,7 @@ sequences are live.
 """
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
@@ -37,11 +38,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import pool as pool_lib
+from repro.core import secded
 from repro.core.layouts import Layout
 from repro.core.pool import PoolState
 from repro.kernels.mixed import ops as mixed_ops
 from repro.models import build_model
 from repro.models import transformer
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from repro.serve.paged_kv import PagedKV, token_words_for
 from repro.serve.scheduler import Scheduler, ServeRequest
 from repro.vm.address_space import VirtualMemory
@@ -52,6 +57,48 @@ Request = ServeRequest
 
 def _percentile(xs: list[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def _cream_cls_index(layout: Layout) -> int:
+    """Index into :data:`repro.obs.metrics.FOLD_CLASSES` for CREAM pages."""
+    if layout == Layout.BASELINE_ECC:
+        return 0
+    return 1 if layout == Layout.PARITY else 2
+
+
+def _status_counts(pages: jax.Array, status: jax.Array, boundary: int,
+                   num_rows: int, cream_idx: int) -> jax.Array:
+    """Per-class (corrected, uncorrectable) counts — the device-side
+    accumulator the registry folds between steps. Shape (3, 2) int32,
+    rows indexed by ``FOLD_CLASSES``."""
+    is_sec = (pages >= boundary) & (pages < num_rows)
+    cls = jnp.where(is_sec, 0, cream_idx)
+    corrected = ((status == secded.CORRECTED_DATA)
+                 | (status == secded.CORRECTED_CODE)).astype(jnp.int32)
+    unc = (status == secded.DETECTED_UNCORRECTABLE).astype(jnp.int32)
+    counts = jnp.zeros((3, 2), jnp.int32)
+    counts = counts.at[cls, 0].add(corrected)
+    return counts.at[cls, 1].add(unc)
+
+
+@jax.jit
+def _read_correct_counts(state: PoolState, pages: jax.Array
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Metrics-enabled gather for a local pool: the SAME fused mixed-pool
+    read the plain path uses, except the per-page status it already
+    computes is kept and reduced to the (3, 2) class-count matrix inside
+    the same compiled program — still one gather dispatch per step."""
+    data, status = pool_lib.read_pages_any_status(state, pages)
+    counts = _status_counts(pages, status, state.boundary, state.num_rows,
+                            _cream_cls_index(state.layout))
+    return data, counts
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("boundary", "num_rows", "cream_idx"))
+def _counts_only(pages: jax.Array, status: jax.Array, boundary: int,
+                 num_rows: int, cream_idx: int) -> jax.Array:
+    return _status_counts(pages, status, boundary, num_rows, cream_idx)
 
 
 class Engine:
@@ -112,6 +159,24 @@ class Engine:
             mixed_ops.read_correct,
             static_argnames=("layout", "num_rows", "boundary",
                              "use_kernel"))
+        if obs_metrics.enabled():
+            # pre-create the acceptance-critical series at zero so every
+            # snapshot carries the full per-class matrix, errors or not
+            obs_metrics.touch_read_status()
+            mig = obs_metrics.counter(
+                obs_metrics.NAME_PAGES_MIGRATED,
+                "pages relocated by the migration engine", labels=("cls",))
+            for cls in obs_metrics.FOLD_CLASSES:
+                mig.labels(cls=cls)
+            obs_metrics.counter(
+                obs_metrics.NAME_DECODE_STEPS,
+                "batched decode steps executed")
+            obs_metrics.counter(
+                obs_metrics.NAME_TOKENS_DECODED,
+                "tokens decoded, by request tier", labels=("tier",))
+            obs_metrics.counter(
+                obs_metrics.NAME_PREFILLS, "prompt prefills executed")
+        obs_metrics.record_pool_capacity(pool, self.pool)
 
     # -- geometry shorthands -------------------------------------------------
     @property
@@ -194,6 +259,21 @@ class Engine:
                                     boundary=pool.boundary)
         return pool.read_pages(phys)
 
+    def _gather_pages_counts(self, phys: np.ndarray
+                             ) -> tuple[jax.Array, jax.Array]:
+        """Metrics-enabled gather: same dispatch shape, plus the (3, 2)
+        per-class status-count matrix carried out of jit for the registry
+        fold (see :func:`repro.obs.metrics.fold_read_status`)."""
+        pool = self.pool
+        pages = jnp.asarray(phys, jnp.int32)
+        if isinstance(pool, PoolState):
+            return _read_correct_counts(pool, pages)
+        data, status = pool.read_pages_status(phys)
+        counts = _counts_only(pages, status, boundary=pool.boundary,
+                              num_rows=pool.num_rows,
+                              cream_idx=_cream_cls_index(pool.layout))
+        return data, counts
+
     # -- request intake ------------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
         self.sched.submit(req)
@@ -206,6 +286,14 @@ class Engine:
 
     # -- the serving loop ------------------------------------------------------
     def _do_prefill(self, slot: int, req: ServeRequest, sess) -> None:
+        with obs_tracing.span("engine.prefill", slot=slot,
+                              prompt=len(req.prompt), tier=req.tier):
+            self._do_prefill_impl(slot, req, sess)
+        if obs_metrics.enabled():
+            obs_metrics.counter(obs_metrics.NAME_PREFILLS,
+                                "prompt prefills executed").inc()
+
+    def _do_prefill_impl(self, slot: int, req: ServeRequest, sess) -> None:
         toks = jnp.asarray(np.asarray(req.prompt)[None, :], jnp.int32)
         logits, state = self._prefill(self.params, toks)
         apos = transformer.attn_pattern_positions(self.cfg)
@@ -238,17 +326,33 @@ class Engine:
             return []
         lens = np.where(active, self._lens, 0).astype(np.int32)
         toks = np.where(active, self._toks, 0).astype(np.int32)
-        phys = self.kv.gather_phys(rows)                    # (B, L, maxB)
-        pages = self._gather_pages(phys.reshape(-1))        # ONE gather
-        _, nxt, cur_pages = self._attend(self.params, pages,
-                                         jnp.asarray(lens),
-                                         jnp.asarray(toks))
-        cur_ids = self.kv.current_block_phys(rows, lens)    # (B, L)
-        self.vm.pools[self.pool_name] = self.pool.write_pages(
-            cur_ids.reshape(-1), cur_pages)                 # ONE scatter
+        with obs_tracing.span("serve.router.dispatch",
+                              slots=int(active.sum())):
+            phys = self.kv.gather_phys(rows)                # (B, L, maxB)
+        counts = None
+        with obs_tracing.blocked_span("engine.step.gather",
+                                      pages=int(phys.size)) as hold:
+            if obs_metrics.enabled():
+                pages, counts = self._gather_pages_counts(phys.reshape(-1))
+            else:
+                pages = self._gather_pages(phys.reshape(-1))  # ONE gather
+            hold(pages)
+        with obs_tracing.blocked_span("engine.step.compute") as hold:
+            _, nxt, cur_pages = self._attend(self.params, pages,
+                                             jnp.asarray(lens),
+                                             jnp.asarray(toks))
+            hold(nxt)
+        with obs_tracing.blocked_span("engine.step.scatter") as hold:
+            cur_ids = self.kv.current_block_phys(rows, lens)  # (B, L)
+            self.vm.pools[self.pool_name] = self.pool.write_pages(
+                cur_ids.reshape(-1), cur_pages)             # ONE scatter
+            hold(self.pool.storage)
         nxt = np.asarray(nxt)
         self.steps += 1
+        if counts is not None:
+            obs_metrics.fold_read_status(counts)
         finished = []
+        tokens_by_tier: dict[str, int] = {}
         for slot in np.flatnonzero(active):
             sess = self.sched.slots[slot]
             sess.cache_len += 1
@@ -256,8 +360,18 @@ class Engine:
             sess.req.generated.append(sess.last_tok)
             self._lens[slot] = sess.cache_len
             self._toks[slot] = sess.last_tok
+            tier = sess.req.tier
+            tokens_by_tier[tier] = tokens_by_tier.get(tier, 0) + 1
             if len(sess.req.generated) >= sess.req.max_new:
                 finished.append(self.sched.finish(slot))
+        if obs_metrics.enabled():
+            obs_metrics.counter(obs_metrics.NAME_DECODE_STEPS,
+                                "batched decode steps executed").inc()
+            tok = obs_metrics.counter(
+                obs_metrics.NAME_TOKENS_DECODED,
+                "tokens decoded, by request tier", labels=("tier",))
+            for tier, n in tokens_by_tier.items():
+                tok.labels(tier=tier).inc(n)
         return finished
 
     def poll(self) -> list[ServeRequest]:

@@ -57,7 +57,19 @@ except ImportError:
 from repro.core import pool as pool_lib
 from repro.core.layouts import (GROUP_ROWS, LANES, Layout, extra_page_count)
 from repro.core.pool import PoolState
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from repro.shard import router
+
+
+def _note_dispatch(op: str, pages: int) -> None:
+    """Count one routed host-side dispatch through the shard data plane."""
+    if not obs_metrics.enabled():
+        return
+    obs_metrics.counter(
+        obs_metrics.NAME_SHARD_DISPATCH,
+        "routed dispatches through the sharded data plane",
+        labels=("op",)).labels(op=op).inc()
 
 
 @jax.tree_util.register_dataclass
@@ -143,15 +155,25 @@ class ShardedPool:
         return write_any(self, pages, data)
 
     def read_pages(self, pages) -> jax.Array:
-        return _read_any_jitted(self, pool_lib._as_page_array(self, pages))
+        arr = pool_lib._as_page_array(self, pages)
+        _note_dispatch("read", arr.shape[0])
+        with obs_tracing.span("shard.router.dispatch", op="read",
+                              pages=arr.shape[0], shards=self.num_shards):
+            return _read_any_jitted(self, arr)
 
     def read_pages_status(self, pages) -> tuple[jax.Array, jax.Array]:
-        return _read_any_status_jitted(
-            self, pool_lib._as_page_array(self, pages))
+        arr = pool_lib._as_page_array(self, pages)
+        _note_dispatch("read_status", arr.shape[0])
+        with obs_tracing.span("shard.router.dispatch", op="read_status",
+                              pages=arr.shape[0], shards=self.num_shards):
+            return _read_any_status_jitted(self, arr)
 
     def write_pages(self, pages, data: jax.Array) -> "ShardedPool":
-        return _write_any_jitted(
-            self, pool_lib._as_page_array(self, pages), data)
+        arr = pool_lib._as_page_array(self, pages)
+        _note_dispatch("write", arr.shape[0])
+        with obs_tracing.span("shard.router.dispatch", op="write",
+                              pages=arr.shape[0], shards=self.num_shards):
+            return _write_any_jitted(self, arr, data)
 
     def evict_prediction(self, new_boundary: int) -> list[int]:
         return evicted_extra_pages(self, new_boundary)
@@ -398,7 +420,14 @@ def migrate_pages(state: ShardedPool, src_pages, dst_pages,
     src = pool_lib._as_page_array(state, src_pages)
     dst = pool_lib._as_page_array(state, dst_pages)
     fn = _migrate_jitted if donate else _migrate_jitted_nodonate
-    return fn(state, src, dst)
+    if obs_metrics.enabled():
+        obs_metrics.counter(
+            obs_metrics.NAME_SHARD_RING_PAGES,
+            "pages exchanged over the ppermute migration ring"
+        ).inc(int(src.shape[0]))
+    with obs_tracing.span("shard.migrate.ring", pages=int(src.shape[0]),
+                          shards=state.num_shards):
+        return fn(state, src, dst)
 
 
 # ---------------------------------------------------------------------------
@@ -445,9 +474,12 @@ def repartition(state: ShardedPool, new_boundary: int
         new_st, _ = pool_lib.repartition(_local_state(state, block), nb_local)
         return new_st.storage[None]
 
-    storage = jax.jit(shard_map(
-        body, mesh=state.mesh, in_specs=P("banks"),
-        out_specs=P("banks")))(state.storage)
+    with obs_tracing.span("shard.repartition", old_boundary=old,
+                          new_boundary=new_boundary,
+                          shards=state.num_shards):
+        storage = jax.jit(shard_map(
+            body, mesh=state.mesh, in_specs=P("banks"),
+            out_specs=P("banks")))(state.storage)
     return dataclasses.replace(state, storage=storage,
                                boundary_local=nb_local), info
 

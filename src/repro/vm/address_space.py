@@ -40,6 +40,8 @@ import numpy as np
 from repro.core.layouts import DEFAULT_ROW_WORDS, Layout
 from repro.core.pool import PoolLike, make_pool
 from repro.core.protection import _ORDER, Protection
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 
 
 def cream_protection(layout: Layout) -> Protection:
@@ -213,6 +215,7 @@ class VirtualMemory:
                               row_words=self.row_words)
         self.pools[name] = state
         self.allocators[name] = FrameAllocator(state)
+        obs_metrics.record_pool_capacity(name, state)
         return state
 
     def adopt_pool(self, name: str, state: PoolLike) -> None:
@@ -221,6 +224,7 @@ class VirtualMemory:
             raise ValueError("row_words mismatch")
         self.pools[name] = state
         self.allocators[name] = FrameAllocator(state)
+        obs_metrics.record_pool_capacity(name, state)
 
     def create_tenant(self, name: str,
                       default_reliability: Protection = Protection.NONE,
@@ -381,9 +385,20 @@ class VirtualMemory:
             idx = jnp.asarray([i for i, _ in items], jnp.int32)
             # page ids stay host-side: the engine wrapper validates and
             # uploads them once (no device round-trip before dispatch)
-            self.pools[pool_name] = self.pools[pool_name].write_pages(
-                [p for _, p in items], data[idx])
+            with obs_tracing.span("vm.write", pool=pool_name,
+                                  pages=len(items)):
+                self.pools[pool_name] = self.pools[pool_name].write_pages(
+                    [p for _, p in items], data[idx])
             self.stats.device_writes += len(items)
+        if obs_metrics.enabled():
+            device_n = sum(len(items) for items in by_pool.values())
+            c = obs_metrics.counter(
+                obs_metrics.NAME_VM_WRITES,
+                "pages written through the VM data plane", labels=("tier",))
+            if device_n:
+                c.labels(tier="device").inc(device_n)
+            if len(vpns) - device_n:
+                c.labels(tier="host").inc(len(vpns) - device_n)
 
     def read(self, tenant: str, vpns) -> jax.Array:
         """Read ``(n, page_words)`` uint32 through the page tables.
@@ -412,9 +427,21 @@ class VirtualMemory:
                 jnp.asarray(blob))
         for pool_name, items in by_pool.items():
             idx = jnp.asarray([i for i, _ in items], jnp.int32)
-            data = self.pools[pool_name].read_pages([p for _, p in items])
+            with obs_tracing.span("vm.read", pool=pool_name,
+                                  pages=len(items)):
+                data = self.pools[pool_name].read_pages([p for _, p in items])
             out = out.at[idx].set(data)
             self.stats.device_reads += len(items)
+        if obs_metrics.enabled():
+            device_n = sum(len(items) for items in by_pool.values())
+            c = obs_metrics.counter(
+                obs_metrics.NAME_VM_READS,
+                "pages read through the VM data plane (host = faults)",
+                labels=("tier",))
+            if device_n:
+                c.labels(tier="device").inc(device_n)
+            if host_items:
+                c.labels(tier="host").inc(len(host_items))
         return out
 
     # -- swap tier -----------------------------------------------------------

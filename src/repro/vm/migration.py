@@ -37,6 +37,8 @@ from repro.core.layouts import CODE_LANE, DATA_LANES, Layout
 from repro.core.pool import PoolState
 from repro.core.protection import at_least
 from repro.kernels.migrate import ops as migrate_ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from repro.vm.address_space import PTE, VirtualMemory, cream_protection
 
 
@@ -130,6 +132,7 @@ class MigrationEngine:
         number of groups, not pages.
         """
         vm = self.vm
+        _host_before_place = self.stats.to_host
         by_pool: dict[str, list[tuple[int, int]]] = {}
         host = None                   # D2H copy made lazily, on first overflow
         groups: dict[tuple[str | None, object], list[int]] = {}
@@ -168,12 +171,35 @@ class MigrationEngine:
                                data[idx], sub_codes)
         self.stats.pages_moved += len(victims)
         self.stats.bytes_moved += len(victims) * vm.page_bytes
+        if obs_metrics.enabled():
+            c = obs_metrics.counter(
+                obs_metrics.NAME_PAGES_MIGRATED,
+                "pages relocated by the migration engine",
+                labels=("cls",))
+            per_cls: dict[str, int] = {}
+            for _, _, pte in victims:
+                key = pte.reliability.value
+                per_cls[key] = per_cls.get(key, 0) + 1
+            for cls, n in per_cls.items():
+                c.labels(cls=cls).inc(n)
+            overflow = self.stats.to_host - _host_before_place
+            if overflow:
+                obs_metrics.counter(
+                    obs_metrics.NAME_MIGRATION_TO_HOST,
+                    "migrated pages that overflowed to the host swap tier"
+                ).labels().inc(overflow)
 
     # -- ad-hoc migration ----------------------------------------------------
     def relocate(self, tenant: str, vpns, avoid_pool: str | None = None
                  ) -> int:
         """Move pages off their current frames (e.g. away from a weakening
         pool), preferring other pools; host swap on overflow."""
+        vpns = list(vpns)
+        with obs_tracing.span("vm.migration.relocate", tenant=tenant,
+                              pages=len(vpns)):
+            return self._relocate(tenant, vpns, avoid_pool)
+
+    def _relocate(self, tenant: str, vpns, avoid_pool: str | None) -> int:
         vm = self.vm
         t0 = time.perf_counter()
         space = vm.tenants[tenant]
@@ -229,6 +255,14 @@ class MigrationEngine:
         state = vm.pools[pool_name]
         alloc = vm.allocators[pool_name]
         old = state.boundary
+        with obs_tracing.span("vm.migration.repartition", pool=pool_name,
+                              old_boundary=old, new_boundary=new_boundary):
+            return self._repartition(pool_name, new_boundary, state, alloc,
+                                     old)
+
+    def _repartition(self, pool_name: str, new_boundary: int, state, alloc,
+                     old: int) -> dict:
+        vm = self.vm
         # validate before touching any mapping: a bad boundary must not
         # leave half-unmapped victims behind (sharded pools move their
         # boundary in shard lockstep, so their step is S * GROUP_ROWS)
@@ -293,4 +327,5 @@ class MigrationEngine:
         info["to_host"] = self.stats.to_host - host_before
         self.stats.transactions += 1
         self.stats.seconds += time.perf_counter() - t0
+        obs_metrics.record_pool_capacity(pool_name, vm.pools[pool_name])
         return info

@@ -1,0 +1,100 @@
+"""Regression-gate robustness: non-metric rows must never crash the gate."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+from benchmarks import check_regression as cr  # noqa: E402
+
+
+def _write(dirpath, suite, payload):
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, f"BENCH_{suite}.json"), "w") as f:
+        json.dump(payload, f)
+
+
+def test_load_filters_non_numeric_and_private(tmp_path, capsys):
+    p = tmp_path / "BENCH_x.json"
+    p.write_text(json.dumps({
+        "a_us": 1.5,
+        "b_count": 3,
+        "_metrics": {"cream_reads": {"series": []}},
+        "note": "a string",
+        "flag": True,
+    }))
+    out = cr._load(str(p))
+    assert out == {"a_us": 1.5, "b_count": 3.0}
+    assert "skipping" in capsys.readouterr().out
+
+
+def test_profile_blob_does_not_trip_gate(tmp_path):
+    """Fresh files from a --profile run carry _metrics; the gate must pass
+    when the actual numbers are fine."""
+    base, fresh = str(tmp_path / "base"), str(tmp_path / "fresh")
+    _write(base, "serving", {"serving_us": 10.0})
+    _write(fresh, "serving", {"serving_us": 10.5,
+                              "_metrics": {"cream_x": {"series": []}}})
+    assert cr.check(base, fresh, tolerance=1.5) == []
+
+
+def test_rebaselined_blob_on_baseline_side(tmp_path):
+    """Even a baseline accidentally rebaselined WITH the blob compares
+    cleanly — warn + skip, not a crash or false violation."""
+    base, fresh = str(tmp_path / "base"), str(tmp_path / "fresh")
+    _write(base, "vm", {"vm_us": 5.0, "_metrics": {"n": 1}})
+    _write(fresh, "vm", {"vm_us": 5.0})
+    assert cr.check(base, fresh, tolerance=1.5) == []
+
+
+def test_fresh_only_rows_warn_but_pass(tmp_path, capsys):
+    base, fresh = str(tmp_path / "base"), str(tmp_path / "fresh")
+    _write(base, "vm", {"vm_us": 5.0})
+    _write(fresh, "vm", {"vm_us": 5.0, "vm_new_metric": 1.0})
+    assert cr.check(base, fresh, tolerance=1.5) == []
+    assert "unbaselined" in capsys.readouterr().out
+
+
+def test_real_regression_still_fails(tmp_path):
+    base, fresh = str(tmp_path / "base"), str(tmp_path / "fresh")
+    _write(base, "vm", {"vm_us": 5.0})
+    _write(fresh, "vm", {"vm_us": 50.0,
+                         "_metrics": {"cream_x": {"series": []}}})
+    violations = cr.check(base, fresh, tolerance=1.5)
+    assert len(violations) == 1 and "vm_us" in violations[0]
+
+
+def test_missing_baselined_metric_still_fails(tmp_path):
+    base, fresh = str(tmp_path / "base"), str(tmp_path / "fresh")
+    _write(base, "vm", {"vm_us": 5.0, "vm_gone_us": 2.0})
+    _write(fresh, "vm", {"vm_us": 5.0})
+    violations = cr.check(base, fresh, tolerance=1.5)
+    assert len(violations) == 1 and "disappeared" in violations[0]
+
+
+def test_update_strips_blob(tmp_path):
+    base, fresh = str(tmp_path / "base"), str(tmp_path / "fresh")
+    _write(fresh, "vm", {"vm_us": 5.0, "_metrics": {"n": 1}})
+    cr.update(base, fresh)
+    rebased = json.load(open(os.path.join(base, "BENCH_vm.json")))
+    assert rebased == {"vm_us": 5.0}
+
+
+def test_higher_is_better_direction(tmp_path):
+    base, fresh = str(tmp_path / "base"), str(tmp_path / "fresh")
+    _write(base, "serving", {"serving_x_tokens_per_s": 100.0})
+    _write(fresh, "serving", {"serving_x_tokens_per_s": 10.0})
+    violations = cr.check(base, fresh, tolerance=1.5)
+    assert len(violations) == 1
+
+
+@pytest.mark.parametrize("name,expected", [
+    ("serving_zipf_cream_speedup", True),
+    ("vm_reclaim_capacity", True),
+    ("kernel_mixed_us", False),
+])
+def test_is_higher_better(name, expected):
+    assert cr.is_higher_better(name) is expected

@@ -1,0 +1,88 @@
+"""creamtop — the CREAM-Scope terminal dashboard.
+
+Renders the SLO verdicts + metric sections from one of three sources:
+
+  * ``--bench BENCH_<suite>.json`` — the ``_metrics`` blob a
+    ``benchmarks/run.py --profile`` run embedded into the suite file;
+  * ``--snapshot metrics.json`` — a raw ``repro.obs.metrics.collect()``
+    dump;
+  * ``--demo`` — run a tiny live CREAM-Serve workload under scrubbing
+    with error injection and render the live registry/tracker (the same
+    scenario as ``examples/observe_serving.py``, smaller).
+
+Usage::
+
+    PYTHONPATH=src python tools/creamtop.py --bench BENCH_serving.json
+    PYTHONPATH=src python tools/creamtop.py --demo
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+
+def _demo() -> None:
+    """A tiny live serving run: scrub + injection + dashboard."""
+    import jax
+    import numpy as np
+
+    from repro.core import injection
+    from repro.obs import dashboard, metrics, tracing
+    from repro.serve.engine import Engine, Request
+
+    metrics.enable()
+    tracing.enable()
+    from benchmarks.bench_serving import CFG
+    eng = Engine(CFG, max_batch=4, max_len=32, num_rows=64, secded_rows=16)
+    pool = eng.pool
+    rng = np.random.default_rng(0)
+    storage, _ = injection.inject_flips(pool.storage, rng, n_flips=4,
+                                        row_range=(0, pool.boundary))
+    import dataclasses
+    eng.vm.pools[eng.pool_name] = dataclasses.replace(pool, storage=storage)
+    reqs = [Request(seq_id=i, prompt=list(range(1, 9)), max_new=4,
+                    tier="paid" if i % 2 else "batch") for i in range(6)]
+    eng.serve(reqs)
+    from repro.core.monitor import ErrorMonitor
+    from repro.core.scrubber import scrub
+    mon = ErrorMonitor()
+    new_state, stats = scrub(eng.pool)
+    eng.vm.pools[eng.pool_name] = new_state
+    mon.record(eng.pool_name, stats)
+    jax.block_until_ready(new_state.storage)
+    print(dashboard.render())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--bench", metavar="BENCH_JSON",
+                     help="BENCH_<suite>.json with an embedded _metrics blob")
+    src.add_argument("--snapshot", metavar="METRICS_JSON",
+                     help="a repro.obs.metrics.collect() JSON dump")
+    src.add_argument("--demo", action="store_true",
+                     help="run a tiny live serving demo and render it")
+    args = ap.parse_args()
+    if args.demo:
+        _demo()
+        return
+    from repro.obs import dashboard
+    path = args.bench or args.snapshot
+    with open(path) as f:
+        blob = json.load(f)
+    snap = blob.get("_metrics") if args.bench else blob
+    if not isinstance(snap, dict) or (args.bench and snap is None):
+        raise SystemExit(
+            f"{path}: no _metrics blob (run benchmarks/run.py --profile)")
+    print(dashboard.render(snap=snap, statuses=[]))
+
+
+if __name__ == "__main__":
+    main()
