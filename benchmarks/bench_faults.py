@@ -1,0 +1,235 @@
+"""CREAM-Campaign: live fault injection under load, per class and FIT rate.
+
+The paper's premise — weaker protection is *safe enough* for the right
+data — asserted nowhere else in this repo, measured here: a
+FIT-rate-scaled error process (:mod:`repro.faults.fit`; Schroeder et
+al.'s memcached-fleet 70k FIT/Mbit as the hot anchor) is injected into
+the **live** serving pool while the paged-KV engine decodes, and every
+page read is classified against the ground-truth shadow oracle
+(:mod:`repro.faults.shadow`) as corrected / detected / silently
+corrupted, per reliability class. The closed loop runs too: a batch/NONE
+tenant whose observed error rate crosses its
+:class:`~repro.vm.policy.TenantSLO` is auto-upgraded through the zero-loss
+migration mid-serve, and the time-to-escalation is reported.
+
+Row families (all rates are lower-is-better; see
+``check_regression.LOWER_IS_BETTER``):
+
+  faults_{local,shard}_fit{F}_{cls}_{corrected,detected,silent}_rate
+  faults_{local,shard}_fit{F}_tokens_per_s      serving throughput under fire
+  faults_{local,shard}_fit{F}_escalation_steps  campaign ticks to first
+                                                SLO escalation (= total
+                                                ticks when none fired)
+  faults_objcache_fit{F}_{cls}_value_corrupt_rate   objcache value oracle
+  faults_scrub_{clean,injected}_us              scrub latency impact
+
+The hard invariant — enforced here AND by the CI reliability gate: the
+SECDED class NEVER silently corrupts (Hsiao detects all double-beat
+errors; a detected read is flagged, a silent one is not). Rates are
+deterministic for a fixed seed: the injector is host-side numpy and the
+read schedule is trace-driven, independent of decoded token values.
+
+Env: ``REPRO_FAULTS_ROWS`` (default 64) pool rows, ``REPRO_FAULTS_TURNS``
+(default 24) trace turns, ``REPRO_FAULTS_FLIPS`` (default 6) expected
+error events per campaign tick at the memcached FIT anchor (the
+time-acceleration knob — tiny pools, compressed hours). Committed
+baselines are snapshotted at the CI smoke config (TURNS=16).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.bench_serving import CFG, MAX_LEN, ROW_WORDS, _requests
+from repro.core.injection import FIELD_MIX, FaultModel, inject_flips
+from repro.core.layouts import GROUP_ROWS, Layout
+from repro.core.pool import make_pool
+from repro.core.protection import Protection
+from repro.faults import (CI_SMOKE_FIT, FaultCampaign, MEMCACHED_FIT,
+                          hours_for_expected_flips,
+                          soft_rate_per_gb_per_step)
+from repro.objcache import ObjCache
+from repro.serve import Engine
+from repro.vm.address_space import VirtualMemory
+from repro.vm.policy import TenantSLO, VMPolicy
+
+DEFAULT_ROWS = int(os.environ.get("REPRO_FAULTS_ROWS", "64"))
+DEFAULT_TURNS = int(os.environ.get("REPRO_FAULTS_TURNS", "24"))
+DEFAULT_FLIPS = float(os.environ.get("REPRO_FAULTS_FLIPS", "6"))
+
+N_SESSIONS = 4          # 1 paid (SECDED segment) + 3 batch (NONE segment)
+PAID_FRAC = 0.25
+CLASSES = ("secded", "parity", "none")
+
+
+def _fit_label(fit: float) -> str:
+    return f"fit{int(fit / 1000)}k"
+
+
+def _shards() -> int:
+    """Largest shard count the boundary geometry and devices allow."""
+    for s in (2, 1):
+        if jax.device_count() >= s and DEFAULT_ROWS % (s * GROUP_ROWS) == 0:
+            return s
+    return 1
+
+
+def _campaign_serving(fit: float, shards: int, n_turns: int, seed: int
+                      ) -> tuple[dict, float, int, int]:
+    """One serving run under injection. Returns (census rates, tokens/s,
+    ticks-to-first-escalation, total ticks). ``shards > 0`` forces the
+    CREAM-Shard plane (a 1-device ``banks`` mesh when that's all we have);
+    ``shards == 0`` is the local pool."""
+    num_rows = DEFAULT_ROWS
+    step = max(1, shards) * GROUP_ROWS
+    # 3/4 of rows stay SECDED: room for the paid tier from the start AND
+    # for every batch page the SLO escalation relocates mid-run
+    boundary = (num_rows // 4 // step) * step or step
+    vm = VirtualMemory(row_words=ROW_WORDS)
+    if shards > 0:
+        from repro.launch.mesh import make_banks_mesh
+        vm.add_pool("kv", num_rows, Layout.INTERWRAP, boundary=boundary,
+                    shards=shards, mesh=make_banks_mesh(shards))
+    else:
+        vm.add_pool("kv", num_rows, Layout.INTERWRAP, boundary=boundary)
+    eng = Engine(CFG, max_batch=4, max_len=MAX_LEN, vm=vm, pool="kv",
+                 mode="cream", row_words=ROW_WORDS,
+                 max_sessions=8 * N_SESSIONS)
+    policy = VMPolicy(vm)
+    policy.set_tenant_slo("serve", "batch",
+                          TenantSLO(max_error_rate=1e-3, min_reads=128,
+                                    ceiling=Protection.SECDED))
+    hours = hours_for_expected_flips(
+        MEMCACHED_FIT, int(np.asarray(vm.pools["kv"].storage).nbytes),
+        DEFAULT_FLIPS)
+    campaign = FaultCampaign(vm, "kv", policy=policy, engine=eng,
+                             fit_per_mbit=fit, hours_per_step=hours,
+                             mix=FIELD_MIX, n_hard=2, seed=seed)
+    reqs = _requests("zipf", N_SESSIONS, n_turns, seed, PAID_FRAC)
+    for r in reqs:
+        eng.submit(r)
+    done = []
+    t0 = time.perf_counter()
+    while eng.sched.has_work():
+        done.extend(eng.poll())
+        campaign.tick()
+        if campaign.steps % 4 == 0:
+            policy.scrub_all()          # periodic repair sweep, under fire
+    wall = time.perf_counter() - t0
+    campaign.observe()                  # drain the tail
+    tokens = sum(len(r.generated) for r in done)
+    rep = campaign.report()
+    first = campaign.first_escalation_step
+    campaign.detach()
+    return (rep.rates(), tokens / wall if wall else 0.0,
+            first if first is not None else campaign.steps, campaign.steps)
+
+
+def _serving_rows(fit: float, shards: int, n_turns: int, seed: int
+                  ) -> list[tuple[str, float, str]]:
+    plane = "shard" if shards > 0 else "local"
+    rates, tok_s, esc, ticks = _campaign_serving(fit, shards, n_turns, seed)
+    tag = f"faults_{plane}_{_fit_label(fit)}"
+    rows = []
+    for cls in CLASSES:
+        if cls not in rates:
+            continue
+        r = rates[cls]
+        for kind in ("corrected", "detected", "silent"):
+            rows.append((f"{tag}_{cls}_{kind}_rate", r[kind],
+                         f"plane={plane},fit={fit:.0f}"))
+        if cls == "secded" and r["silent"] > 0:
+            raise AssertionError(
+                f"SECDED silently corrupted ({r['silent']:.2e}) — "
+                "the Hsiao never-miscorrect invariant is broken")
+    rows.append((f"{tag}_tokens_per_s", tok_s,
+                 f"ticks={ticks},shards={shards}"))
+    rows.append((f"{tag}_escalation_steps", float(esc),
+                 f"escalated={'yes' if esc < ticks else 'no'},"
+                 f"ticks={ticks}"))
+    return rows
+
+
+def _objcache_rows(fit: float, seed: int) -> list[tuple[str, float, str]]:
+    """Value-level oracle for the objcache plane (its get path is jitted
+    with the pool traced, so the shadow wrapper can't interpose — the
+    expected key->value map is the ground truth instead)."""
+    num_rows = DEFAULT_ROWS
+    vm = VirtualMemory(row_words=ROW_WORDS)
+    vm.add_pool("oc", num_rows, Layout.INTERWRAP, boundary=num_rows // 2)
+    oc = ObjCache(vm, "oc", index_capacity=256, max_value_words=32)
+    rng = np.random.default_rng(seed)
+    span = 32
+    per_class = 24
+    expected: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+    for i, cls in enumerate((Protection.SECDED, Protection.NONE)):
+        keys = np.arange(per_class, dtype=np.uint64) + 1 + i * per_class
+        vals = rng.integers(0, 2**32, size=(per_class, span),
+                            dtype=np.uint32)
+        oc.set_many(keys, vals, reliability=cls)
+        expected[cls.value] = (keys, vals)
+    hours = hours_for_expected_flips(
+        MEMCACHED_FIT, int(np.asarray(vm.pools["oc"].storage).nbytes),
+        DEFAULT_FLIPS)
+    model = FaultModel.make(
+        seed + 17, soft_rate=soft_rate_per_gb_per_step(fit, hours),
+        n_hard=0, shape=np.asarray(vm.pools["oc"].storage).shape,
+        mix=FIELD_MIX)
+    steps = 16
+    lookups = {cls: 0 for cls in expected}
+    corrupt = {cls: 0 for cls in expected}
+    for _ in range(steps):
+        vm.pools["oc"], _ = model.step_pool(vm.pools["oc"])
+        for cls, (keys, vals) in expected.items():
+            got, lens, found = oc.get_many(keys)
+            lookups[cls] += len(keys)
+            ok = found & (np.asarray(got)[:, :span] == vals).all(axis=1)
+            corrupt[cls] += int(len(keys) - ok.sum())
+    rows = []
+    for cls in expected:
+        rows.append((
+            f"faults_objcache_{_fit_label(fit)}_{cls}_value_corrupt_rate",
+            corrupt[cls] / lookups[cls],
+            f"lookups={lookups[cls]},steps={steps}"))
+    return rows
+
+
+def _scrub_rows(seed: int) -> list[tuple[str, float, str]]:
+    """Scrub sweep latency, clean vs under heavy injected corruption."""
+    pool = make_pool(DEFAULT_ROWS, Layout.INTERWRAP,
+                     boundary=DEFAULT_ROWS // 2)
+    pool, _ = pool.scrub()              # warm the compile cache
+    t0 = time.perf_counter()
+    pool, _ = pool.scrub()
+    clean_us = (time.perf_counter() - t0) * 1e6
+    rng = np.random.default_rng(seed)
+    storage, _ = inject_flips(pool.storage, rng, 2000)
+    import dataclasses
+    dirty = dataclasses.replace(pool, storage=storage)
+    t0 = time.perf_counter()
+    dirty, stats = dirty.scrub()
+    injected_us = (time.perf_counter() - t0) * 1e6
+    return [("faults_scrub_clean_us", clean_us, "rows=%d" % DEFAULT_ROWS),
+            ("faults_scrub_injected_us", injected_us,
+             f"flips=2000,corrected={stats.corrected},"
+             f"uncorrectable={stats.detected_uncorrectable}")]
+
+
+def main(seed: int = 0) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    for fit in (CI_SMOKE_FIT, MEMCACHED_FIT):
+        rows.extend(_serving_rows(fit, shards=0, n_turns=DEFAULT_TURNS,
+                                  seed=seed))
+    rows.extend(_serving_rows(MEMCACHED_FIT, shards=_shards(),
+                              n_turns=DEFAULT_TURNS, seed=seed))
+    rows.extend(_objcache_rows(MEMCACHED_FIT, seed))
+    rows.extend(_scrub_rows(seed))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in main():
+        print(f"{name},{val:.6f},{derived}")

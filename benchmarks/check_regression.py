@@ -40,8 +40,20 @@ import sys
 HIGHER_IS_BETTER = ("_ws_", "hit_rate", "hitrate", "speedup", "_gain",
                     "_capacity", "demotion", "_per_s")
 
+#: Substrings marking metrics where *smaller* is better — checked FIRST,
+#: so a rate row can never be mis-read through a HIGHER_IS_BETTER tag it
+#: happens to contain. Covers the fault-campaign suite: per-class
+#: corrected/detected/silent read rates, objcache value-corruption rates,
+#: and ticks-to-escalation (`faults_*_escalation_steps`). A zero baseline
+#: here is a hard gate: `0 * tolerance = 0`, so e.g. the SECDED class's
+#: silent-corruption rate must STAY zero.
+LOWER_IS_BETTER = ("_corrected_rate", "_detected_rate", "_silent_rate",
+                   "_corrupt_rate", "_error_rate", "_escalation_steps")
+
 
 def is_higher_better(name: str) -> bool:
+    if any(tag in name for tag in LOWER_IS_BETTER):
+        return False
     return any(tag in name for tag in HIGHER_IS_BETTER)
 
 

@@ -39,10 +39,11 @@ if _ROOT not in sys.path:
 
 
 def main() -> None:
-    from benchmarks import (bench_capacity, bench_kernels, bench_objcache,
-                            bench_overheads, bench_parallelism,
-                            bench_sensitivity, bench_serving, bench_shard,
-                            bench_vm, bench_websearch)
+    from benchmarks import (bench_capacity, bench_faults, bench_kernels,
+                            bench_objcache, bench_overheads,
+                            bench_parallelism, bench_sensitivity,
+                            bench_serving, bench_shard, bench_vm,
+                            bench_websearch)
     suites = [
         ("fig4", bench_websearch.main),
         ("fig8", bench_capacity.main),
@@ -54,6 +55,7 @@ def main() -> None:
         ("vm", bench_vm.main),
         ("objcache", bench_objcache.main),
         ("shard", bench_shard.main),
+        ("faults", bench_faults.main),
     ]
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,

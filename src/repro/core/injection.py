@@ -1,12 +1,30 @@
-"""Bit-flip fault injection — drives reliability tests and the health monitor.
+"""Bit-flip fault injection — drives reliability tests and the fault campaign.
 
-Models DRAM soft/hard errors (paper §2.2): soft = uniform random single-bit
-flips at a configurable rate; hard = a sticky set of (row, lane, word, bit)
-cells that re-flip after every scrub, concentrated in a few rows (matching
-field studies [1,8]: errors cluster within a small fraction of devices).
+Models DRAM soft/hard errors (paper §2.2):
+
+  * **soft errors** arrive as a Poisson process whose rate scales with the
+    resident capacity (errors per GB per step — see
+    :mod:`repro.faults.fit` for the FIT-rate conversion). Each arrival is
+    one *event* drawn from an :class:`ErrorMix` of realistic shapes:
+    ``single`` (one flipped bit), ``adjacent_double`` (two neighbouring
+    bits of one word — one SECDED beat, the classic multi-bit upset), and
+    ``random_double`` (two independent uniform bits — almost always two
+    separate beats);
+  * **hard errors** are a sticky set of (row, lane, word, bit) cells that
+    re-assert after every scrub (stuck-at-1), concentrated in a few rows
+    (matching field studies [1,8]: errors cluster within a small fraction
+    of devices).
+
+Everything is numpy-vectorised: campaign-scale injection (10⁴+ flips per
+step) is one batched draw + dedupe + one ``bitwise_xor.at`` scatter, not a
+Python loop. :meth:`FaultModel.step_pool` injects into either pool kind —
+a local :class:`~repro.core.pool.PoolState` or a multi-device
+``repro.shard.ShardedPool`` (per-shard storage views, global row ``r`` ↔
+shard ``r % S``, local row ``r // S`` — the router's convention).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import jax.numpy as jnp
@@ -15,10 +33,16 @@ import numpy as np
 
 @dataclass(frozen=True)
 class FlipRecord:
-    row: int
+    row: int        # global row (sharded pools: shard = row % S)
     lane: int
     word: int
     bit: int
+
+
+def _one(bits: np.ndarray) -> np.ndarray:
+    """``1 << bits`` as uint32 (numpy promotes plain ``1 <<`` to int64)."""
+    return np.left_shift(np.uint32(1), bits.astype(np.uint32),
+                         dtype=np.uint32)
 
 
 def inject_flips(storage: jnp.ndarray, rng: np.random.Generator, n_flips: int,
@@ -27,38 +51,98 @@ def inject_flips(storage: jnp.ndarray, rng: np.random.Generator, n_flips: int,
                  ) -> tuple[jnp.ndarray, list[FlipRecord]]:
     """Flip ``n_flips`` uniformly random bits. Returns (storage', ground truth).
 
-    Distinct (row, lane, word, bit) cells are guaranteed, so the flip count is
-    exact (needed when asserting corrected==injected).
+    Distinct (row, lane, word, bit) cells are guaranteed, so the flip count
+    is exact (needed when asserting corrected==injected). Vectorised:
+    oversampled batch draws deduped on a linear cell code until the exact
+    count is reached — no per-flip Python loop, so campaign-scale batches
+    (10⁴+) stay injector-cheap.
     """
     R, L, W = storage.shape
     r0, r1 = row_range or (0, R)
-    lanes = lanes or tuple(range(L))
+    lane_pool = np.asarray(lanes if lanes is not None else range(L),
+                           dtype=np.int64)
     arr = np.asarray(storage).copy()
-    seen: set[tuple[int, int, int, int]] = set()
-    records: list[FlipRecord] = []
-    while len(records) < n_flips:
-        cell = (int(rng.integers(r0, r1)), int(rng.choice(lanes)),
-                int(rng.integers(0, W)), int(rng.integers(0, 32)))
-        if cell in seen:
-            continue
-        seen.add(cell)
-        row, lane, word, bit = cell
-        arr[row, lane, word] ^= np.uint32(1 << bit)
-        records.append(FlipRecord(row, lane, word, bit))
+    chosen = np.empty(0, np.int64)      # linear cell codes, draw order kept
+    while chosen.size < n_flips:
+        m = 2 * max(n_flips - chosen.size, 16)
+        rows = rng.integers(r0, r1, size=m)
+        lns = lane_pool[rng.integers(0, lane_pool.size, size=m)]
+        words = rng.integers(0, W, size=m)
+        bits = rng.integers(0, 32, size=m)
+        lin = ((rows * L + lns) * W + words) * 32 + bits
+        cat = np.concatenate([chosen, lin])
+        _, first = np.unique(cat, return_index=True)
+        chosen = cat[np.sort(first)]    # dedupe, preserving draw order
+    chosen = chosen[:n_flips]
+    bits = chosen % 32
+    words = (chosen // 32) % W
+    lns = (chosen // (32 * W)) % L
+    rows = chosen // (32 * W * L)
+    np.bitwise_xor.at(arr, (rows, lns, words), _one(bits))
+    records = [FlipRecord(int(r), int(ln), int(w), int(b))
+               for r, ln, w, b in zip(rows, lns, words, bits)]
     return jnp.asarray(arr), records
+
+
+def apply_flips(storage: jnp.ndarray,
+                records: list[FlipRecord]) -> jnp.ndarray:
+    """XOR a known set of cells (targeted injection for tests/replays)."""
+    arr = np.asarray(storage).copy()
+    if records:
+        rows = np.asarray([c.row for c in records])
+        lns = np.asarray([c.lane for c in records])
+        words = np.asarray([c.word for c in records])
+        bits = np.asarray([c.bit for c in records])
+        np.bitwise_xor.at(arr, (rows, lns, words), _one(bits))
+    return jnp.asarray(arr)
+
+
+@dataclass(frozen=True)
+class ErrorMix:
+    """Relative weights of the soft-error event shapes.
+
+    ``single`` flips one bit; ``adjacent_double`` flips two neighbouring
+    bits of one uint32 word (one SECDED beat → detected-uncorrectable by
+    the Hsiao code, never miscorrected); ``random_double`` flips two
+    independent uniform bits (distinct beats with overwhelming probability
+    → each corrected). Weights need not sum to 1.
+    """
+    single: float = 1.0
+    adjacent_double: float = 0.0
+    random_double: float = 0.0
+
+    def probs(self) -> np.ndarray:
+        w = np.asarray([self.single, self.adjacent_double,
+                        self.random_double], float)
+        total = w.sum()
+        if total <= 0:
+            raise ValueError("ErrorMix weights must sum to > 0")
+        return w / total
+
+
+#: Single-bit upsets only — the pre-campaign behaviour.
+SINGLES = ErrorMix()
+#: Field-shaped mix: mostly singles, a tail of multi-bit upsets
+#: (Sridharan et al. find multi-bit faults are a small but steady
+#: fraction of DRAM error events).
+FIELD_MIX = ErrorMix(single=0.88, adjacent_double=0.08, random_double=0.04)
 
 
 @dataclass
 class FaultModel:
-    """Stateful injector: soft error rate + sticky hard-fault cells."""
+    """Stateful injector: soft error process + sticky hard-fault cells."""
     rng: np.random.Generator
     soft_rate_per_gb_per_step: float = 0.0
     hard_cells: list[FlipRecord] = field(default_factory=list)
+    mix: ErrorMix = SINGLES
 
     @staticmethod
     def make(seed: int, soft_rate: float = 0.0, n_hard: int = 0,
              shape: tuple[int, int, int] | None = None,
-             hard_row_fraction: float = 0.05) -> "FaultModel":
+             hard_row_fraction: float = 0.05,
+             mix: ErrorMix = SINGLES) -> "FaultModel":
+        """``shape`` is the *global* geometry ``(R, L, W)`` (sharded pools:
+        R = total rows across shards)."""
         rng = np.random.default_rng(seed)
         hard: list[FlipRecord] = []
         if n_hard:
@@ -71,21 +155,88 @@ class FaultModel:
                                        int(rng.integers(0, L)),
                                        int(rng.integers(0, W)),
                                        int(rng.integers(0, 32))))
-        return FaultModel(rng, soft_rate, hard)
+        return FaultModel(rng, soft_rate, hard, mix)
 
+    # -- soft-error event generation (vectorised) ---------------------------
+    def _draw_soft(self, R: int, L: int, W: int, nbytes: int
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """One step's soft flips as (rows, lanes, words, bits) arrays.
+
+        The Poisson draw counts *events*; each event contributes 1 or 2 bit
+        flips per the mix. Rows are global.
+        """
+        gb = nbytes / 2**30
+        n_events = int(self.rng.poisson(self.soft_rate_per_gb_per_step * gb))
+        if not n_events:
+            z = np.empty(0, np.int64)
+            return z, z, z, z
+        n1, n_adj, n_rnd = self.rng.multinomial(n_events, self.mix.probs())
+        parts = []
+        # singles + random doubles: independent uniform cells
+        n_uni = int(n1) + 2 * int(n_rnd)
+        if n_uni:
+            parts.append((self.rng.integers(0, R, n_uni),
+                          self.rng.integers(0, L, n_uni),
+                          self.rng.integers(0, W, n_uni),
+                          self.rng.integers(0, 32, n_uni)))
+        # adjacent doubles: bits (b, b+1) of one word — one SECDED beat
+        if n_adj:
+            rows = self.rng.integers(0, R, n_adj)
+            lns = self.rng.integers(0, L, n_adj)
+            words = self.rng.integers(0, W, n_adj)
+            b0 = self.rng.integers(0, 31, n_adj)
+            parts.append((np.repeat(rows, 2), np.repeat(lns, 2),
+                          np.repeat(words, 2),
+                          np.stack([b0, b0 + 1], axis=1).reshape(-1)))
+        rows = np.concatenate([p[0] for p in parts])
+        lns = np.concatenate([p[1] for p in parts])
+        words = np.concatenate([p[2] for p in parts])
+        bits = np.concatenate([p[3] for p in parts])
+        return rows, lns, words, bits
+
+    # -- injection ----------------------------------------------------------
     def step(self, storage: jnp.ndarray) -> tuple[jnp.ndarray, int]:
         """Apply one step of faults; returns (storage', flips applied)."""
         arr = np.asarray(storage).copy()
-        count = 0
-        gb = arr.nbytes / 2**30
-        n_soft = self.rng.poisson(self.soft_rate_per_gb_per_step * gb)
         R, L, W = arr.shape
-        for _ in range(int(n_soft)):
-            arr[self.rng.integers(0, R), self.rng.integers(0, L),
-                self.rng.integers(0, W)] ^= np.uint32(
-                    1 << self.rng.integers(0, 32))
-            count += 1
-        for c in self.hard_cells:
-            arr[c.row, c.lane, c.word] |= np.uint32(1 << c.bit)  # stuck-at-1
-            count += 1
+        count = self._apply(arr, R, lambda r: (r,))
         return jnp.asarray(arr), count
+
+    def step_pool(self, pool) -> tuple[object, int]:
+        """Inject one step of faults into a live pool — local or sharded.
+
+        Local pools (3-D storage) are flipped in place and rebuilt; sharded
+        pools (4-D ``(S, R_local, 9, W)`` storage) map each global row
+        ``r`` to ``(shard r % S, local r // S)`` — the shard router's
+        round-robin convention — and the flipped host image is re-placed on
+        the ``banks`` mesh. Returns ``(pool', flips applied)``.
+        """
+        storage = pool.storage
+        if storage.ndim == 3:
+            new_storage, count = self.step(storage)
+            return dataclasses.replace(pool, storage=new_storage), count
+        if storage.ndim != 4:
+            raise ValueError(f"unsupported storage rank {storage.ndim}")
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        S, R_local, L, W = storage.shape
+        arr = np.asarray(storage).copy()
+        count = self._apply(arr, S * R_local, lambda r: (r % S, r // S))
+        new_storage = jax.device_put(
+            jnp.asarray(arr), NamedSharding(pool.mesh, P("banks")))
+        return dataclasses.replace(pool, storage=new_storage), count
+
+    def _apply(self, arr: np.ndarray, num_rows: int, split) -> int:
+        """XOR soft flips + OR hard cells into ``arr`` via ``split``, which
+        maps a global-row vector to the leading index tuple."""
+        L, W = arr.shape[-2], arr.shape[-1]
+        rows, lns, words, bits = self._draw_soft(num_rows, L, W, arr.nbytes)
+        count = int(rows.size)
+        if count:
+            np.bitwise_xor.at(arr, (*split(rows), lns, words), _one(bits))
+        for c in self.hard_cells:
+            idx = tuple(int(i) for i in split(np.asarray(c.row))) \
+                + (c.lane, c.word)
+            arr[idx] |= np.uint32(1 << c.bit)   # stuck-at-1
+            count += 1
+        return count

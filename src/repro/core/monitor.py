@@ -94,6 +94,30 @@ class ErrorMonitor:
                       labels=("region",)).labels(region=region).set(
             h.rate(self.config.window))
 
+    def record_observation(self, region: str, checked: int,
+                           corrected: int = 0, uncorrectable: int = 0,
+                           silent: int = 0) -> None:
+        """Fold a live read-outcome census (the fault campaign's feed).
+
+        Scrub sweeps aren't the only error source any more: campaign reads
+        classified against the ground-truth shadow enter the same windowed
+        rate estimate, so ``recommend`` reacts to in-flight corruption
+        between sweeps. Silent corruption counts as uncorrectable here —
+        it is strictly worse (wrong bits with no flag), so it must trip
+        the same upgrade path.
+        """
+        h = self._health.get(region)
+        if h is None:
+            h = RegionHealth(rates=deque(maxlen=max(1, self.config.window)))
+            self._health[region] = h
+        rate = (corrected + uncorrectable + silent) / max(checked, 1)
+        h.rates.append(rate)
+        h.uncorrectable_seen += uncorrectable + silent
+        if rate <= self.config.downgrade_threshold:
+            h.quiet_windows += 1
+        else:
+            h.quiet_windows = 0
+
     def rate(self, region: str) -> float:
         h = self._health.get(region)
         return h.rate(self.config.window) if h else 0.0

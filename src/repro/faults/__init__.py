@@ -1,0 +1,14 @@
+"""CREAM-Campaign: FIT-driven live fault injection with a closed
+reliability-SLO loop (see :mod:`repro.faults.campaign`)."""
+from repro.faults.campaign import CampaignReport, FaultCampaign
+from repro.faults.fit import (CI_SMOKE_FIT, HEALTHY_FIT, MEMCACHED_FIT,
+                              expected_flips, hours_for_expected_flips,
+                              soft_rate_per_gb_per_step)
+from repro.faults.shadow import PageCensus, ShadowedPool
+
+__all__ = [
+    "CampaignReport", "FaultCampaign", "ShadowedPool", "PageCensus",
+    "MEMCACHED_FIT", "HEALTHY_FIT", "CI_SMOKE_FIT",
+    "soft_rate_per_gb_per_step", "hours_for_expected_flips",
+    "expected_flips",
+]

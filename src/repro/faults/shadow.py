@@ -1,0 +1,224 @@
+"""Ground-truth shadow tracking: classify every read as corrected /
+detected / silently-corrupted.
+
+:class:`ShadowedPool` wraps any :class:`~repro.core.pool.PoolLike` and
+keeps a host-side *shadow copy* of every page the system has written —
+the content the data plane **believes** is stored. Reads go through the
+wrapped pool's status path; each returned page is compared against the
+shadow:
+
+  ============================  ==========================  ============
+  hardware status               data == shadow              verdict
+  ============================  ==========================  ============
+  DETECTED_UNCORRECTABLE        (any)                       detected
+  CORRECTED_*                   yes                         corrected
+  CORRECTED_*                   no                          **silent** (miscorrection)
+  CLEAN                         yes                         clean
+  CLEAN                         no                          **silent**
+  ============================  ==========================  ============
+
+"Silent" is the class the paper's contract cares about: wrong bits
+surfaced with no flag. SECDED's Hsiao code never miscorrects a double
+(it detects all 2-bit beat errors), PARITY misses only even numbers of
+flips in one congruence class, NONE misses everything — the shadow
+oracle measures all three, per reliability class, while the system runs.
+
+The wrapper is deliberately **not** a pytree: it must never be traced.
+It presents the full PoolLike surface, is *mutable* (``write_pages``
+replaces ``self.inner`` and returns ``self``), and therefore survives
+the data plane's ``vm.pools[name] = pool.write_pages(...)`` reassignment
+idiom unchanged — the engine, VM, migration and policy layers run
+unmodified over a shadowed pool. The fused in-jit gather (``PoolState``
+fast path) is bypassed by construction: ``isinstance(wrapper, PoolState)``
+is False, so engines fall back to the host-side ``read_pages`` route the
+oracle can observe. One caveat is inherent: a migration *re-writes* what
+it read, so corruption that slips through a migration read is counted as
+silent **at that read** (attributed to the class it occurred under) and
+then becomes the new believed content.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.core import secded
+from repro.core.layouts import extra_page_count
+from repro.vm.address_space import frame_class
+
+
+@dataclass
+class PageCensus:
+    """Cumulative read-outcome counts for one reliability class."""
+    reads: int = 0
+    clean: int = 0
+    corrected: int = 0
+    detected: int = 0
+    silent: int = 0
+
+    def rate(self, kind: str) -> float:
+        return getattr(self, kind) / self.reads if self.reads else 0.0
+
+
+class ShadowedPool:
+    """PoolLike wrapper adding a ground-truth oracle to every batched read."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        S = getattr(inner, "num_shards", 1)
+        cap = inner.num_rows + S * extra_page_count(
+            inner.layout, inner.num_rows // S, inner.row_words)
+        self._shadow = np.zeros((cap, inner.page_words), np.uint32)
+        self._valid = np.zeros(cap, bool)
+        # per-page outcome counters (for tenant attribution via drain())
+        self._reads = np.zeros(cap, np.int64)
+        self._corrected = np.zeros(cap, np.int64)
+        self._detected = np.zeros(cap, np.int64)
+        self._silent = np.zeros(cap, np.int64)
+        self._drained = np.zeros((4, cap), np.int64)   # snapshot at last drain
+        self.census: dict[str, PageCensus] = {}
+
+    # -- forwarded geometry --------------------------------------------------
+    @property
+    def layout(self):
+        return self.inner.layout
+
+    @property
+    def row_words(self) -> int:
+        return self.inner.row_words
+
+    @property
+    def boundary(self) -> int:
+        return self.inner.boundary
+
+    @property
+    def num_rows(self) -> int:
+        return self.inner.num_rows
+
+    @property
+    def num_pages(self) -> int:
+        return self.inner.num_pages
+
+    @property
+    def num_extra_pages(self) -> int:
+        return self.inner.num_extra_pages
+
+    @property
+    def page_words(self) -> int:
+        return self.inner.page_words
+
+    @property
+    def boundary_step(self) -> int:
+        return self.inner.boundary_step
+
+    @property
+    def storage(self):
+        return self.inner.storage
+
+    def capacity_gain(self) -> float:
+        return self.inner.capacity_gain()
+
+    # -- the oracle ----------------------------------------------------------
+    def _classify(self, pages, data, status) -> None:
+        pages = np.asarray(pages).reshape(-1)
+        data = np.asarray(data).reshape(pages.size, -1)
+        status = np.asarray(status).reshape(-1)
+        valid = self._valid[pages]
+        match = np.zeros(pages.size, bool)
+        if valid.any():
+            match[valid] = (data[valid] ==
+                            self._shadow[pages[valid]]).all(axis=1)
+        detected = status == secded.DETECTED_UNCORRECTABLE
+        corrected = ((status == secded.CORRECTED_DATA) |
+                     (status == secded.CORRECTED_CODE)) & ~detected
+        # wrong bits with no flag — incl. SECDED miscorrections (status
+        # says corrected but the data disagrees with the ground truth)
+        silent = valid & ~detected & ~match
+        corrected &= match
+        np.add.at(self._reads, pages[valid], 1)   # only believed pages count
+        np.add.at(self._detected, pages[detected & valid], 1)
+        np.add.at(self._corrected, pages[corrected & valid], 1)
+        np.add.at(self._silent, pages[silent], 1)
+        # per-class census, attributed at read time under the live boundary
+        for p, v, d, c, s in zip(pages, valid, detected & valid,
+                                 corrected & valid, silent):
+            if not v:
+                continue
+            cls = frame_class(self.inner, int(p)).value
+            cen = self.census.setdefault(cls, PageCensus())
+            cen.reads += 1
+            if d:
+                cen.detected += 1
+            elif s:
+                cen.silent += 1
+            elif c:
+                cen.corrected += 1
+            else:
+                cen.clean += 1
+
+    def drain(self) -> dict[int, tuple[int, int, int, int]]:
+        """Per-page (reads, corrected, detected, silent) since last drain."""
+        cur = np.stack([self._reads, self._corrected,
+                        self._detected, self._silent])
+        delta = cur - self._drained
+        self._drained = cur
+        pages = np.nonzero(delta.any(axis=0))[0]
+        return {int(p): tuple(int(x) for x in delta[:, p]) for p in pages}
+
+    # -- PoolLike data plane -------------------------------------------------
+    def read_pages(self, pages) -> jax.Array:
+        data, status = self.inner.read_pages_status(pages)
+        self._classify(pages, data, status)
+        return data
+
+    def read_pages_status(self, pages) -> tuple[jax.Array, jax.Array]:
+        data, status = self.inner.read_pages_status(pages)
+        self._classify(pages, data, status)
+        return data, status
+
+    def write_pages(self, pages, data) -> "ShadowedPool":
+        self.inner = self.inner.write_pages(pages, data)
+        p = np.asarray(pages).reshape(-1)
+        self._shadow[p] = np.asarray(data).reshape(p.size, -1)
+        self._valid[p] = True
+        return self
+
+    # traceable variants: classification still works because the wrapper is
+    # never passed into jit — any call landing here is host-side by design
+    def read_any(self, pages) -> jax.Array:
+        return self.read_pages(pages)
+
+    def read_any_status(self, pages) -> tuple[jax.Array, jax.Array]:
+        return self.read_pages_status(pages)
+
+    def write_any(self, pages, data) -> "ShadowedPool":
+        self.inner = self.inner.write_any(pages, data)
+        p = np.asarray(pages).reshape(-1)
+        self._shadow[p] = np.asarray(data).reshape(p.size, -1)
+        self._valid[p] = True
+        return self
+
+    # -- control plane -------------------------------------------------------
+    def evict_prediction(self, new_boundary: int) -> list[int]:
+        return self.inner.evict_prediction(new_boundary)
+
+    def move_boundary(self, new_boundary: int) -> tuple["ShadowedPool", dict]:
+        self.inner, info = self.inner.move_boundary(new_boundary)
+        # pages beyond the new geometry no longer exist; boundary-shrink
+        # re-encoding also re-blesses surviving contents as believed truth
+        self._valid[self.inner.num_pages:] = False
+        return self, info
+
+    def scrub(self, use_kernel: bool = False) -> tuple["ShadowedPool", object]:
+        # scrub repairs toward the stored codewords; the logical truth
+        # (what the system wrote) is unchanged, so the shadow stays put
+        self.inner, stats = self.inner.scrub(use_kernel=use_kernel)
+        return self, stats
+
+    # -- injection -----------------------------------------------------------
+    def inject(self, fault_model) -> int:
+        """One injector step against the wrapped pool (shadow untouched —
+        injected corruption is exactly what the oracle must catch)."""
+        self.inner, count = fault_model.step_pool(self.inner)
+        return count

@@ -36,7 +36,24 @@ class SLOStatus:
 class _ClassState:
     corrected: int = 0
     uncorrectable: int = 0
+    silent: int = 0                # wrong bits surfaced with no flag
     budget: int | None = None      # max uncorrectable (None = unbounded)
+    silent_budget: int | None = None   # max silent (None = unbounded)
+
+
+@dataclass
+class _TenantState:
+    """Per-tenant read-outcome census (fed by the fault campaign)."""
+    reads: int = 0
+    corrected: int = 0
+    detected: int = 0
+    silent: int = 0
+    max_error_rate: float | None = None   # (detected+silent)/reads budget
+
+    @property
+    def error_rate(self) -> float:
+        return (self.detected + self.silent) / self.reads \
+            if self.reads else 0.0
 
 
 @dataclass
@@ -62,14 +79,17 @@ class SLOTracker:
     classes: dict[str, _ClassState] = field(default_factory=dict)
     regions: dict[str, _RegionState] = field(default_factory=dict)
     capacity: dict[str, _CapacityState] = field(default_factory=dict)
+    tenants: dict[str, _TenantState] = field(default_factory=dict)
 
     def __post_init__(self):
         self._default_classes()
 
     def _default_classes(self) -> None:
-        # the contract: SECDED reads must never be uncorrectable; weaker
-        # classes tolerate errors (tracked, never breaching)
-        self.classes.setdefault("secded", _ClassState(budget=0))
+        # the contract: SECDED reads must never be uncorrectable and never
+        # silently wrong; weaker classes tolerate errors (tracked, never
+        # breaching on their own — the per-tenant SLO escalates instead)
+        self.classes.setdefault("secded",
+                                _ClassState(budget=0, silent_budget=0))
         self.classes.setdefault("parity", _ClassState(budget=None))
         self.classes.setdefault("none", _ClassState(budget=None))
 
@@ -78,10 +98,25 @@ class SLOTracker:
         self.classes.setdefault(cls, _ClassState()).budget = budget
 
     def record_read_status(self, cls: str, corrected: int = 0,
-                           uncorrectable: int = 0) -> None:
+                           uncorrectable: int = 0, silent: int = 0) -> None:
         st = self.classes.setdefault(cls, _ClassState())
         st.corrected += int(corrected)
         st.uncorrectable += int(uncorrectable)
+        st.silent += int(silent)
+
+    def set_tenant_slo(self, tenant: str,
+                       max_error_rate: float | None) -> None:
+        self.tenants.setdefault(tenant, _TenantState()) \
+            .max_error_rate = max_error_rate
+
+    def record_tenant_reads(self, tenant: str, reads: int,
+                            corrected: int = 0, detected: int = 0,
+                            silent: int = 0) -> None:
+        st = self.tenants.setdefault(tenant, _TenantState())
+        st.reads += int(reads)
+        st.corrected += int(corrected)
+        st.detected += int(detected)
+        st.silent += int(silent)
 
     def record_scrub(self, region: str, stats) -> None:
         """Fold one scrub sweep's census (a ``ScrubStats``-shaped object)."""
@@ -109,16 +144,35 @@ class SLOTracker:
     def report(self) -> list[SLOStatus]:
         out: list[SLOStatus] = []
         for cls, st in sorted(self.classes.items()):
-            if st.budget is None:
+            if st.budget is None and st.silent_budget is None:
                 ok = True
                 objective = "errors tolerated by contract"
             else:
-                ok = st.uncorrectable <= st.budget
-                objective = f"uncorrectable <= {st.budget}"
+                ok = (st.budget is None or st.uncorrectable <= st.budget) \
+                    and (st.silent_budget is None
+                         or st.silent <= st.silent_budget)
+                parts = []
+                if st.budget is not None:
+                    parts.append(f"uncorrectable <= {st.budget}")
+                if st.silent_budget is not None:
+                    parts.append(f"silent <= {st.silent_budget}")
+                objective = ", ".join(parts)
             out.append(SLOStatus(
                 name="reliability", scope=f"class/{cls}", ok=ok,
-                value=float(st.uncorrectable), objective=objective,
-                detail=f"corrected={st.corrected}"))
+                value=float(st.uncorrectable + st.silent),
+                objective=objective,
+                detail=f"corrected={st.corrected} silent={st.silent}"))
+        for tenant, st in sorted(self.tenants.items()):
+            ok = st.max_error_rate is None \
+                or st.error_rate <= st.max_error_rate
+            objective = "observed error rate (informational)" \
+                if st.max_error_rate is None \
+                else f"error rate <= {st.max_error_rate:g}"
+            out.append(SLOStatus(
+                name="tenant-reliability", scope=f"tenant/{tenant}", ok=ok,
+                value=st.error_rate, objective=objective,
+                detail=f"reads={st.reads} corrected={st.corrected} "
+                       f"detected={st.detected} silent={st.silent}"))
         for region, st in sorted(self.regions.items()):
             out.append(SLOStatus(
                 name="scrub", scope=f"region/{region}", ok=True,
@@ -145,6 +199,7 @@ class SLOTracker:
         self.classes.clear()
         self.regions.clear()
         self.capacity.clear()
+        self.tenants.clear()
         self._default_classes()
 
 

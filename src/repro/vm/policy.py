@@ -20,9 +20,10 @@ from dataclasses import dataclass
 
 from repro.core.monitor import ErrorMonitor, MonitorConfig
 from repro.core.pool import PoolLike
-from repro.core.protection import Protection, at_least
+from repro.core.protection import _ORDER, Protection, at_least, stronger
 from repro.core.scrubber import ScrubStats
-from repro.vm.address_space import VirtualMemory, cream_protection
+from repro.vm.address_space import (VirtualMemory, cream_protection,
+                                    frame_class)
 from repro.vm.migration import MigrationEngine
 
 
@@ -40,6 +41,20 @@ class PoolPolicy:
     ceiling: Protection = Protection.SECDED   # strongest allowed
 
 
+@dataclass
+class TenantSLO:
+    """Per-(tenant, segment) reliability contract the campaign enforces.
+
+    ``max_error_rate`` bounds (detected + silent) / reads as observed by
+    the ground-truth shadow oracle; crossing it (after ``min_reads``
+    observations, so one unlucky page can't trigger a migration storm)
+    escalates the segment one protection level, up to ``ceiling``.
+    """
+    max_error_rate: float = 1e-3
+    min_reads: int = 64
+    ceiling: Protection = Protection.SECDED
+
+
 class VMPolicy:
     """Owns the adaptation loop over every pool the VM manages."""
 
@@ -51,9 +66,89 @@ class VMPolicy:
         self.monitor = ErrorMonitor(config)
         self.pool_policies = pool_policies or {}
         self.transitions: list[tuple[str, Protection, Protection]] = []
+        # per-(tenant, segment) SLOs + observed read-outcome accumulators
+        self.tenant_slos: dict[tuple[str, str], TenantSLO] = {}
+        self._observed: dict[tuple[str, str], list[int]] = {}
+        self.escalations: list[dict] = []
 
     def policy_for(self, pool_name: str) -> PoolPolicy:
         return self.pool_policies.get(pool_name, PoolPolicy())
+
+    # -- tenant reliability SLOs (the campaign's closed loop) ----------------
+    def set_tenant_slo(self, tenant: str, segment: str,
+                       slo: TenantSLO) -> None:
+        self.tenant_slos[(tenant, segment)] = slo
+        from repro.obs import slo as obs_slo
+        obs_slo.TRACKER.set_tenant_slo(f"{tenant}/{segment}",
+                                       slo.max_error_rate)
+
+    def observe_reads(self, tenant: str, segment: str, reads: int,
+                      corrected: int = 0, detected: int = 0,
+                      silent: int = 0) -> None:
+        """Fold shadow-oracle read outcomes for one tenant segment."""
+        acc = self._observed.setdefault((tenant, segment), [0, 0, 0, 0])
+        for i, v in enumerate((reads, corrected, detected, silent)):
+            acc[i] += int(v)
+        from repro.obs import slo as obs_slo
+        obs_slo.TRACKER.record_tenant_reads(
+            f"{tenant}/{segment}", reads, corrected=corrected,
+            detected=detected, silent=silent)
+
+    def observed_error_rate(self, tenant: str, segment: str) -> float:
+        acc = self._observed.get((tenant, segment))
+        if not acc or not acc[0]:
+            return 0.0
+        return (acc[2] + acc[3]) / acc[0]
+
+    def escalate_tenant(self, tenant: str, segment: str,
+                        target: Protection) -> dict:
+        """Upgrade a segment's reliability class via zero-loss migration.
+
+        The segment default and every PTE's contract move to ``target``
+        (host-resident pages too, so a later swap-in honours it); pages on
+        frames weaker than ``target`` are relocated through the existing
+        migration engine — no data loss, no downtime.
+        """
+        space = self.vm.tenants[tenant]
+        before = space.segments.get(segment, Protection.NONE)
+        space.segments[segment] = target
+        move: list[int] = []
+        for vpn, pte in space.entries.items():
+            if pte.segment != segment:
+                continue
+            pte.reliability = target
+            if pte.pool is not None and not at_least(
+                    frame_class(self.vm.pools[pte.pool], pte.phys), target):
+                move.append(vpn)
+        moved = self.engine.relocate(tenant, move) if move else 0
+        esc = {"tenant": tenant, "segment": segment, "from": before,
+               "to": target, "moved": moved}
+        self.escalations.append(esc)
+        self._observed.pop((tenant, segment), None)   # fresh window
+        return esc
+
+    def auto_escalate(self) -> list[dict]:
+        """Escalate every tenant segment whose observed rate crossed its SLO."""
+        done = []
+        for (tenant, segment), slo in list(self.tenant_slos.items()):
+            acc = self._observed.get((tenant, segment))
+            if not acc or acc[0] < slo.min_reads:
+                continue
+            rate = (acc[2] + acc[3]) / acc[0]
+            if rate <= slo.max_error_rate:
+                continue
+            current = self.vm.tenants[tenant].segments.get(
+                segment, Protection.NONE)
+            target = stronger(current)
+            hi = _ORDER.index(slo.ceiling)
+            target = _ORDER[min(_ORDER.index(target), hi)]
+            if target == current:
+                # already at the ceiling: reset the window so the breach
+                # is re-evaluated on fresh evidence, not compounded
+                self._observed.pop((tenant, segment), None)
+                continue
+            done.append(self.escalate_tenant(tenant, segment, target))
+        return done
 
     # -- the loop ------------------------------------------------------------
     def scrub_all(self, use_kernel: bool = False) -> dict[str, ScrubStats]:

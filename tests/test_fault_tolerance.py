@@ -59,6 +59,127 @@ def test_rung5_cold_restart(trainer):
     assert len(log) >= 2
 
 
+# -- error-shape taxonomy vs the shadow oracle, class by class ---------------
+#
+# Each reliability class meets each multi-bit error shape; the verdict is
+# asserted against the ground-truth ShadowedPool oracle:
+#
+#   SECDED  adjacent double (one beat)   -> detected, NEVER silent (Hsiao
+#           detects every 2-bit beat error — no miscorrection; the data
+#           surfaces wrong but flagged)
+#   SECDED  random double (two beats)    -> both corrected, data exact
+#   PARITY  single / adjacent double     -> detected (different bit-mod-8
+#           congruence classes in the 64B line)
+#   PARITY  double in ONE congruence     -> parity cancels: the documented
+#           class (bits b, b+8 of a word)    escape, silent — only the
+#                                            shadow oracle sees it
+#   NONE    anything                     -> silent, every time
+
+
+def _shadowed(num_rows, layout, boundary, seed=0):
+    import jax.numpy as jnp
+    from repro.core.layouts import Layout  # noqa: F401
+    from repro.core.pool import make_pool
+    from repro.faults import ShadowedPool
+    pool = make_pool(num_rows, layout, boundary=boundary)
+    sh = ShadowedPool(pool)
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 2**32, size=(sh.num_pages, sh.page_words),
+                        dtype=np.uint32)
+    sh.write_pages(jnp.arange(sh.num_pages), jnp.asarray(data))
+    return sh
+
+
+def _flip(sh, records):
+    sh.inner = dataclasses.replace(
+        sh.inner, storage=injection.apply_flips(sh.inner.storage, records))
+
+
+def _read_all(sh):
+    import jax.numpy as jnp
+    sh.census.clear()
+    return np.asarray(sh.read_pages(jnp.arange(sh.num_pages)))
+
+
+def test_secded_adjacent_double_detected_never_silent():
+    from repro.core.layouts import Layout
+    sh = _shadowed(16, Layout.INTERWRAP, boundary=0)     # all rows SECDED
+    _flip(sh, [injection.FlipRecord(3, 0, 10, 7),
+               injection.FlipRecord(3, 0, 10, 8)])       # one beat, 2 bits
+    data = _read_all(sh)
+    cen = sh.census["secded"]
+    assert cen.detected == 1 and cen.silent == 0
+    # flagged, not fixed: the surfaced page differs from the ground truth
+    assert (data[3] != sh._shadow[3]).any()
+
+
+def test_secded_random_double_both_corrected():
+    from repro.core.layouts import Layout
+    sh = _shadowed(16, Layout.INTERWRAP, boundary=0)
+    # two independent cells in different lanes -> two different beats
+    _flip(sh, [injection.FlipRecord(5, 0, 3, 1),
+               injection.FlipRecord(5, 4, 9, 30)])
+    data = _read_all(sh)
+    cen = sh.census["secded"]
+    assert cen.corrected == 1 and cen.detected == 0 and cen.silent == 0
+    assert (data[5] == sh._shadow[5]).all()              # exact recovery
+
+
+def test_parity_detects_singles_and_adjacent_doubles():
+    from repro.core.layouts import Layout
+    sh = _shadowed(16, Layout.PARITY, boundary=16)       # all rows PARITY
+    _flip(sh, [injection.FlipRecord(2, 1, 4, 5)])        # single
+    _read_all(sh)
+    assert sh.census["parity"].detected >= 1
+    assert sh.census["parity"].silent == 0
+    sh2 = _shadowed(16, Layout.PARITY, boundary=16)
+    # adjacent double: bits 7 and 8 fall in different mod-8 congruence
+    # classes, so both interleaved parity bits flip -> detected
+    _flip(sh2, [injection.FlipRecord(6, 2, 8, 7),
+                injection.FlipRecord(6, 2, 8, 8)])
+    _read_all(sh2)
+    assert sh2.census["parity"].detected >= 1
+    assert sh2.census["parity"].silent == 0
+
+
+def test_parity_same_congruence_double_is_the_silent_escape():
+    from repro.core.layouts import Layout
+    sh = _shadowed(16, Layout.PARITY, boundary=16)
+    # bits b and b+8 of one word: same bit-mod-8 class in the same 64B
+    # line, so the 8-bit interleaved parity cancels — undetected by the
+    # hardware, caught ONLY by the ground-truth oracle
+    _flip(sh, [injection.FlipRecord(4, 3, 2, 5),
+               injection.FlipRecord(4, 3, 2, 13)])
+    data = _read_all(sh)
+    cen = sh.census["parity"]
+    assert cen.detected == 0 and cen.silent == 1
+    assert (data[4] != sh._shadow[4]).any()
+
+
+def test_none_silently_corrupts():
+    from repro.core.layouts import Layout
+    sh = _shadowed(16, Layout.INTERWRAP, boundary=16)    # all rows NONE
+    _flip(sh, [injection.FlipRecord(7, 0, 0, 0)])
+    data = _read_all(sh)
+    cen = sh.census["none"]
+    assert cen.detected == 0 and cen.corrected == 0 and cen.silent == 1
+    assert (data[7] != sh._shadow[7]).any()
+
+
+def test_inject_flips_vectorised_exact_count():
+    """Satellite: the batched draw+dedupe keeps the exact-count contract
+    at campaign scale (10^4 flips, no per-flip Python loop)."""
+    from repro.core.layouts import Layout
+    from repro.core.pool import make_pool
+    pool = make_pool(32, Layout.INTERWRAP, boundary=16)
+    rng = np.random.default_rng(7)
+    stor, records = injection.inject_flips(pool.storage, rng, 10_000)
+    assert len(records) == 10_000
+    assert len({(c.row, c.lane, c.word, c.bit) for c in records}) == 10_000
+    xor = np.asarray(stor) ^ np.asarray(pool.storage)
+    assert int(np.unpackbits(xor.view(np.uint8)).sum()) == 10_000
+
+
 def test_remesh_plan():
     from repro.distributed.elastic import plan_remesh
     plan = plan_remesh(old_devices=512, new_devices=496, model_axis=16)

@@ -1,0 +1,255 @@
+"""CREAM-Campaign acceptance: live injection, the SLO loop, both planes.
+
+The headline contract (ISSUE 7 / paper §2.2 + HRM's per-class error
+tolerance): at memcached-scale FIT rates a paid/SECDED tenant serves
+**zero corrupted tokens** — no silent corruption ever (structural: Hsiao
+detects all double-beat errors) and, with scrubbing keeping singles from
+accumulating, no detected-uncorrectable reads either — while batch/NONE
+tenants degrade gracefully and are auto-upgraded through the zero-loss
+migration once their observed error rate crosses the tenant SLO.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.injection import ErrorMix, FaultModel, SINGLES
+from repro.core.layouts import GROUP_ROWS, Layout
+from repro.core.pool import make_pool
+from repro.core.protection import Protection
+from repro.faults import (FaultCampaign, MEMCACHED_FIT,
+                          hours_for_expected_flips)
+from repro.serve import Engine, ServeRequest
+from repro.vm.address_space import VirtualMemory
+from repro.vm.policy import TenantSLO, VMPolicy
+
+CFG = ModelConfig(name="faults-test", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=256, head_dim=16, dtype="float32")
+
+
+# -- satellite: FaultModel on ShardedPool shards ------------------------------
+
+def test_step_pool_shard_local_parity():
+    """Same seed, same global geometry -> identical injection on a local
+    pool and a CREAM-Shard pool (global row r lives at shard r % S, local
+    row r // S — the router convention). Page-level parity is asserted in
+    the SECDED region, whose layout is row-local and therefore identical
+    in both planes; the CREAM region wraps page data over a *group* of
+    rows, and each shard groups its own (strided) local rows, so there the
+    contract is cell-level: same global storage cells flip either way."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.shard import make_sharded_pool
+    S = min(4, jax.device_count())
+    num_rows = 32
+    rng = np.random.default_rng(3)
+    mix = ErrorMix(single=0.7, adjacent_double=0.2, random_double=0.1)
+    pages = jnp.arange(num_rows)
+
+    # part 1: all-SECDED pool, end-to-end page/status parity
+    data = rng.integers(0, 2**32, size=(num_rows, 8 * 64), dtype=np.uint32)
+    local = make_pool(num_rows, Layout.INTERWRAP, boundary=0, row_words=64)
+    local = local.write_pages(pages, jnp.asarray(data))
+    sharded = make_sharded_pool(num_rows, Layout.INTERWRAP, boundary=0,
+                                num_shards=S, row_words=64)
+    sharded = sharded.write_pages(pages, jnp.asarray(data))
+    fm_l = FaultModel.make(11, soft_rate=0.0, shape=(num_rows, 9, 64),
+                           mix=mix, n_hard=3)
+    fm_s = FaultModel.make(11, soft_rate=0.0, shape=(num_rows, 9, 64),
+                           mix=mix, n_hard=3)
+    # give the soft process something to do (same accelerated rate)
+    fm_l.soft_rate_per_gb_per_step = fm_s.soft_rate_per_gb_per_step = 1e7
+    local, n_l = fm_l.step_pool(local)
+    sharded, n_s = fm_s.step_pool(sharded)
+    assert n_l == n_s > 0
+    got_l, st_l = local.read_pages_status(pages)
+    got_s, st_s = sharded.read_pages_status(pages)
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(got_s))
+    np.testing.assert_array_equal(np.asarray(st_l), np.asarray(st_s))
+
+    # part 2: all-CREAM pool, cell-level parity on planted raw storage
+    raw = rng.integers(0, 2**32, size=(num_rows, 9, 64), dtype=np.uint32)
+    local2 = dataclasses.replace(
+        make_pool(num_rows, Layout.INTERWRAP, boundary=num_rows,
+                  row_words=64),
+        storage=jnp.asarray(raw))
+    sh2 = make_sharded_pool(num_rows, Layout.INTERWRAP, boundary=num_rows,
+                            num_shards=S, row_words=64)
+    planted = raw.reshape(num_rows // S, S, 9, 64).swapaxes(0, 1)
+    sh2 = dataclasses.replace(
+        sh2, storage=jax.device_put(
+            jnp.asarray(planted), NamedSharding(sh2.mesh, P("banks"))))
+    fm_l2 = FaultModel.make(13, soft_rate=0.0, shape=(num_rows, 9, 64),
+                            mix=mix, n_hard=2)
+    fm_s2 = FaultModel.make(13, soft_rate=0.0, shape=(num_rows, 9, 64),
+                            mix=mix, n_hard=2)
+    fm_l2.soft_rate_per_gb_per_step = 1e7
+    fm_s2.soft_rate_per_gb_per_step = 1e7
+    local2, n2_l = fm_l2.step_pool(local2)
+    sh2, n2_s = fm_s2.step_pool(sh2)
+    assert n2_l == n2_s > 0
+    rec = np.asarray(sh2.storage).swapaxes(0, 1).reshape(num_rows, 9, 64)
+    np.testing.assert_array_equal(rec, np.asarray(local2.storage))
+
+
+# -- the SLO escalation loop, unit level --------------------------------------
+
+def test_auto_escalation_via_zero_loss_migration():
+    vm = VirtualMemory(row_words=64)
+    vm.add_pool("p", 32, Layout.INTERWRAP, boundary=16)   # 16 NONE + extras
+    vm.create_tenant("t", segments={"seg": Protection.NONE})
+    policy = VMPolicy(vm)
+    policy.set_tenant_slo("t", "seg", TenantSLO(max_error_rate=1e-2,
+                                                min_reads=10))
+    vpns = vm.alloc("t", 4, segment="seg")
+    payload = np.arange(4 * vm.page_words, dtype=np.uint32).reshape(4, -1)
+    vm.write("t", vpns, payload)
+    assert all(vm.effective_protection("t", v) == Protection.NONE
+               for v in vpns)
+    policy.observe_reads("t", "seg", reads=100, silent=5)
+    done = policy.auto_escalate()
+    assert len(done) == 1
+    esc = done[0]
+    assert esc["from"] == Protection.NONE
+    assert esc["to"] == Protection.PARITY and esc["moved"] == 4
+    # contract updated everywhere: segment default + every PTE
+    assert vm.tenants["t"].segments["seg"] == Protection.PARITY
+    # pages landed on frames of class >= PARITY (SECDED here), zero loss
+    for v in vpns:
+        assert vm.effective_protection("t", v) in (Protection.PARITY,
+                                                   Protection.SECDED)
+    np.testing.assert_array_equal(vm.read("t", vpns), payload)
+    # a second breach escalates the rest of the way, then caps out
+    policy.observe_reads("t", "seg", reads=100, silent=5)
+    assert [e["to"] for e in policy.auto_escalate()] == [Protection.SECDED]
+    policy.observe_reads("t", "seg", reads=100, silent=5)
+    assert policy.auto_escalate() == []      # already at the ceiling
+
+
+# -- the end-to-end acceptance campaign ---------------------------------------
+
+@pytest.fixture(scope="module")
+def campaign_run():
+    """Serve a paid + batch trace under memcached-FIT injection with the
+    closed loop armed; hand the final state to the assertions."""
+    num_rows = 64
+    boundary = 2 * GROUP_ROWS        # 16 NONE rows (+2 extras), 48 SECDED
+    vm = VirtualMemory(row_words=64)
+    vm.add_pool("kv", num_rows, Layout.INTERWRAP, boundary=boundary)
+    eng = Engine(CFG, max_batch=4, max_len=48, vm=vm, pool="kv",
+                 mode="cream", row_words=64, max_sessions=32)
+    policy = VMPolicy(vm)
+    policy.set_tenant_slo("serve", "batch",
+                          TenantSLO(max_error_rate=1e-3, min_reads=64,
+                                    ceiling=Protection.SECDED))
+    hours = hours_for_expected_flips(
+        MEMCACHED_FIT, int(np.asarray(vm.pools["kv"].storage).nbytes), 5.0)
+    campaign = FaultCampaign(vm, "kv", policy=policy, engine=eng,
+                             fit_per_mbit=MEMCACHED_FIT,
+                             hours_per_step=hours, mix=SINGLES,
+                             n_hard=0, seed=5)
+    rng = np.random.default_rng(5)
+    prompts = {s: rng.integers(0, CFG.vocab_size, size=12).astype(np.int32)
+               for s in range(4)}
+    reqs = [ServeRequest(f"s{s}", prompts[s], 6,
+                         tier="paid" if s == 0 else "batch")
+            for _ in range(6) for s in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    done = []
+    while eng.sched.has_work():
+        done.extend(eng.poll())
+        campaign.tick()
+        if campaign.steps % 3 == 0:  # periodic repair: singles get READ
+            policy.scrub_all()       # (-> corrected) before they pair up
+    campaign.observe()
+    report = campaign.report()
+    campaign.detach()
+    return vm, eng, policy, campaign, report, done, reqs
+
+
+def test_paid_secded_zero_corrupted_tokens(campaign_run):
+    vm, eng, policy, campaign, report, done, reqs = campaign_run
+    assert campaign.injected > 0, "campaign never injected"
+    cen = report.census["secded"]
+    assert cen.reads > 0
+    # the paid-tier guarantee: nothing silent, ever (structural), and with
+    # per-tick scrubbing nothing uncorrectable either -> every token the
+    # SECDED class served was computed from exact, correct bytes
+    assert cen.silent == 0
+    assert cen.detected == 0
+    assert cen.corrected > 0         # the injection did hit SECDED pages
+
+
+def test_batch_degrades_and_auto_upgrades(campaign_run):
+    vm, eng, policy, campaign, report, done, reqs = campaign_run
+    # batch/NONE pages silently corrupted (caught only by the oracle) ...
+    assert report.census["none"].silent > 0
+    # ... every request still completed (graceful degradation) ...
+    assert len(done) == len(reqs)
+    # ... and the SLO loop upgraded the batch segment within the run
+    assert report.escalations, "tenant SLO never escalated"
+    assert campaign.first_escalation_step is not None
+    assert campaign.first_escalation_step <= 40
+    first = report.escalations[0]
+    assert first["tenant"] == "serve" and first["segment"] == "batch"
+    assert first["moved"] > 0
+    # post-escalation, every device-resident batch page sits on a frame
+    # at least as strong as the escalated contract
+    target = vm.tenants["serve"].segments["batch"]
+    space = vm.tenants["serve"]
+    for vpn, pte in space.entries.items():
+        if pte.segment == "batch" and pte.pool is not None:
+            from repro.core.protection import at_least
+            assert at_least(vm.effective_protection("serve", vpn), target)
+
+
+def test_observations_flow_into_monitor_and_slo(campaign_run):
+    vm, eng, policy, campaign, report, done, reqs = campaign_run
+    from repro.obs import slo
+    # class-level counts reached the global tracker ...
+    assert slo.TRACKER.classes["none"].silent > 0
+    assert slo.TRACKER.classes["secded"].silent == 0
+    # ... the per-tenant census too (scoped tenant/segment) ...
+    assert slo.TRACKER.tenants["serve/batch"].reads > 0
+    # ... and the monitor's windowed rate saw the campaign errors
+    assert policy.monitor.rate("kv") > 0
+    report_rows = slo.TRACKER.report()
+    assert any(s.scope == "tenant/serve/batch" for s in report_rows)
+
+
+def test_shadow_survives_repartition():
+    """Boundary moves through the wrapper keep oracle and allocator sane."""
+    from repro.faults import ShadowedPool
+    vm = VirtualMemory(row_words=64)
+    vm.add_pool("p", 32, Layout.INTERWRAP, boundary=16)
+    sh = ShadowedPool(vm.pools["p"])
+    vm.pools["p"] = sh
+    vm.create_tenant("t", segments={"seg": Protection.NONE})
+    vpns = vm.alloc("t", 3, segment="seg")
+    payload = np.arange(3 * vm.page_words, dtype=np.uint32).reshape(3, -1)
+    vm.write("t", vpns, payload)
+    from repro.vm.migration import MigrationEngine
+    eng = MigrationEngine(vm)
+    eng.repartition_with_migration("p", 32)      # grow CREAM under the oracle
+    assert vm.pools["p"] is sh                   # wrapper survived
+    np.testing.assert_array_equal(vm.read("t", vpns), payload)
+    eng.repartition_with_migration("p", 0)       # all-SECDED, extras doomed
+    np.testing.assert_array_equal(vm.read("t", vpns), payload)
+    assert sh.num_pages == 32
+
+
+def test_faultmodel_sticky_hard_cells():
+    pool = make_pool(16, Layout.INTERWRAP, boundary=0, row_words=64)
+    fm = FaultModel.make(2, soft_rate=0.0, n_hard=4, shape=(16, 9, 64))
+    pool, n = fm.step_pool(pool)
+    assert n == 4
+    pool, stats = pool.scrub()                   # repair in place
+    assert stats.corrected > 0
+    pool, n = fm.step_pool(pool)                 # stuck-at-1 re-asserts
+    arr = np.asarray(pool.storage)
+    for c in fm.hard_cells:
+        assert arr[c.row, c.lane, c.word] & np.uint32(1 << c.bit)
