@@ -25,6 +25,16 @@ Per shard count S in {1, 2, 4, 8}:
   * ``fig9_real_migrate_us_s{max}`` — cross-shard live migration through
     the explicit ppermute ring exchange.
 
+Every per-S row carries a ``shards=S`` label, so speedup, router cost and
+the CREAM-Lens bank profile join on one key. With the memory profiler on
+(``benchmarks/run.py --memprof``), each shard count additionally captures
+one aligned-streams round trip and one routed read through
+:mod:`repro.obs.memprof`, publishes the replayed bank profiles as
+``s{S}/streams`` and ``s{S}/router``, and emits the headline stats as
+``fig9_memprof_*_sS`` rows (achieved BLP, row-hit/conflict rate,
+tFAW-stall cycles, queue p99, extra-chip fraction). Capture is suspended
+during the timed loops so the profiler never perturbs the measured rows.
+
 Env: ``REPRO_SHARD_ROWS`` (global rows, default 128), ``REPRO_SHARD_STREAM``
 (pages per stream per dispatch, default 64), ``REPRO_SHARD_ROW_WORDS``
 (default 64 -> 2KB pages), ``REPRO_SHARD_REPS`` (default 30). Shard counts
@@ -57,12 +67,54 @@ def _bench(fn, reps: int, windows: int = 5) -> float:
     return best
 
 
+def _memprof_capture(S: int, pool, streams, data, gids, out: list) -> None:
+    """One profiled round trip per path, published + emitted as rows.
+
+    Two captures per shard count, kept separate so the attribution can
+    contrast them: ``s{S}/streams`` (the bank-aligned hot path — one
+    ``read_streams`` + one ``write_streams``) and ``s{S}/router`` (the
+    owner-select routed read of random global ids).
+    """
+    import jax
+
+    from repro import shard
+    from repro.obs import memprof
+
+    memprof.enable()
+    memprof.reset()
+    jax.block_until_ready(shard.read_streams(pool, streams))
+    jax.block_until_ready(shard.write_streams(pool, streams, data).storage)
+    prof_s = memprof.profile()
+    memprof.publish(f"s{S}/streams", prof_s)
+    memprof.reset()
+    jax.block_until_ready(pool.read_pages(gids))
+    prof_r = memprof.profile()
+    memprof.publish(f"s{S}/router", prof_r)
+    memprof.reset()
+    memprof.disable()
+    o, r = prof_s["overall"], prof_r["overall"]
+    lab = f"shards={S},path=streams"
+    out.append((f"fig9_memprof_blp_s{S}", o["achieved_blp"], lab))
+    out.append((f"fig9_memprof_row_hit_rate_s{S}", o["row_hit_rate"], lab))
+    out.append((f"fig9_memprof_conflict_rate_s{S}", o["conflict_rate"], lab))
+    out.append((f"fig9_memprof_tfaw_stall_cycles_s{S}",
+                o["tfaw_stall_cycles"], lab))
+    out.append((f"fig9_memprof_queue_p99_s{S}", o["queue_p99"], lab))
+    out.append((f"fig9_memprof_extra_chip_frac_s{S}",
+                o["extra_chip_frac"], lab))
+    rlab = f"shards={S},path=owner-select"
+    out.append((f"fig9_memprof_router_blp_s{S}", r["achieved_blp"], rlab))
+    out.append((f"fig9_memprof_router_conflict_rate_s{S}",
+                r["conflict_rate"], rlab))
+
+
 def main(seed: int = 0):
     import jax
     import jax.numpy as jnp
 
     from repro import shard
     from repro.core.layouts import Layout
+    from repro.obs import memprof
 
     rows = int(os.environ.get("REPRO_SHARD_ROWS", 128))
     stream_pages = int(os.environ.get("REPRO_SHARD_STREAM", 64))
@@ -79,38 +131,52 @@ def main(seed: int = 0):
             print(f"# bench_shard: skipping {s} shards "
                   f"(only {ndev} devices)", flush=True)
     last_pool = None
-    for S in counts:
-        pool = shard.make_sharded_pool(rows, Layout.INTERWRAP,
-                                       boundary=rows // 2, num_shards=S,
-                                       row_words=row_words)
-        r_local = rows // S
-        # bank-aligned streams: stream s draws its own bank's pages across
-        # both regions (CREAM rows *and* SECDED rows -> decode work)
-        local = rng.integers(0, r_local, (S, stream_pages))
-        streams = jnp.asarray(local * S + np.arange(S)[:, None], jnp.int32)
-        data = jnp.asarray(rng.integers(
-            0, 2**32, (S, stream_pages, pool.page_words), dtype=np.uint32))
-        pool = shard.write_streams(pool, streams, data)
-        total = S * stream_pages
+    # suspend capture during the timed loops: the hooks' host-side copy
+    # would perturb exactly the rows this suite baselines
+    profiling = memprof.enabled()
+    if profiling:
+        memprof.disable()
+    try:
+        for S in counts:
+            pool = shard.make_sharded_pool(rows, Layout.INTERWRAP,
+                                           boundary=rows // 2, num_shards=S,
+                                           row_words=row_words)
+            r_local = rows // S
+            # bank-aligned streams: stream s draws its own bank's pages
+            # across both regions (CREAM rows *and* SECDED rows -> decode)
+            local = rng.integers(0, r_local, (S, stream_pages))
+            streams = jnp.asarray(local * S + np.arange(S)[:, None],
+                                  jnp.int32)
+            data = jnp.asarray(rng.integers(
+                0, 2**32, (S, stream_pages, pool.page_words),
+                dtype=np.uint32))
+            pool = shard.write_streams(pool, streams, data)
+            total = S * stream_pages
 
-        t_read = _bench(lambda: shard.read_streams(pool, streams), reps)
-        read_t[S] = t_read
-        out.append((f"fig9_real_read_us_s{S}", t_read * 1e6 / total,
-                    f"shards={S},pages={total},rows={rows}"))
+            t_read = _bench(lambda: shard.read_streams(pool, streams), reps)
+            read_t[S] = t_read
+            out.append((f"fig9_real_read_us_s{S}", t_read * 1e6 / total,
+                        f"shards={S},pages={total},rows={rows}"))
 
-        t_write = _bench(
-            lambda: shard.write_streams(pool, streams, data).storage, reps)
-        out.append((f"fig9_real_write_us_s{S}", t_write * 1e6 / total,
-                    f"shards={S},pages={total}"))
+            t_write = _bench(
+                lambda: shard.write_streams(pool, streams, data).storage,
+                reps)
+            out.append((f"fig9_real_write_us_s{S}", t_write * 1e6 / total,
+                        f"shards={S},pages={total}"))
 
-        # the general router path: unaligned random global ids
-        gids = jnp.asarray(rng.permutation(pool.num_pages)[:stream_pages],
-                           jnp.int32)
-        t_router = _bench(lambda: pool.read_pages(gids), reps)
-        out.append((f"fig9_real_router_us_s{S}",
-                    t_router * 1e6 / stream_pages,
-                    f"shards={S},pages={stream_pages},path=owner-select"))
-        last_pool = pool
+            # the general router path: unaligned random global ids
+            gids = jnp.asarray(
+                rng.permutation(pool.num_pages)[:stream_pages], jnp.int32)
+            t_router = _bench(lambda: pool.read_pages(gids), reps)
+            out.append((f"fig9_real_router_us_s{S}",
+                        t_router * 1e6 / stream_pages,
+                        f"shards={S},pages={stream_pages},path=owner-select"))
+            if profiling:
+                _memprof_capture(S, pool, streams, data, gids, out)
+            last_pool = pool
+    finally:
+        if profiling:
+            memprof.enable()
 
     # paper metrics, normalised to the single-bank pool
     paper = {2: None, 4: None, 8: 1.024}   # Fig. 9 Inter-Wrap reference
@@ -119,8 +185,8 @@ def main(seed: int = 0):
         lat = read_t[S] / read_t[counts[0]]
         ref = f",paper_interwrap={paper[S]:.3f}" if paper.get(S) else ""
         out.append((f"fig9_real_ws_s{S}", ws,
-                    f"streams={S},t_us={read_t[S]*1e6:.0f}{ref}"))
-        out.append((f"fig9_real_lat_s{S}", lat, f"streams={S}"))
+                    f"shards={S},streams={S},t_us={read_t[S]*1e6:.0f}{ref}"))
+        out.append((f"fig9_real_lat_s{S}", lat, f"shards={S},streams={S}"))
 
     # cross-shard migration through the ppermute ring (largest mesh)
     if last_pool is not None and last_pool.num_shards > 1:

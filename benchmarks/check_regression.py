@@ -19,6 +19,7 @@ Usage::
 
     python benchmarks/check_regression.py [--baseline benchmarks/baselines]
         [--fresh .] [--tolerance 1.5] [--suites vm,kernels]
+        [--require-rows 'fig9_.*_blp']   # presence gate, no baseline needed
         [--update]        # rewrite baselines from fresh (rebaselining)
 
 Exit status 0 = within tolerance, 1 = regression (every violation listed).
@@ -35,10 +36,12 @@ import sys
 #: treated as a cost (us/call, latency ms) where smaller is better. Covers
 #: the current suites: weighted speedups (`fig9_real_ws_*`), reclaimed-
 #: capacity page counts (`vm_*_capacity`), the objcache demotion hit-rate
-#: gain (`objcache_demotion`), and the serving suite's token throughput
-#: (`serving_*_tokens_per_s`) and CREAM speedups (`serving_*_speedup`).
+#: gain (`objcache_demotion`), the serving suite's token throughput
+#: (`serving_*_tokens_per_s`) and CREAM speedups (`serving_*_speedup`),
+#: and the CREAM-Lens achieved bank-level parallelism (`fig9_memprof_*blp`;
+#: its conflict/stall/queue companions default to lower-is-better).
 HIGHER_IS_BETTER = ("_ws_", "hit_rate", "hitrate", "speedup", "_gain",
-                    "_capacity", "demotion", "_per_s")
+                    "_capacity", "demotion", "_per_s", "_blp")
 
 #: Substrings marking metrics where *smaller* is better — checked FIRST,
 #: so a rate row can never be mis-read through a HIGHER_IS_BETTER tag it
@@ -137,6 +140,38 @@ def check(baseline_dir: str, fresh_dir: str, tolerance: float,
     return violations
 
 
+def check_required(fresh_dir: str, pattern: str,
+                   suites: set[str] | None = None) -> list[str]:
+    """Presence gate: >= 1 fresh row must match ``pattern``, all finite.
+
+    Unlike the relative gate above, this needs no baseline: it asserts a
+    row *family* exists at all (e.g. the CI ``--memprof`` run must emit
+    ``fig9_.*_blp`` rows) and that none of the matches is NaN/inf — a
+    profiler that silently captured nothing would otherwise pass.
+    """
+    import math
+    import re
+    rx = re.compile(pattern)
+    matched = 0
+    bad: list[str] = []
+    for fpath in sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json"))):
+        suite = _suite_of(fpath)
+        if suite is None or (suites is not None and suite not in suites):
+            continue
+        for name, val in sorted(_load(fpath).items()):
+            if rx.search(name):
+                matched += 1
+                if math.isnan(val) or math.isinf(val):
+                    bad.append(f"{suite}/{name}: required row is {val}")
+    if not matched:
+        bad.append(f"no fresh rows match required pattern {pattern!r}")
+    else:
+        print(f"# required-rows gate: {matched} row(s) match "
+              f"{pattern!r}, all finite" if not bad else
+              f"# required-rows gate: {matched} row(s) match {pattern!r}")
+    return bad
+
+
 def update(baseline_dir: str, fresh_dir: str,
            suites: set[str] | None = None) -> None:
     os.makedirs(baseline_dir, exist_ok=True)
@@ -163,12 +198,17 @@ def main() -> None:
                     help="comma-separated subset (default: every baseline)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite baselines from the fresh files and exit")
+    ap.add_argument("--require-rows", default=None, metavar="REGEX",
+                    help="additionally require >= 1 fresh row matching REGEX"
+                         ", all finite (presence gate, no baseline needed)")
     args = ap.parse_args()
     suites = set(args.suites.split(",")) if args.suites else None
     if args.update:
         update(args.baseline, args.fresh, suites)
         return
     violations = check(args.baseline, args.fresh, args.tolerance, suites)
+    if args.require_rows:
+        violations += check_required(args.fresh, args.require_rows, suites)
     if violations:
         print(f"BENCH REGRESSION ({len(violations)} violation(s), "
               f"tolerance {args.tolerance}x):", file=sys.stderr)

@@ -21,7 +21,10 @@ suite's partial rows land in ``BENCH_<suite>.partial.json`` so the
 trajectory survives without poisoning the regression gate
 (``benchmarks/check_regression.py`` reads only the non-partial files).
 ``--seed N`` is forwarded to every suite whose entry point accepts a
-``seed`` keyword.
+``seed`` keyword. ``--memprof`` attaches CREAM-Lens
+(:mod:`repro.obs.memprof`): each suite's captured page-access streams are
+replayed through the per-bank DRAM state machines and the resulting bank
+profile is embedded as ``_memprof`` + written to ``MEMPROF_<suite>.json``.
 """
 import argparse
 import inspect
@@ -71,13 +74,24 @@ def main() -> None:
                          "metrics snapshot (_metrics) into each "
                          "BENCH_<suite>.json and write TRACE_<suite>.json "
                          "(Perfetto) + METRICS_<suite>.prom next to them")
+    ap.add_argument("--memprof", action="store_true",
+                    help="attach CREAM-Lens: capture the data plane's page-"
+                         "access streams, replay them through the per-bank "
+                         "DRAM state machines, embed the bank profile "
+                         "(_memprof) into each BENCH_<suite>.json, write "
+                         "MEMPROF_<suite>.json, and (with --profile) add "
+                         "Perfetto counter tracks to TRACE_<suite>.json")
     args = ap.parse_args()
-    if args.profile:
+    if args.profile or args.memprof:
         from repro.obs import metrics as obs_metrics
         from repro.obs import slo as obs_slo
         from repro.obs import tracing as obs_tracing
+    if args.profile:
         obs_metrics.enable()
         obs_tracing.enable()
+    if args.memprof:
+        from repro.obs import memprof as obs_memprof
+        obs_memprof.enable()
     if args.only:
         wanted = set(args.only.split(","))
         unknown = wanted - {s for s, _ in suites}
@@ -99,6 +113,8 @@ def main() -> None:
             obs_metrics.reset()
             obs_tracing.reset()
             obs_slo.TRACKER.reset()
+        if args.memprof:
+            obs_memprof.clear()         # records AND published profiles
         try:
             for name, val, derived in fn(**kwargs):
                 print(f"{name},{val:.3f},{derived}", flush=True)
@@ -108,6 +124,19 @@ def main() -> None:
             suite_ok = False
             print(f"{suite},nan,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+        if args.memprof:
+            blob = obs_memprof.collect()    # also exports cream_dram_* gauges
+            if blob["profiles"] or blob["records"]:
+                results["_memprof"] = blob
+                outdir = args.json if args.json is not None else "."
+                os.makedirs(outdir, exist_ok=True)
+                mp_path = os.path.join(outdir, f"MEMPROF_{suite}.json")
+                with open(mp_path, "w") as f:
+                    json.dump(blob, f, indent=2, sort_keys=True)
+                print(f"# wrote MEMPROF_{suite}.json", flush=True)
+                if args.profile:
+                    # bank-occupancy counter lanes next to the spans
+                    obs_tracing.TRACER.extend(obs_memprof.counter_events(blob))
         if args.profile:
             outdir = args.json if args.json is not None else "."
             os.makedirs(outdir, exist_ok=True)

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import parity8, secded
+from repro.obs import memprof
 from repro.core.layouts import (CODE_LANE, DATA_LANES, DEFAULT_ROW_WORDS,
                                 GROUP_ROWS, LANES, REGION_SECDED, Layout,
                                 PagePlacement, extra_page_count, page_coords,
@@ -129,6 +130,22 @@ class PoolState:
         from repro.core.scrubber import scrub as _scrub
         return _scrub(self, use_kernel=use_kernel)
 
+    def memprof_record(self, op: str, pages, stream: str = "main") -> None:
+        """Feed one dispatch to CREAM-Lens (no-op unless memprof enabled).
+
+        Owners with context the pool can't see (the serving engine's fused
+        decode gather, the object cache) call this directly; the jit
+        wrappers below call it implicitly. Traced ``pages`` (or traced
+        storage, i.e. *we* are inside someone's jit) are skipped — capture
+        records execution, not tracing.
+        """
+        if not memprof.enabled() or isinstance(pages, jax.core.Tracer) \
+                or isinstance(self.storage, jax.core.Tracer):
+            return
+        memprof.record(op, np.asarray(pages), layout=self.layout,
+                       num_rows=self.num_rows, boundary=self.boundary,
+                       row_words=self.row_words, stream=stream)
+
 
 @runtime_checkable
 class PoolLike(Protocol):
@@ -161,6 +178,7 @@ class PoolLike(Protocol):
     def evict_prediction(self, new_boundary) -> list[int]: ...      # noqa: E704
     def move_boundary(self, new_boundary) -> tuple: ...             # noqa: E704
     def scrub(self, use_kernel: bool = False) -> tuple: ...         # noqa: E704
+    def memprof_record(self, op, pages, stream="main") -> None: ... # noqa: E704
 
 
 def make_pool(num_rows: int, layout: Layout = Layout.INTERWRAP,
@@ -374,6 +392,7 @@ def read_pages_any_status(state: PoolState, pages
     0 or DETECTED_UNCORRECTABLE, unprotected pages report 0.
     """
     pages = _as_page_array(state, pages)
+    state.memprof_record("gather", pages)   # no-op when traced or disabled
     n = pages.shape[0]
     if n == 0:
         return (jnp.zeros((0, state.page_words), jnp.uint32),
@@ -426,6 +445,7 @@ def write_pages_any(state: PoolState, pages, data: jax.Array,
     and lands only the pages it owns.
     """
     pages = _as_page_array(state, pages)
+    state.memprof_record("scatter", pages)  # no-op when traced or disabled
     n = pages.shape[0]
     if n == 0:
         return state
@@ -474,13 +494,17 @@ _write_pages_any_jitted = jax.jit(write_pages_any, donate_argnums=(0,))
 
 def read_pages_any_jit(state: PoolState, pages) -> jax.Array:
     """Jitted :func:`read_pages_any` (validates concrete ids host-side)."""
-    return _read_pages_any_jitted(state, _as_page_array(state, pages))
+    arr = _as_page_array(state, pages)
+    state.memprof_record("gather", arr)
+    return _read_pages_any_jitted(state, arr)
 
 
 def read_pages_any_status_jit(state: PoolState, pages
                               ) -> tuple[jax.Array, jax.Array]:
     """Jitted :func:`read_pages_any_status` (validates concrete ids)."""
-    return _read_pages_any_status_jitted(state, _as_page_array(state, pages))
+    arr = _as_page_array(state, pages)
+    state.memprof_record("gather", arr)
+    return _read_pages_any_status_jitted(state, arr)
 
 
 def write_pages_any_jit(state: PoolState, pages, data: jax.Array
@@ -491,7 +515,9 @@ def write_pages_any_jit(state: PoolState, pages, data: jax.Array
     buffer donation — only use it when the old state is dropped immediately
     (as ``repro.vm`` does).
     """
-    return _write_pages_any_jitted(state, _as_page_array(state, pages), data)
+    arr = _as_page_array(state, pages)
+    state.memprof_record("scatter", arr)
+    return _write_pages_any_jitted(state, arr, data)
 
 
 @partial(jax.jit, donate_argnums=(2,))

@@ -52,6 +52,7 @@ from repro.kernels.hash import ops as hash_ops
 from repro.objcache import hash_index as hix
 from repro.objcache.hash_index import HashIndex
 from repro.objcache.slab import SlabAllocator
+from repro.obs import memprof as obs_memprof
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
 from repro.vm.address_space import VirtualMemory
@@ -357,6 +358,8 @@ class ObjCache:
         pages = np.where(admitted, self._phys[vpn], 0)
         # 3) data plane: one RMW gather + chunk scatter + coded write-back
         upages, inv = np.unique(pages[sub], return_inverse=True)
+        # the fused RMW bypasses the pool wrappers: feed CREAM-Lens here
+        self.pool.memprof_record("scatter", upages, stream="objcache")
         self.vm.pools[self.pool_name] = _write_values(
             self.pool, jnp.asarray(upages, jnp.int32),
             jnp.asarray(inv, jnp.int32), jnp.asarray(off[sub], jnp.int32),
@@ -422,6 +425,9 @@ class ObjCache:
         lens, slot, found = jax.device_get((lens_d, slot_d, found_d))
         hs = slot[found]
         if len(hs):
+            if obs_memprof.enabled():   # fused probe+gather bypasses wrappers
+                self.pool.memprof_record("gather", self._phys[self._vpn[hs]],
+                                         stream="objcache")
             # 2Q: a re-referenced item promotes probation -> main
             self._clock += 1
             self._last[hs] = self._clock

@@ -16,12 +16,17 @@ by the existing fused reads and *folded* into the registry between steps):
   * :mod:`repro.obs.slo` + :mod:`repro.obs.dashboard` — per-reliability-
     class SLO tracking (uncorrectable reads on SECDED frames must be 0;
     capacity reclaimed rides the boundary register) and a terminal
-    snapshot dashboard (``tools/creamtop.py``).
+    snapshot dashboard (``tools/creamtop.py``);
+  * :mod:`repro.obs.memprof` — CREAM-Lens, the bank-level memory-system
+    profiler: captures the data plane's page-access streams, attributes
+    them to (chip, bank, row) via the layout translation, and replays
+    them through the per-bank state machines in ``benchmarks/dram_sim``
+    (row-buffer hits/conflicts, achieved BLP, tRRD/tFAW stalls).
 
-Everything is opt-in: with both planes disabled (the default) every
+Everything is opt-in: with all planes disabled (the default) every
 instrumentation site reduces to one boolean check, so the hot paths stay
 one-gather/one-scatter with no extra dispatches.
 """
-from repro.obs import dashboard, metrics, slo, tracing
+from repro.obs import dashboard, memprof, metrics, slo, tracing
 
-__all__ = ["metrics", "tracing", "slo", "dashboard"]
+__all__ = ["metrics", "tracing", "slo", "dashboard", "memprof"]

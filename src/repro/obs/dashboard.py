@@ -94,6 +94,50 @@ def render_metrics(snap: dict) -> str:
     return "\n".join(lines)
 
 
+#: Heat ramp for the bank heatmap, coolest -> hottest.
+_HEAT = " .:-=+*#@"
+
+
+def render_bank_heatmap(memprof_blob: dict) -> str:
+    """Render CREAM-Lens bank heatmaps from a ``_memprof`` blob.
+
+    One 9-chip x 8-bank panel per replayed profile (rows = chips, with
+    chip 8 the code/extra chip; columns = banks), each cell shaded by its
+    share of the profile's hottest bank, plus the headline stats the
+    profile carries (achieved BLP, row hit rate, tFAW stalls). This is
+    the ``tools/creamtop.py --bench`` view of where bank-level
+    parallelism actually lands.
+    """
+    lines = [_rule("="), "DRAM BANK PROFILE (CREAM-Lens)".center(_W),
+             _rule("=")]
+    profiles = memprof_blob.get("profiles", {})
+    if not profiles:
+        lines.append("(no bank profiles captured — run with --memprof)")
+        return "\n".join(lines)
+    for pname, prof in sorted(profiles.items()):
+        o = prof.get("overall", {})
+        lines.append(f"[{pname}]  streams={o.get('streams', 0)} "
+                     f"accesses={o.get('accesses', 0)} "
+                     f"blp={o.get('achieved_blp', 0.0):.2f} "
+                     f"row_hit={o.get('row_hit_rate', 0.0):.1%} "
+                     f"conflict={o.get('conflict_rate', 0.0):.1%} "
+                     f"tfaw_stall={o.get('tfaw_stall_cycles', 0)}cy "
+                     f"extra_chip={o.get('extra_chip_frac', 0.0):.1%}")
+        heat = o.get("heatmap") or []
+        peak = max((n for row in heat for n in row), default=0)
+        lines.append("        " + " ".join(f"b{b}" for b in
+                                           range(len(heat[0]) if heat else 0)))
+        for chip, row in enumerate(heat):
+            tag = "code" if chip == 8 else f"  c{chip}"
+            cells = " ".join(
+                (_HEAT[min(len(_HEAT) - 1,
+                           (n * (len(_HEAT) - 1) + peak - 1) // peak)]
+                 if peak else " ") * 2 for n in row)
+            lines.append(f"  {tag}  {cells}")
+        lines.append(_rule())
+    return "\n".join(lines)
+
+
 def render(snap: dict | None = None,
            statuses: list[_slo.SLOStatus] | None = None) -> str:
     """The full dashboard: SLO verdicts on top, metric sections below.

@@ -302,6 +302,14 @@ NAME_RESTORES = "cream_restores_total"
 NAME_OBJCACHE_OPS = "cream_objcache_ops_total"
 NAME_SHARD_DISPATCH = "cream_shard_dispatch_total"
 NAME_SHARD_RING_PAGES = "cream_shard_ring_pages_total"
+# CREAM-Lens (repro.obs.memprof) replayed bank-profile series
+NAME_DRAM_ROW_HIT_RATE = "cream_dram_bank_row_hit_rate"
+NAME_DRAM_CONFLICT_RATE = "cream_dram_bank_conflict_rate"
+NAME_DRAM_BLP = "cream_dram_bank_blp"
+NAME_DRAM_TFAW_STALL = "cream_dram_bank_tfaw_stall_cycles"
+NAME_DRAM_QUEUE_P99 = "cream_dram_bank_queue_p99"
+NAME_DRAM_EXTRA_CHIP = "cream_dram_bank_extra_chip_frac"
+NAME_DRAM_ACCESSES = "cream_dram_bank_accesses_total"
 
 #: Storage classes in fold order (index into the device-side count matrix).
 FOLD_CLASSES = ("secded", "parity", "none")

@@ -100,6 +100,12 @@ class Tracer:
     def events(self) -> list[dict]:
         return self._events
 
+    def extend(self, events: list[dict]) -> None:
+        """Append pre-built chrome-tracing events (e.g. CREAM-Lens counter
+        tracks, ``"ph": "C"``) so they export alongside the spans.
+        Unconditional: exporters inject into a buffer they already own."""
+        self._events.extend(events)
+
     def reset(self) -> None:
         self._events = []
 

@@ -45,6 +45,7 @@ from repro.core.pool import PoolState
 from repro.kernels.mixed import ops as mixed_ops
 from repro.models import build_model
 from repro.models import transformer
+from repro.obs import memprof as obs_memprof
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
 from repro.serve.paged_kv import PagedKV, token_words_for
@@ -252,6 +253,9 @@ class Engine:
         ``read_pages`` dispatch."""
         pool = self.pool
         if isinstance(pool, PoolState):
+            # the fused read bypasses the pool's wrappers, so feed
+            # CREAM-Lens here (sharded pools record inside read_pages)
+            pool.memprof_record("gather", phys, stream="decode")
             return self._mixed_read(pool.storage,
                                     jnp.asarray(phys, jnp.int32),
                                     layout=pool.layout,
@@ -267,6 +271,7 @@ class Engine:
         pool = self.pool
         pages = jnp.asarray(phys, jnp.int32)
         if isinstance(pool, PoolState):
+            pool.memprof_record("gather", phys, stream="decode")
             return _read_correct_counts(pool, pages)
         data, status = pool.read_pages_status(phys)
         counts = _counts_only(pages, status, boundary=pool.boundary,
@@ -319,6 +324,8 @@ class Engine:
         """One decode step over every bound slot: one page gather, one
         model dispatch, one page scatter. Returns requests that finished."""
         self.sched.ensure_step()
+        if obs_memprof.enabled():
+            obs_memprof.next_step()     # one profiler step per decode step
         rows = np.asarray([s.row if s is not None else -1
                            for s in self.sched.slots])
         active = rows >= 0

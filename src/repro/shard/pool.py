@@ -47,6 +47,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 try:                                    # jax >= 0.6 moved it to the top level
@@ -57,6 +58,7 @@ except ImportError:
 from repro.core import pool as pool_lib
 from repro.core.layouts import (GROUP_ROWS, LANES, Layout, extra_page_count)
 from repro.core.pool import PoolState
+from repro.obs import memprof as obs_memprof
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
 from repro.shard import router
@@ -70,6 +72,37 @@ def _note_dispatch(op: str, pages: int) -> None:
         obs_metrics.NAME_SHARD_DISPATCH,
         "routed dispatches through the sharded data plane",
         labels=("op",)).labels(op=op).inc()
+
+
+def _memprof_routed(state: "ShardedPool", op: str, pages,
+                    stream: str = "main") -> None:
+    """Feed one routed dispatch to CREAM-Lens, split per shard.
+
+    Mirrors :func:`repro.shard.router.route` in numpy and records each
+    shard's local id set against the shard's *local* geometry (its own
+    module: ``rows_local`` rows, ``boundary_local``), stream ``bank<s>``
+    — so replay models ``S`` independent BankArrays, exactly the
+    rank-subset hardware the sharding claims to be.
+    """
+    if not obs_memprof.enabled() or isinstance(pages, jax.core.Tracer) \
+            or isinstance(state.storage, jax.core.Tracer):
+        return
+    p = np.asarray(pages, dtype=np.int64).reshape(-1)
+    S = state.num_shards
+    is_extra = p >= state.num_rows
+    e = p - state.num_rows
+    shard = np.where(is_extra, e % S, p % S)
+    local = np.where(is_extra, state.rows_local + e // S, p // S)
+    prefix = "" if stream == "main" else f"{stream}/"
+    for s in range(S):
+        loc = local[shard == s]
+        if loc.size == 0:
+            continue
+        obs_memprof.record(
+            op, loc, layout=state.layout,
+            num_rows=state.rows_local,
+            boundary=state.boundary_local,
+            row_words=state.row_words, stream=f"{prefix}bank{s}")
 
 
 @jax.tree_util.register_dataclass
@@ -157,6 +190,7 @@ class ShardedPool:
     def read_pages(self, pages) -> jax.Array:
         arr = pool_lib._as_page_array(self, pages)
         _note_dispatch("read", arr.shape[0])
+        _memprof_routed(self, "gather", arr)
         with obs_tracing.span("shard.router.dispatch", op="read",
                               pages=arr.shape[0], shards=self.num_shards):
             return _read_any_jitted(self, arr)
@@ -164,6 +198,7 @@ class ShardedPool:
     def read_pages_status(self, pages) -> tuple[jax.Array, jax.Array]:
         arr = pool_lib._as_page_array(self, pages)
         _note_dispatch("read_status", arr.shape[0])
+        _memprof_routed(self, "gather", arr)
         with obs_tracing.span("shard.router.dispatch", op="read_status",
                               pages=arr.shape[0], shards=self.num_shards):
             return _read_any_status_jitted(self, arr)
@@ -171,6 +206,7 @@ class ShardedPool:
     def write_pages(self, pages, data: jax.Array) -> "ShardedPool":
         arr = pool_lib._as_page_array(self, pages)
         _note_dispatch("write", arr.shape[0])
+        _memprof_routed(self, "scatter", arr)
         with obs_tracing.span("shard.router.dispatch", op="write",
                               pages=arr.shape[0], shards=self.num_shards):
             return _write_any_jitted(self, arr, data)
@@ -183,6 +219,10 @@ class ShardedPool:
 
     def scrub(self, use_kernel: bool = False):
         return scrub(self, use_kernel=use_kernel)
+
+    def memprof_record(self, op: str, pages, stream: str = "main") -> None:
+        """Feed one dispatch to CREAM-Lens, routed per shard (PoolLike)."""
+        _memprof_routed(self, op, pages, stream)
 
 
 def make_sharded_pool(num_rows: int, layout: Layout = Layout.INTERWRAP,
@@ -320,19 +360,7 @@ _write_any_jitted = jax.jit(write_any, donate_argnums=(0,))
 # ---------------------------------------------------------------------------
 
 
-@jax.jit
-def read_streams(state: ShardedPool, pages: jax.Array) -> jax.Array:
-    """Serve ``S`` independent request streams, one per bank, concurrently.
-
-    ``pages`` is ``(S, n)`` *global* ids with stream ``s`` touching only
-    shard ``s``'s pages (``page % S == s`` for regular pages) — the caller
-    owns that alignment, mirroring how a bank-aware allocator hands each
-    client its own rank subset. Each shard gathers only its own ``n`` pages
-    (no masking, no replication, no collectives): per-bank work is ``n``
-    pages regardless of ``S``, which is exactly the paper's bank-level
-    parallelism claim. Returns ``(S, n, page_words)``, still sharded over
-    ``banks``.
-    """
+def _read_streams_impl(state: ShardedPool, pages: jax.Array) -> jax.Array:
     S = state.num_shards
     _, local = router.route(pages.reshape(-1), state.num_rows, S)
     local = local.reshape(S, -1)
@@ -347,14 +375,8 @@ def read_streams(state: ShardedPool, pages: jax.Array) -> jax.Array:
         out_specs=P("banks"))(state.storage, local)
 
 
-@jax.jit
-def write_streams(state: ShardedPool, pages: jax.Array,
-                  data: jax.Array) -> ShardedPool:
-    """Per-bank scatter of ``S`` aligned streams (see :func:`read_streams`).
-
-    ``pages`` is ``(S, n)`` shard-aligned global ids, ``data`` is
-    ``(S, n, page_words)``.
-    """
+def _write_streams_impl(state: ShardedPool, pages: jax.Array,
+                        data: jax.Array) -> ShardedPool:
     S = state.num_shards
     _, local = router.route(pages.reshape(-1), state.num_rows, S)
     local = local.reshape(S, -1)
@@ -368,6 +390,41 @@ def write_streams(state: ShardedPool, pages: jax.Array,
         body, mesh=state.mesh, in_specs=(P("banks"), P("banks"), P("banks")),
         out_specs=P("banks"))(state.storage, local, data)
     return dataclasses.replace(state, storage=storage)
+
+
+_read_streams_jitted = jax.jit(_read_streams_impl)
+_write_streams_jitted = jax.jit(_write_streams_impl)
+
+
+def read_streams(state: ShardedPool, pages: jax.Array) -> jax.Array:
+    """Serve ``S`` independent request streams, one per bank, concurrently.
+
+    ``pages`` is ``(S, n)`` *global* ids with stream ``s`` touching only
+    shard ``s``'s pages (``page % S == s`` for regular pages) — the caller
+    owns that alignment, mirroring how a bank-aware allocator hands each
+    client its own rank subset. Each shard gathers only its own ``n`` pages
+    (no masking, no replication, no collectives): per-bank work is ``n``
+    pages regardless of ``S``, which is exactly the paper's bank-level
+    parallelism claim. Returns ``(S, n, page_words)``, still sharded over
+    ``banks``.
+
+    Host wrapper around the jitted dispatch so CREAM-Lens can capture the
+    aligned streams (stream ``bank<s>`` per shard); composes under an
+    enclosing jit unchanged (the hook skips traced operands).
+    """
+    _memprof_routed(state, "gather", pages, stream="streams")
+    return _read_streams_jitted(state, pages)
+
+
+def write_streams(state: ShardedPool, pages: jax.Array,
+                  data: jax.Array) -> ShardedPool:
+    """Per-bank scatter of ``S`` aligned streams (see :func:`read_streams`).
+
+    ``pages`` is ``(S, n)`` shard-aligned global ids, ``data`` is
+    ``(S, n, page_words)``.
+    """
+    _memprof_routed(state, "scatter", pages, stream="streams")
+    return _write_streams_jitted(state, pages, data)
 
 
 # ---------------------------------------------------------------------------

@@ -95,6 +95,50 @@ def test_higher_is_better_direction(tmp_path):
     ("serving_zipf_cream_speedup", True),
     ("vm_reclaim_capacity", True),
     ("kernel_mixed_us", False),
+    # CREAM-Lens: achieved BLP shrinking is a regression; its companion
+    # conflict/stall rows stay on the default lower-is-better side
+    ("fig9_memprof_blp_s8", True),
+    ("fig9_memprof_router_blp_s4", True),
+    ("fig9_memprof_conflict_rate_s8", False),
+    ("fig9_memprof_tfaw_stall_cycles_s8", False),
 ])
 def test_is_higher_better(name, expected):
     assert cr.is_higher_better(name) is expected
+
+
+# ---------------------------------------------------------------------------
+# --require-rows presence gate (CREAM-Lens CI wiring)
+# ---------------------------------------------------------------------------
+
+
+def test_require_rows_passes_when_present(tmp_path, capsys):
+    fresh = str(tmp_path)
+    _write(fresh, "shard", {"fig9_memprof_blp_s8": 321.5,
+                            "fig9_real_ws_s8": 1.7})
+    assert cr.check_required(fresh, r"fig9_.*_blp") == []
+    assert "1 row(s) match" in capsys.readouterr().out
+
+
+def test_require_rows_fails_when_absent(tmp_path):
+    fresh = str(tmp_path)
+    _write(fresh, "shard", {"fig9_real_ws_s8": 1.7})
+    bad = cr.check_required(fresh, r"fig9_.*_blp")
+    assert len(bad) == 1 and "no fresh rows match" in bad[0]
+
+
+def test_require_rows_fails_on_nonfinite(tmp_path):
+    """A profiler that captured nothing must not slip through as NaN."""
+    fresh = str(tmp_path)
+    _write(fresh, "shard", {"fig9_memprof_blp_s8": float("nan"),
+                            "fig9_memprof_blp_s4": 100.0})
+    bad = cr.check_required(fresh, r"fig9_.*_blp")
+    assert len(bad) == 1 and "nan" in bad[0]
+
+
+def test_require_rows_respects_suite_filter(tmp_path):
+    fresh = str(tmp_path)
+    _write(fresh, "shard", {"fig9_memprof_blp_s8": 321.5})
+    _write(fresh, "vm", {"vm_us": 5.0})
+    assert cr.check_required(fresh, r"fig9_.*_blp", suites={"shard"}) == []
+    bad = cr.check_required(fresh, r"fig9_.*_blp", suites={"vm"})
+    assert len(bad) == 1

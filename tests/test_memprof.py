@@ -1,0 +1,492 @@
+"""CREAM-Lens: capture hooks, bank attribution, replay, export plumbing."""
+import json
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.layouts import (CODE_LANE, LANES, Layout, extra_page_count,
+                                page_coords, parity_coords)
+from repro.core.pool import make_pool
+from repro.obs import dashboard, memprof, metrics, tracing
+
+
+@pytest.fixture(autouse=True)
+def _clean_memprof():
+    """Every test starts and ends with the profiler off and empty."""
+    memprof.disable()
+    memprof.clear()
+    metrics.disable()
+    metrics.REGISTRY.clear()
+    tracing.disable()
+    tracing.reset()
+    yield
+    memprof.disable()
+    memprof.clear()
+    metrics.disable()
+    metrics.REGISTRY.clear()
+    tracing.disable()
+    tracing.reset()
+
+
+# ---------------------------------------------------------------------------
+# capture hooks
+# ---------------------------------------------------------------------------
+
+
+class TestCapture:
+    def test_disabled_by_default_records_nothing(self):
+        assert not memprof.enabled()
+        st = make_pool(16, Layout.INTERWRAP, boundary=8, row_words=16)
+        data = st.read_pages(np.arange(4))
+        st.write_pages(np.arange(4), data)
+        assert memprof.records() == []
+
+    def test_pool_wrappers_record_gather_and_scatter(self):
+        memprof.enable()
+        st = make_pool(16, Layout.INTERWRAP, boundary=8, row_words=16)
+        data = st.read_pages(np.arange(6))
+        st.write_pages(np.arange(6), data)
+        recs = memprof.records()
+        assert [(r.op, r.stream, len(r.pages)) for r in recs] == \
+            [("gather", "main", 6), ("scatter", "main", 6)]
+        # records carry the pool's own geometry for replay attribution
+        assert recs[0].layout == Layout.INTERWRAP
+        assert (recs[0].num_rows, recs[0].boundary) == (16, 8)
+
+    def test_traceable_paths_do_not_record_at_trace_time(self):
+        """Composing read_any/write_any under an enclosing jit must not
+        capture tracer operands (records describe execution, not tracing)."""
+        import jax
+        memprof.enable()
+        st = make_pool(16, Layout.INTERWRAP, boundary=8, row_words=16)
+
+        @jax.jit
+        def round_trip(state, pages):
+            return state.write_any(pages, state.read_any(pages))
+
+        round_trip(st, np.arange(4))
+        assert memprof.records() == []
+
+    def test_record_cap_counts_drops(self):
+        memprof.enable()
+        old = memprof.MAX_RECORDS
+        memprof.MAX_RECORDS = 3
+        try:
+            for _ in range(5):
+                memprof.record("gather", [0], layout=Layout.INTERWRAP,
+                               num_rows=16, boundary=8, row_words=16)
+        finally:
+            memprof.MAX_RECORDS = old
+        assert len(memprof.records()) == 3
+        assert memprof.PROFILER.dropped == 2
+
+    def test_reset_keeps_published_clear_drops_both(self):
+        memprof.enable()
+        memprof.record("gather", [0], layout=Layout.INTERWRAP,
+                       num_rows=16, boundary=8, row_words=16)
+        memprof.publish("p", {"overall": {}})
+        memprof.reset()
+        assert memprof.records() == [] and "p" in memprof.PROFILER.published
+        memprof.clear()
+        assert memprof.PROFILER.published == {}
+
+    def test_bad_op_rejected(self):
+        memprof.enable()
+        with pytest.raises(ValueError):
+            memprof.record("readwrite", [0], layout=Layout.INTERWRAP,
+                           num_rows=16, boundary=8, row_words=16)
+
+
+# ---------------------------------------------------------------------------
+# bank attribution: the numpy mirror vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+
+LAYOUTS = (Layout.BASELINE_ECC, Layout.PACKED, Layout.RANK_SUBSET,
+           Layout.INTERWRAP, Layout.PARITY)
+
+
+def _boundaries(layout, num_rows):
+    if layout == Layout.BASELINE_ECC:
+        return (0,)
+    return (0, num_rows // 2, num_rows)
+
+
+class TestCoordsMirror:
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_bit_exact_against_jnp_oracle(self, layout):
+        num_rows, row_words = 32, 16
+        for boundary in _boundaries(layout, num_rows):
+            total = num_rows + extra_page_count(layout, boundary, row_words)
+            pages = np.arange(total)
+            rows, lanes, region = memprof.page_coords_np(
+                layout, num_rows, boundary, pages, row_words)
+            o_rows, o_lanes, o_region = page_coords(
+                layout, num_rows, boundary, pages, row_words)
+            np.testing.assert_array_equal(rows, np.asarray(o_rows))
+            np.testing.assert_array_equal(lanes, np.asarray(o_lanes))
+            np.testing.assert_array_equal(region, np.asarray(o_region))
+
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_slices_in_range(self, layout):
+        """Every page maps to 8 in-range (chip, bank, row) slices."""
+        from benchmarks.dram_sim import NUM_BANKS, bank_of
+        num_rows, row_words = 32, 16
+        for boundary in _boundaries(layout, num_rows):
+            total = num_rows + extra_page_count(layout, boundary, row_words)
+            pages = np.arange(total)
+            rows, lanes, _ = memprof.page_coords_np(
+                layout, num_rows, boundary, pages, row_words)
+            assert rows.shape == lanes.shape == (total, 8)
+            assert (lanes >= 0).all() and (lanes < LANES).all()
+            assert (rows >= 0).all()
+            banks = np.array([[bank_of(int(r)) for r in rr] for rr in rows])
+            assert (banks[..., 0] >= 0).all()
+            assert (banks[..., 0] < NUM_BANKS).all()
+
+    def test_secded_extra_chip_contract(self):
+        """SECDED-region pages read data from lanes 0-7 of their own row
+        and exactly one code slice on the extra chip at the same row."""
+        num_rows, row_words = 32, 16
+        for layout in LAYOUTS:
+            if layout == Layout.BASELINE_ECC:
+                continue
+            boundary = num_rows // 2
+            sec = np.arange(boundary, num_rows)
+            rows, lanes, _ = memprof.page_coords_np(
+                layout, num_rows, boundary, sec, row_words)
+            assert (lanes == np.arange(8)).all(), layout
+            assert (rows == sec[:, None]).all(), layout
+            crow = memprof.code_rows_np(layout, num_rows, boundary, sec,
+                                        row_words)
+            np.testing.assert_array_equal(crow, sec)
+
+    def test_parity_code_rows_match_parity_coords(self):
+        num_rows, row_words = 32, 16
+        boundary = 16
+        total = num_rows + extra_page_count(Layout.PARITY, boundary,
+                                            row_words)
+        pages = np.arange(total)
+        crow = memprof.code_rows_np(Layout.PARITY, num_rows, boundary,
+                                    pages, row_words)
+        o_prow, _ = parity_coords(num_rows, boundary, pages, row_words)
+        o_prow = np.asarray(o_prow)
+        is_sec = (pages >= boundary) & (pages < num_rows)
+        np.testing.assert_array_equal(crow[~is_sec], o_prow[~is_sec])
+        np.testing.assert_array_equal(crow[is_sec], pages[is_sec])
+
+    def test_non_parity_cream_pages_have_no_code_row(self):
+        crow = memprof.code_rows_np(Layout.INTERWRAP, 32, 16,
+                                    np.arange(16), 16)
+        assert (crow == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# per-bank state machines (benchmarks.dram_sim growth)
+# ---------------------------------------------------------------------------
+
+
+class TestBankMachines:
+    def test_timing_defaults_are_ddr4_2400(self):
+        from benchmarks.dram_sim import Timing
+        t = Timing()
+        assert t.tCK_ns == pytest.approx(0.833)
+        assert (t.tRCD, t.tRP, t.tCL) == (16, 16, 16)
+        assert t.tRRD == 4 and t.tFAW == 26 and t.tBL == 4
+
+    def test_simstats_zero_access_guards(self):
+        from benchmarks.dram_sim import SimStats
+        s = SimStats()
+        assert s.row_hit_rate == 0.0 and s.avg_latency == 0.0
+        assert s.avg_concurrent == 0.0 and s.blp == 0.0
+        assert not math.isnan(s.blp)
+
+    def test_row_hit_miss_conflict_census(self):
+        from benchmarks.dram_sim import BankArray, Timing
+        arr = BankArray(Timing(), chips=1, banks=1)
+        arr.access([(0, 0, 5)], 0)          # cold activate
+        done = arr.access([(0, 0, 5)], arr.finish_cycle)   # row hit
+        arr.access([(0, 0, 9)], done)       # conflict: row 9 over open 5
+        c = arr.machine(0, 0).counters
+        assert (c.row_empty, c.row_hits, c.row_conflicts) == (1, 1, 1)
+        assert c.accesses == 3
+
+    def test_row_hit_is_cheaper_than_conflict(self):
+        from benchmarks.dram_sim import BankArray, Timing
+        t = Timing()
+        a = BankArray(t, chips=1, banks=1)
+        a.access([(0, 0, 1)], 0)
+        start = a.finish_cycle
+        t_hit = a.access([(0, 0, 1)], start) - start
+        b = BankArray(t, chips=1, banks=1)
+        b.access([(0, 0, 1)], 0)
+        start = b.finish_cycle
+        t_conf = b.access([(0, 0, 2)], start) - start
+        assert t_conf - t_hit == t.tRP + t.tRCD  # PRE + ACT on top of CAS
+
+    def test_tfaw_window_stalls_fifth_activation(self):
+        from benchmarks.dram_sim import BankArray, Timing
+        t = Timing()
+        arr = BankArray(t, chips=1, banks=8)
+        # five cold ACTs on one rank in a single lockstep access: tRRD
+        # paces them 4 apart (0,4,8,12); the 5th must also clear the
+        # rolling four-ACT window (0 + tFAW = 26 > 16)
+        arr.access([(0, b, 0) for b in range(5)], 0)
+        tot = arr.totals()
+        assert tot.faw_stall_cycles == t.tFAW - 4 * t.tRRD
+        assert tot.act_stall_cycles >= tot.faw_stall_cycles
+
+    def test_blp_measures_overlap(self):
+        from benchmarks.dram_sim import BankArray, Timing
+        # 8 independent banks touched at once: near-8x overlap
+        wide = BankArray(Timing(), chips=1, banks=8)
+        wide.access([(0, b, 0) for b in range(8)], 0)
+        # the same 8 accesses serialised on one bank
+        narrow = BankArray(Timing(), chips=1, banks=1)
+        for _ in range(8):
+            narrow.access([(0, 0, 0)], 0)
+        assert wide.achieved_blp > 4 * narrow.achieved_blp
+
+    def test_queue_depth_percentile_and_histogram(self):
+        from benchmarks.dram_sim import BankArray, Timing
+        arr = BankArray(Timing(), chips=1, banks=1)
+        for _ in range(4):
+            arr.access([(0, 0, 0)], 0)      # all pile on one busy bank
+        assert arr.queue_depth_percentile(99) >= 1.0
+        assert sum(arr.blp_histogram()) == 4
+
+
+# ---------------------------------------------------------------------------
+# replay + profile
+# ---------------------------------------------------------------------------
+
+
+def _capture_small_pool():
+    st = make_pool(16, Layout.INTERWRAP, boundary=8, row_words=16)
+    memprof.enable()
+    data = st.read_pages(np.arange(st.num_pages))
+    st.write_pages(np.arange(st.num_pages), data)
+    return st
+
+
+class TestReplay:
+    def test_profile_shape_and_determinism(self):
+        _capture_small_pool()
+        p1 = memprof.profile()
+        p2 = memprof.profile()
+        assert p1 == p2                      # replay is deterministic
+        assert p1["records"] == 2 and p1["dropped"] == 0
+        s = p1["streams"]["main"]
+        o = p1["overall"]
+        for key in ("row_hit_rate", "conflict_rate", "achieved_blp",
+                    "tfaw_stall_cycles", "queue_p99", "extra_chip_frac"):
+            assert key in s and key in o
+            assert not math.isnan(float(o[key]))
+        assert np.asarray(o["heatmap"]).shape == (LANES, 8)
+        assert o["accesses"] > 0 and o["achieved_blp"] > 0
+
+    def test_secded_traffic_lands_on_extra_chip(self):
+        _capture_small_pool()
+        prof = memprof.profile()
+        heat = np.asarray(prof["overall"]["heatmap"])
+        # boundary=8 of 16 rows -> half the pages carry code-slice reads
+        assert heat[CODE_LANE].sum() > 0
+        assert prof["overall"]["extra_chip_frac"] > 0
+
+    def test_streams_replay_into_separate_bank_arrays(self):
+        memprof.enable()
+        for stream in ("bank0", "bank1"):
+            memprof.record("gather", np.arange(4), layout=Layout.INTERWRAP,
+                           num_rows=16, boundary=8, row_words=16,
+                           stream=stream)
+        prof = memprof.profile()
+        assert set(prof["streams"]) == {"bank0", "bank1"}
+        # overall busy sums across streams over the shared makespan, so
+        # two identical concurrent streams double the achieved BLP
+        one = prof["streams"]["bank0"]["achieved_blp"]
+        assert prof["overall"]["achieved_blp"] == pytest.approx(2 * one,
+                                                                rel=1e-3)
+
+    def test_profile_is_json_serialisable(self):
+        _capture_small_pool()
+        memprof.publish("p", memprof.profile())
+        blob = memprof.collect()
+        json.dumps(blob)                     # must not raise
+        assert set(blob) == {"records", "dropped", "profiles"}
+
+
+# ---------------------------------------------------------------------------
+# export: metrics gauges, Perfetto counter tracks, dashboard panel
+# ---------------------------------------------------------------------------
+
+
+class TestExport:
+    def test_collect_exports_dram_gauges_when_metrics_on(self):
+        metrics.enable()
+        _capture_small_pool()
+        memprof.publish("t", memprof.profile())
+        memprof.reset()
+        memprof.collect()
+        assert metrics.REGISTRY.value(metrics.NAME_DRAM_BLP, suite="t",
+                                      stream="overall") > 0
+        snap = metrics.snapshot()
+        assert "cream_dram_bank_row_hit_rate" in snap
+
+    def test_counter_events_schema(self):
+        _capture_small_pool()
+        blob = {"profiles": {"p": memprof.profile()}}
+        events = memprof.counter_events(blob)
+        assert events, "timeline must produce counter points"
+        for e in events:
+            assert e["ph"] == "C"
+            assert e["name"].startswith("dram.bank[p/")
+            assert {"blp", "row_hit_rate_pct", "queue"} <= set(e["args"])
+        # they extend into the tracer buffer for export next to spans
+        tracing.enable()
+        tracing.TRACER.extend(events)
+        assert any(ev["ph"] == "C" for ev in tracing.TRACER.to_dict()
+                   ["traceEvents"])
+
+    def test_bank_heatmap_renders(self):
+        _capture_small_pool()
+        memprof.publish("s8/streams", memprof.profile())
+        out = dashboard.render_bank_heatmap(memprof.collect())
+        assert "DRAM BANK PROFILE" in out and "[s8/streams]" in out
+        assert "code" in out                # chip 8 row is called out
+
+    def test_bank_heatmap_empty_blob(self):
+        out = dashboard.render_bank_heatmap({"profiles": {}})
+        assert "no bank profiles" in out
+
+
+# ---------------------------------------------------------------------------
+# engine + sharded wiring
+# ---------------------------------------------------------------------------
+
+
+def _tiny_engine(**kw):
+    from benchmarks.bench_serving import CFG
+    from repro.serve.engine import Engine
+    return Engine(CFG, max_batch=2, max_len=24, num_rows=32, row_words=64,
+                  secded_rows=8, **kw)
+
+
+def _tiny_requests(n=2, max_new=3):
+    from repro.serve.engine import Request
+    return [Request(f"s{i}", list(range(1, 7)), max_new,
+                    tier="paid" if i % 2 else "batch") for i in range(n)]
+
+
+class TestEngineWiring:
+    def test_decode_step_records_one_gather_one_scatter(self):
+        eng = _tiny_engine()
+        for r in _tiny_requests():
+            eng.submit(r)
+        eng.poll()                           # prefills only
+        memprof.enable()
+        memprof.reset()
+        eng.step()
+        recs = memprof.records()
+        gathers = [r for r in recs if r.op == "gather"]
+        scatters = [r for r in recs if r.op == "scatter"]
+        assert len(gathers) == 1 and len(scatters) == 1
+        assert gathers[0].stream == "decode"
+        assert gathers[0].step == scatters[0].step == 1
+
+    def test_decode_gather_recorded_with_metrics_enabled_too(self):
+        metrics.enable()                     # counts path, not fused-read
+        eng = _tiny_engine()
+        for r in _tiny_requests():
+            eng.submit(r)
+        eng.poll()
+        memprof.enable()
+        memprof.reset()
+        eng.step()
+        assert [r.op for r in memprof.records()].count("gather") == 1
+
+    @pytest.mark.slow
+    def test_memprof_disabled_overhead_within_2_percent(self):
+        """The tentpole's overhead guard: with capture off (the default)
+        the hooks are one boolean read — Engine.step stays within 2%
+        (plus a tiny absolute slack) of a run without the profiler."""
+        def run_steps(enable: bool, rounds=4):
+            memprof.clear()
+            memprof.enable(enable)
+            eng = _tiny_engine()
+            eng.serve(_tiny_requests(n=2, max_new=4))   # warm compile
+            ts = []
+            for _ in range(rounds):
+                for r in _tiny_requests(n=2, max_new=16):
+                    eng.submit(r)
+                while eng.sched.has_work():
+                    t0 = time.perf_counter()
+                    eng.poll()
+                    ts.append(time.perf_counter() - t0)
+                memprof.reset()              # bound capture memory
+            memprof.disable()
+            return float(np.median(ts))
+
+        # interleave the pairs so clock-speed drift hits both sides
+        # equally; min-of-N approaches each side's true floor.  The
+        # DISABLED side is the guard: hooks compiled into the hot path
+        # must cost nothing when the profiler is off.
+        base, inst = [], []
+        for _ in range(4):
+            base.append(run_steps(False))
+            inst.append(run_steps(True))
+        b = min(base)
+        assert b <= min(inst) * 1.02 + 3e-4, \
+            f"disabled-path drag {b / min(inst) - 1:.1%}"
+
+
+class TestShardedWiring:
+    def test_routed_dispatch_records_per_bank_streams(self):
+        import jax
+        from repro.shard import pool as shard_pool
+        S = min(2, jax.device_count())
+        sp = shard_pool.make_sharded_pool(32, Layout.INTERWRAP, boundary=16,
+                                          num_shards=S, row_words=16)
+        memprof.enable()
+        data = sp.read_pages(np.arange(32))
+        sp = sp.write_pages(np.arange(32), data)
+        recs = memprof.records()
+        streams = {r.stream for r in recs}
+        assert streams == {f"bank{s}" for s in range(S)}
+        # local geometry: each record describes the shard's own module
+        assert all(r.num_rows == 32 // S and r.boundary == 16 // S
+                   for r in recs)
+        # round-robin striping: shard s records exactly its own pages
+        for r in recs:
+            assert (r.pages < 32 // S).all()
+
+    def test_stream_dispatch_records_aligned_streams(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.shard import pool as shard_pool
+        S = min(2, jax.device_count())
+        sp = shard_pool.make_sharded_pool(32, Layout.INTERWRAP, boundary=16,
+                                          num_shards=S, row_words=16)
+        aligned = jnp.stack([jnp.arange(4, dtype=jnp.int32) * S + s
+                             for s in range(S)])
+        memprof.enable()
+        shard_pool.read_streams(sp, aligned)
+        streams = {r.stream for r in memprof.records()}
+        assert streams == {f"streams/bank{s}" for s in range(S)}
+
+    def test_objcache_records_cache_stream(self):
+        from repro.objcache import ObjCache
+        from repro.vm import VirtualMemory
+        vm = VirtualMemory(row_words=16)
+        vm.add_pool("dimm", 16, Layout.INTERWRAP, boundary=8)
+        cache = ObjCache(vm, "dimm", index_capacity=64, probe=8)
+        memprof.enable()
+        keys = np.arange(1, 5)
+        vals = np.ones((4, vm.page_words), np.uint32)
+        assert cache.set_many(keys, vals).all()
+        _, _, found = cache.get_many(keys)
+        assert found.all()
+        ops = {(r.op, r.stream) for r in memprof.records()}
+        assert ("scatter", "objcache") in ops
+        assert ("gather", "objcache") in ops

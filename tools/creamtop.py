@@ -3,7 +3,9 @@
 Renders the SLO verdicts + metric sections from one of three sources:
 
   * ``--bench BENCH_<suite>.json`` — the ``_metrics`` blob a
-    ``benchmarks/run.py --profile`` run embedded into the suite file;
+    ``benchmarks/run.py --profile`` run embedded into the suite file
+    (plus the CREAM-Lens bank heatmap when the file also carries a
+    ``--memprof`` ``_memprof`` blob);
   * ``--snapshot metrics.json`` — a raw ``repro.obs.metrics.collect()``
     dump;
   * ``--demo`` — run a tiny live CREAM-Serve workload under scrubbing
@@ -78,10 +80,16 @@ def main() -> None:
     with open(path) as f:
         blob = json.load(f)
     snap = blob.get("_metrics") if args.bench else blob
-    if not isinstance(snap, dict) or (args.bench and snap is None):
+    memprof = blob.get("_memprof") if args.bench else None
+    if not isinstance(snap, dict) and not isinstance(memprof, dict):
         raise SystemExit(
-            f"{path}: no _metrics blob (run benchmarks/run.py --profile)")
-    print(dashboard.render(snap=snap, statuses=[]))
+            f"{path}: no _metrics/_memprof blob "
+            "(run benchmarks/run.py --profile and/or --memprof)")
+    if isinstance(snap, dict):
+        print(dashboard.render(snap=snap, statuses=[]))
+    if isinstance(memprof, dict):
+        # CREAM-Lens bank panel: per-profile chipxbank heatmaps
+        print(dashboard.render_bank_heatmap(memprof))
 
 
 if __name__ == "__main__":
