@@ -21,7 +21,13 @@ Per shard count S in {1, 2, 4, 8}:
   * ``fig9_real_lat_sS`` — per-stream latency inflation t(S) / t(1)
     (Fig. 11b analogue: what each stream pays for sharing the machine);
   * ``fig9_real_router_us_sS`` — the general (non-aligned) path: random
-    global page ids through the shard router with owner-select assembly;
+    global page ids through the one-pass FUSED dispatch (router folded
+    into the mixed kernel's scalar-prefetch index map, cross-bank psum
+    assembly — no owner-select pass, no stacked ``(S, n)`` intermediate);
+  * ``fig9_real_planned_us_sS`` — the same ids through the concrete-id
+    PLANNED dispatch (host stream planning + one jitted per-bank gather
+    of ~n/S pages + device-side inverse permute), timed end to end
+    including the planning pass — the shape serve decode gathers ride;
   * ``fig9_real_migrate_us_s{max}`` — cross-shard live migration through
     the explicit ppermute ring exchange.
 
@@ -73,7 +79,7 @@ def _memprof_capture(S: int, pool, streams, data, gids, out: list) -> None:
     Two captures per shard count, kept separate so the attribution can
     contrast them: ``s{S}/streams`` (the bank-aligned hot path — one
     ``read_streams`` + one ``write_streams``) and ``s{S}/router`` (the
-    owner-select routed read of random global ids).
+    fused planned read of random global ids).
     """
     import jax
 
@@ -87,7 +93,7 @@ def _memprof_capture(S: int, pool, streams, data, gids, out: list) -> None:
     prof_s = memprof.profile()
     memprof.publish(f"s{S}/streams", prof_s)
     memprof.reset()
-    jax.block_until_ready(pool.read_pages(gids))
+    jax.block_until_ready(pool.read(gids))
     prof_r = memprof.profile()
     memprof.publish(f"s{S}/router", prof_r)
     memprof.reset()
@@ -102,7 +108,7 @@ def _memprof_capture(S: int, pool, streams, data, gids, out: list) -> None:
     out.append((f"fig9_memprof_queue_p99_s{S}", o["queue_p99"], lab))
     out.append((f"fig9_memprof_extra_chip_frac_s{S}",
                 o["extra_chip_frac"], lab))
-    rlab = f"shards={S},path=owner-select"
+    rlab = f"shards={S},path=fused"
     out.append((f"fig9_memprof_router_blp_s{S}", r["achieved_blp"], rlab))
     out.append((f"fig9_memprof_router_conflict_rate_s{S}",
                 r["conflict_rate"], rlab))
@@ -164,13 +170,26 @@ def main(seed: int = 0):
             out.append((f"fig9_real_write_us_s{S}", t_write * 1e6 / total,
                         f"shards={S},pages={total}"))
 
-            # the general router path: unaligned random global ids
+            # the general router path: unaligned random global ids.
+            # Two dispatch shapes, timed separately:
+            #  * fused — router folded into the mixed kernel's scalar-
+            #    prefetch index map, cross-bank psum assembly (the traced
+            #    in-jit path; ids stay on device);
+            #  * planned — host stream planning + ONE jitted per-bank
+            #    gather + device inverse permute (the concrete-id path
+            #    serve/objcache ride), timed end to end incl. planning.
             gids = jnp.asarray(
                 rng.permutation(pool.num_pages)[:stream_pages], jnp.int32)
-            t_router = _bench(lambda: pool.read_pages(gids), reps)
+            read_fused = jax.jit(shard.read_any)
+            t_router = _bench(lambda: read_fused(pool, gids), reps)
             out.append((f"fig9_real_router_us_s{S}",
                         t_router * 1e6 / stream_pages,
-                        f"shards={S},pages={stream_pages},path=owner-select"))
+                        f"shards={S},pages={stream_pages},path=fused"))
+            gids_np = np.asarray(gids)
+            t_planned = _bench(lambda: pool.read(gids_np), reps)
+            out.append((f"fig9_real_planned_us_s{S}",
+                        t_planned * 1e6 / stream_pages,
+                        f"shards={S},pages={stream_pages},path=planned"))
             if profiling:
                 _memprof_capture(S, pool, streams, data, gids, out)
             last_pool = pool

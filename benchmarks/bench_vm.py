@@ -14,8 +14,8 @@ Simulates the OS-level payoff of the paper's capacity reclaim:
   * **migration microbench** — relocation throughput of a fully mapped pool
     into a spare pool: the SECDED source decodes per row, the InterWrap
     source takes the fused Pallas gather/re-encode path;
-  * **mixed-access microbench** — the jitted mixed-pool engine
-    (``read_pages_any_jit`` / ``write_pages_any_jit``) hammering a
+  * **mixed-access microbench** — the jitted mixed-pool engine behind
+    the unified ``pool.read`` / ``pool.write`` access API hammering a
     half-CREAM/half-SECDED pool with a random CREAM+SECDED+extra id mix:
     the hot path every VM read/write and migration batch now rides.
 
@@ -146,13 +146,13 @@ def mixed_access_microbench(rows: int, seed: int = 0, reps: int = 10) -> dict:
     ids = jnp.asarray(rng.choice(pool.num_pages, n, replace=False), jnp.int32)
     data = _blob(rng, n, pool.page_words)
     # warm the traces (one compile per pool mode)
-    pool = pool_lib.write_pages_any_jit(pool, ids, data)
-    jax.block_until_ready(pool_lib.read_pages_any_jit(pool, ids))
+    pool = pool.write(ids, data)
+    jax.block_until_ready(pool.read(ids))
     t0 = time.perf_counter()
     out = None
     for _ in range(reps):
-        pool = pool_lib.write_pages_any_jit(pool, ids, data)
-        out = pool_lib.read_pages_any_jit(pool, ids)
+        pool = pool.write(ids, data)
+        out = pool.read(ids)
     jax.block_until_ready((pool.storage, out))
     dt = time.perf_counter() - t0
     pages = 2 * n * reps                      # one write + one read per rep

@@ -20,6 +20,7 @@ Usage::
     python benchmarks/check_regression.py [--baseline benchmarks/baselines]
         [--fresh .] [--tolerance 1.5] [--suites vm,kernels]
         [--require-rows 'fig9_.*_blp']   # presence gate, no baseline needed
+        [--require-min 'fig9_real_ws_s8>1.0']  # hard floor, repeatable
         [--update]        # rewrite baselines from fresh (rebaselining)
 
 Exit status 0 = within tolerance, 1 = regression (every violation listed).
@@ -172,6 +173,49 @@ def check_required(fresh_dir: str, pattern: str,
     return bad
 
 
+def check_min(fresh_dir: str, spec: str,
+              suites: set[str] | None = None) -> list[str]:
+    """Hard min-value gate: every fresh row matching ``REGEX`` in a
+    ``'REGEX>VALUE'`` spec must be finite and strictly above ``VALUE``.
+
+    Unlike the relative gate, this is an *absolute* floor that no
+    rebaselining can erode — e.g. ``'fig9_real_ws_s8>1.0'`` pins the
+    Fig. 9 weighted speedup above parity forever. At least one row must
+    match (a suite silently dropping the gated row family fails).
+    """
+    import math
+    import re
+    if ">" not in spec:
+        return [f"bad --require-min spec {spec!r} (expected 'REGEX>VALUE')"]
+    pattern, _, floor_s = spec.rpartition(">")
+    try:
+        floor = float(floor_s)
+    except ValueError:
+        return [f"bad --require-min floor {floor_s!r} in {spec!r}"]
+    rx = re.compile(pattern)
+    matched = 0
+    bad: list[str] = []
+    for fpath in sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json"))):
+        suite = _suite_of(fpath)
+        if suite is None or (suites is not None and suite not in suites):
+            continue
+        for name, val in sorted(_load(fpath).items()):
+            if rx.search(name):
+                matched += 1
+                if math.isnan(val) or math.isinf(val):
+                    bad.append(f"{suite}/{name}: gated row is {val} "
+                               f"(must be > {floor})")
+                elif val <= floor:
+                    bad.append(f"{suite}/{name}: {val:.3f} <= {floor} "
+                               f"(hard floor)")
+    if not matched:
+        bad.append(f"no fresh rows match min-gate pattern {pattern!r}")
+    elif not bad:
+        print(f"# min-value gate: {matched} row(s) match {pattern!r}, "
+              f"all > {floor}")
+    return bad
+
+
 def update(baseline_dir: str, fresh_dir: str,
            suites: set[str] | None = None) -> None:
     os.makedirs(baseline_dir, exist_ok=True)
@@ -201,6 +245,11 @@ def main() -> None:
     ap.add_argument("--require-rows", default=None, metavar="REGEX",
                     help="additionally require >= 1 fresh row matching REGEX"
                          ", all finite (presence gate, no baseline needed)")
+    ap.add_argument("--require-min", action="append", default=[],
+                    metavar="'REGEX>VALUE'",
+                    help="hard floor: every fresh row matching REGEX must be"
+                         " finite and > VALUE (repeatable; immune to"
+                         " rebaselining)")
     args = ap.parse_args()
     suites = set(args.suites.split(",")) if args.suites else None
     if args.update:
@@ -209,6 +258,8 @@ def main() -> None:
     violations = check(args.baseline, args.fresh, args.tolerance, suites)
     if args.require_rows:
         violations += check_required(args.fresh, args.require_rows, suites)
+    for spec in args.require_min:
+        violations += check_min(args.fresh, spec, suites)
     if violations:
         print(f"BENCH REGRESSION ({len(violations)} violation(s), "
               f"tolerance {args.tolerance}x):", file=sys.stderr)

@@ -23,6 +23,7 @@ donation-friendly entry points).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from functools import partial
 from typing import Protocol, runtime_checkable
@@ -38,6 +39,12 @@ from repro.core.layouts import (CODE_LANE, DATA_LANES, DEFAULT_ROW_WORDS,
                                 PagePlacement, extra_page_count, page_coords,
                                 parity_coords, place_page,
                                 _parity_row_of_page)
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"PoolLike.{old} is deprecated; use the unified access API: "
+        f"pool.{new}", DeprecationWarning, stacklevel=3)
 
 
 @jax.tree_util.register_dataclass
@@ -83,39 +90,117 @@ class PoolState:
         return self.num_extra_pages / self.num_rows
 
     # -- PoolLike surface (the local data plane) ----------------------------
-    # Traceable engine entry points (compose under an enclosing jit) and
-    # pre-jitted hot-path wrappers, as methods so owners (the VM, the object
-    # cache, the serving tier) run unchanged on any PoolLike implementation
-    # (this local pool or ``repro.shard.ShardedPool``).
+    # ONE coherent access API — ``read`` / ``write`` / ``migrate`` /
+    # ``streams`` — so owners (the VM, the object cache, the serving tier)
+    # run unchanged on any PoolLike implementation (this local pool or
+    # ``repro.shard.ShardedPool``). Each entry point auto-selects its
+    # dispatch shape: traced operands (we are inside someone's jit) compose
+    # straight into the enclosing trace; concrete ids are range-validated
+    # host-side and take the pre-jitted hot path. The historical
+    # ``read_any`` / ``read_pages`` split (traceable vs jitted, times three
+    # operations, times a ``_status`` axis) survives only as deprecation
+    # shims below.
 
     @property
     def boundary_step(self) -> int:
         """Boundary-register granularity (rows)."""
         return GROUP_ROWS
 
+    def _traced(self, *operands) -> bool:
+        return any(isinstance(x, jax.core.Tracer)
+                   for x in (self.storage, *operands))
+
+    def read(self, pages, *, status=False):
+        """Batch read for an arbitrary page-id vector.
+
+        Returns ``(n, page_words)`` uint32, or with ``status=True`` a
+        ``(data, status (n,) int32)`` pair (worst per-beat decode status:
+        0 clean, 1/2 corrected, 3 detected-uncorrectable). Traceable with
+        traced ids; concrete ids validate host-side and dispatch jitted.
+        """
+        if self._traced(pages):
+            return read_pages_any_status(self, pages) if status \
+                else read_pages_any(self, pages)
+        arr = _as_page_array(self, pages)
+        self.memprof_record("gather", arr)
+        fn = _read_pages_any_status_jitted if status \
+            else _read_pages_any_jitted
+        return fn(self, arr)
+
+    def write(self, pages, data: jax.Array, *, valid=None) -> "PoolState":
+        """Code-maintaining batch write; returns the new pool state.
+
+        ``valid`` (optional ``(n,)`` bool) drops masked rows entirely —
+        the SPMD building block of the sharded dispatch. On the concrete
+        (jitted) path the input state's storage is donated: drop the old
+        state immediately, as every internal owner does.
+        """
+        if self._traced(pages, data, valid):
+            return write_pages_any(self, pages, data, valid=valid)
+        arr = _as_page_array(self, pages)
+        self.memprof_record("scatter", arr)
+        if valid is None:
+            return _write_pages_any_jitted(self, arr, data)
+        return _write_pages_any_valid_jitted(
+            self, arr, data, jnp.asarray(valid, bool).reshape(-1))
+
+    def migrate(self, src_pages, dst_pages, *,
+                donate: bool = True) -> "PoolState":
+        """In-pool page relocation ``src -> dst``: one fused dispatch
+        (decode-corrected read + code-maintaining write under one jit).
+        ``donate=False`` keeps the input state's storage valid (callers
+        that may roll back)."""
+        src = _as_page_array(self, src_pages)
+        dst = _as_page_array(self, dst_pages)
+        self.memprof_record("gather", src)
+        self.memprof_record("scatter", dst)
+        fn = _migrate_within_jitted if donate \
+            else _migrate_within_jitted_nodonate
+        return fn(self, src, dst)
+
+    def streams(self, pages, data=None, *, valid=None):
+        """Bank-aligned stream access: ``(S, n)`` ids, one dispatch.
+
+        With ``data=None`` reads and returns ``(S, n, page_words)``;
+        with ``data`` ``(S, n, page_words)`` writes (``valid`` optionally
+        masks entries) and returns the new state. On a local pool the
+        stream axis is a pure batching convention — the sharded pool
+        (:class:`repro.shard.ShardedPool`) serves each stream on its own
+        bank, which is where the Figs. 9–11 concurrency lives.
+        """
+        shape = pages.shape
+        flat = jnp.asarray(pages, jnp.int32).reshape(-1)
+        if data is None:
+            return self.read(flat).reshape(*shape, self.page_words)
+        vf = None if valid is None else jnp.asarray(valid).reshape(-1)
+        return self.write(flat, jnp.asarray(data).reshape(flat.shape[0], -1),
+                          valid=vf)
+
+    # -- deprecated access surface (thin shims over the unified API) --------
+
     def read_any(self, pages) -> jax.Array:
-        """Traceable batch read (see :func:`read_pages_any`)."""
+        _warn_deprecated("read_any", "read(pages)")
         return read_pages_any(self, pages)
 
     def read_any_status(self, pages) -> tuple[jax.Array, jax.Array]:
-        """Traceable batch read + per-page status."""
+        _warn_deprecated("read_any_status", "read(pages, status=True)")
         return read_pages_any_status(self, pages)
 
     def write_any(self, pages, data: jax.Array) -> "PoolState":
-        """Traceable code-maintaining batch write."""
+        _warn_deprecated("write_any", "write(pages, data)")
         return write_pages_any(self, pages, data)
 
     def read_pages(self, pages) -> jax.Array:
-        """Jitted batch read (validates concrete ids host-side)."""
-        return read_pages_any_jit(self, pages)
+        _warn_deprecated("read_pages", "read(pages)")
+        return self.read(pages)
 
     def read_pages_status(self, pages) -> tuple[jax.Array, jax.Array]:
-        """Jitted batch read + per-page status."""
-        return read_pages_any_status_jit(self, pages)
+        _warn_deprecated("read_pages_status", "read(pages, status=True)")
+        return self.read(pages, status=True)
 
     def write_pages(self, pages, data: jax.Array) -> "PoolState":
-        """Jitted, donating batch write (old state must be dropped)."""
-        return write_pages_any_jit(self, pages, data)
+        _warn_deprecated("write_pages", "write(pages, data)")
+        return self.write(pages, data)
 
     def evict_prediction(self, new_boundary: int) -> list[int]:
         """Extra-page ids a move to ``new_boundary`` would evict."""
@@ -169,12 +254,11 @@ class PoolLike(Protocol):
     page_words: int
     boundary_step: int
 
-    def read_any(self, pages) -> jax.Array: ...                     # noqa: E704
-    def read_any_status(self, pages) -> tuple: ...                  # noqa: E704
-    def write_any(self, pages, data) -> "PoolLike": ...             # noqa: E704
-    def read_pages(self, pages) -> jax.Array: ...                   # noqa: E704
-    def read_pages_status(self, pages) -> tuple: ...                # noqa: E704
-    def write_pages(self, pages, data) -> "PoolLike": ...           # noqa: E704
+    def read(self, pages, *, status=False): ...                     # noqa: E704
+    def write(self, pages, data, *, valid=None) -> "PoolLike": ...  # noqa: E704
+    def migrate(self, src_pages, dst_pages, *,
+                donate: bool = True) -> "PoolLike": ...             # noqa: E704
+    def streams(self, pages, data=None, *, valid=None): ...         # noqa: E704
     def evict_prediction(self, new_boundary) -> list[int]: ...      # noqa: E704
     def move_boundary(self, new_boundary) -> tuple: ...             # noqa: E704
     def scrub(self, use_kernel: bool = False) -> tuple: ...         # noqa: E704
@@ -490,6 +574,19 @@ def write_pages_any(state: PoolState, pages, data: jax.Array,
 _read_pages_any_jitted = jax.jit(read_pages_any)
 _read_pages_any_status_jitted = jax.jit(read_pages_any_status)
 _write_pages_any_jitted = jax.jit(write_pages_any, donate_argnums=(0,))
+_write_pages_any_valid_jitted = jax.jit(
+    lambda state, pages, data, valid: write_pages_any(state, pages, data,
+                                                      valid=valid),
+    donate_argnums=(0,))
+
+
+def _migrate_within(state: PoolState, src_pages, dst_pages) -> PoolState:
+    return write_pages_any(state, dst_pages,
+                           read_pages_any(state, src_pages))
+
+
+_migrate_within_jitted = jax.jit(_migrate_within, donate_argnums=(0,))
+_migrate_within_jitted_nodonate = jax.jit(_migrate_within)
 
 
 def read_pages_any_jit(state: PoolState, pages) -> jax.Array:

@@ -89,7 +89,7 @@ class FaultCampaign:
         """Bless the pool's current contents as believed ground truth, so
         pages written before the campaign attached classify correctly."""
         pages = np.arange(self.shadow.num_pages)
-        data, _ = self.shadow.inner.read_pages_status(pages)
+        data, _ = self.shadow.inner.read(pages, status=True)
         self.shadow._shadow[pages] = np.asarray(data)
         self.shadow._valid[pages] = True
         self.shadow.drain()             # attach noise must not attribute

@@ -24,14 +24,14 @@ flips in one congruence class, NONE misses everything — the shadow
 oracle measures all three, per reliability class, while the system runs.
 
 The wrapper is deliberately **not** a pytree: it must never be traced.
-It presents the full PoolLike surface, is *mutable* (``write_pages``
-replaces ``self.inner`` and returns ``self``), and therefore survives
-the data plane's ``vm.pools[name] = pool.write_pages(...)`` reassignment
-idiom unchanged — the engine, VM, migration and policy layers run
-unmodified over a shadowed pool. The fused in-jit gather (``PoolState``
-fast path) is bypassed by construction: ``isinstance(wrapper, PoolState)``
-is False, so engines fall back to the host-side ``read_pages`` route the
-oracle can observe. One caveat is inherent: a migration *re-writes* what
+It presents the full PoolLike surface, is *mutable* (``write`` replaces
+``self.inner`` and returns ``self``), and therefore survives the data
+plane's ``vm.pools[name] = pool.write(...)`` reassignment idiom
+unchanged — the engine, VM, migration and policy layers run unmodified
+over a shadowed pool. The fused in-jit gather (``PoolState`` fast path)
+is bypassed by construction: ``isinstance(wrapper, PoolState)`` is
+False, so engines fall back to the host-side ``read`` route the oracle
+can observe. One caveat is inherent: a migration *re-writes* what
 it read, so corruption that slips through a migration read is counted as
 silent **at that read** (attributed to the class it occurred under) and
 then becomes the new believed content.
@@ -43,6 +43,7 @@ from dataclasses import dataclass
 import jax
 import numpy as np
 
+from repro.core import pool as pool_lib
 from repro.core import secded
 from repro.core.layouts import extra_page_count
 from repro.vm.address_space import frame_class
@@ -166,38 +167,65 @@ class ShadowedPool:
         pages = np.nonzero(delta.any(axis=0))[0]
         return {int(p): tuple(int(x) for x in delta[:, p]) for p in pages}
 
-    # -- PoolLike data plane -------------------------------------------------
+    # -- PoolLike data plane (unified access API) ----------------------------
+    # classification always works because the wrapper is never passed into
+    # jit — any call landing here is host-side by design
+    def read(self, pages, *, status=False):
+        data, st = self.inner.read(pages, status=True)
+        self._classify(pages, data, st)
+        return (data, st) if status else data
+
+    def write(self, pages, data, *, valid=None) -> "ShadowedPool":
+        self.inner = self.inner.write(pages, data, valid=valid)
+        p = np.asarray(pages).reshape(-1)
+        d = np.asarray(data).reshape(p.size, -1)
+        if valid is not None:
+            keep = np.asarray(valid, bool).reshape(-1)
+            p, d = p[keep], d[keep]
+        self._shadow[p] = d
+        self._valid[p] = True
+        return self
+
+    def migrate(self, src_pages, dst_pages, *,
+                donate: bool = True) -> "ShadowedPool":
+        # through the classified read + write, not the inner fused migrate:
+        # migration reads must hit the oracle (and what they surface becomes
+        # the new believed content — the documented caveat above)
+        return self.write(dst_pages, self.read(src_pages))
+
+    def streams(self, pages, data=None, *, valid=None):
+        if data is None:
+            return self.read(np.asarray(pages).reshape(-1)) \
+                .reshape(*np.shape(pages), -1)
+        flat = np.asarray(pages).reshape(-1)
+        vf = None if valid is None else np.asarray(valid).reshape(-1)
+        return self.write(flat, np.asarray(data).reshape(flat.size, -1),
+                          valid=vf)
+
+    # -- deprecated access surface (thin shims over the unified API) --------
     def read_pages(self, pages) -> jax.Array:
-        data, status = self.inner.read_pages_status(pages)
-        self._classify(pages, data, status)
-        return data
+        pool_lib._warn_deprecated("read_pages", "read(pages)")
+        return self.read(pages)
 
     def read_pages_status(self, pages) -> tuple[jax.Array, jax.Array]:
-        data, status = self.inner.read_pages_status(pages)
-        self._classify(pages, data, status)
-        return data, status
+        pool_lib._warn_deprecated("read_pages_status", "read(pages, status=True)")
+        return self.read(pages, status=True)
 
     def write_pages(self, pages, data) -> "ShadowedPool":
-        self.inner = self.inner.write_pages(pages, data)
-        p = np.asarray(pages).reshape(-1)
-        self._shadow[p] = np.asarray(data).reshape(p.size, -1)
-        self._valid[p] = True
-        return self
+        pool_lib._warn_deprecated("write_pages", "write(pages, data)")
+        return self.write(pages, data)
 
-    # traceable variants: classification still works because the wrapper is
-    # never passed into jit — any call landing here is host-side by design
     def read_any(self, pages) -> jax.Array:
-        return self.read_pages(pages)
+        pool_lib._warn_deprecated("read_any", "read(pages)")
+        return self.read(pages)
 
     def read_any_status(self, pages) -> tuple[jax.Array, jax.Array]:
-        return self.read_pages_status(pages)
+        pool_lib._warn_deprecated("read_any_status", "read(pages, status=True)")
+        return self.read(pages, status=True)
 
     def write_any(self, pages, data) -> "ShadowedPool":
-        self.inner = self.inner.write_any(pages, data)
-        p = np.asarray(pages).reshape(-1)
-        self._shadow[p] = np.asarray(data).reshape(p.size, -1)
-        self._valid[p] = True
-        return self
+        pool_lib._warn_deprecated("write_any", "write(pages, data)")
+        return self.write(pages, data)
 
     # -- control plane -------------------------------------------------------
     def evict_prediction(self, new_boundary: int) -> list[int]:

@@ -61,6 +61,22 @@ def _coords(page, k, layout: Layout, num_rows: int, boundary: int,
     return row, lane
 
 
+def _route(page, num_rows: int, num_shards: int):
+    """Shard-router translation for one traced global page id.
+
+    Mirrors :func:`repro.shard.router.route` one scalar at a time —
+    round-robin striping, extras routed by their extra index. Static
+    ``num_rows`` (global) and ``num_shards`` resolve at trace time.
+    """
+    rows_local = num_rows // num_shards
+    is_extra = page >= num_rows
+    e = page - num_rows
+    shard = jnp.where(is_extra, e % num_shards, page % num_shards)
+    local = jnp.where(is_extra, rows_local + e // num_shards,
+                      page // num_shards)
+    return shard, local
+
+
 def _read_correct_kernel(pages_ref, is_sec_ref, storage_ref, codes_ref,
                          out_ref):
     i = pl.program_id(0)
@@ -102,4 +118,78 @@ def read_correct(storage: jax.Array, pages: jax.Array, layout: Layout,
         out_shape=jax.ShapeDtypeStruct((n, DATA_LANES, W), jnp.uint32),
         interpret=use_interpret(),
     )(pages.astype(jnp.int32), is_sec, storage, storage)
+    return out.reshape(n, DATA_LANES * W)
+
+
+def _read_routed_kernel(pages_ref, flags_ref, sid_ref, storage_ref,
+                        codes_ref, out_ref):
+    # flags: 0 = not owned by this shard (zeroed), 1 = owned non-SECDED,
+    # 2 = owned SECDED (decode-correct)
+    i = pl.program_id(0)
+    blk = storage_ref[...]                                # (1, 1, W)
+    fixed = decode_correct_block(blk, codes_ref[...])
+    f = flags_ref[i]
+    out = jnp.where(f == 2, fixed, blk)
+    out_ref[...] = jnp.where(f == 0, jnp.zeros_like(out), out)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("layout", "num_rows", "boundary",
+                                    "num_shards"))
+def read_correct_routed(storage: jax.Array, pages: jax.Array, layout: Layout,
+                        num_rows: int, boundary: int, num_shards: int,
+                        shard_id: jax.Array) -> jax.Array:
+    """Router-fused shard-local read: ONE pass from global ids to page data.
+
+    ``storage`` is one shard's ``(R_local, 9, W)`` slice, ``pages`` are
+    ``(n,)`` *global* ids, ``num_rows`` / ``boundary`` the *global*
+    geometry. The BlockSpec index map composes the shard router's
+    global-id -> (shard, local) translation with the universal layout
+    translation of :func:`_coords`, so the two-pass
+    route-then-read chain collapses into the scalar-prefetch index map —
+    no separate translation dispatch, no per-shard full-batch replication.
+    Rows not owned by ``shard_id`` (a traced int32 scalar, typically
+    ``jax.lax.axis_index``) fetch a clamped dummy block and come back
+    zeroed, so a cross-shard ``psum`` assembles the replicated result.
+    Returns ``(n, 8W)`` uint32.
+    """
+    n = pages.shape[0]
+    W = storage.shape[2]
+    rows_local = num_rows // num_shards
+    boundary_local = boundary // num_shards
+    ebase = extra_base_row(layout, boundary_local, W)
+    pages = pages.astype(jnp.int32)
+    sid = jnp.asarray(shard_id, jnp.int32).reshape(1)
+
+    def storage_index(i, k, pages_ref, flags_ref, sid_ref):
+        shard, local = _route(pages_ref[i], num_rows, num_shards)
+        local = jnp.where(shard == sid_ref[0], local, 0)
+        row, lane = _coords(local, k, layout, rows_local, boundary_local,
+                            ebase)
+        return row, lane, 0
+
+    def codes_index(i, k, pages_ref, flags_ref, sid_ref):
+        shard, local = _route(pages_ref[i], num_rows, num_shards)
+        local = jnp.where(shard == sid_ref[0], local, 0)
+        return jnp.clip(local, 0, rows_local - 1), CODE_LANE, k
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n, DATA_LANES),
+        in_specs=[pl.BlockSpec((1, 1, W), storage_index),
+                  pl.BlockSpec((1, 1, W // 8), codes_index)],
+        out_specs=pl.BlockSpec((1, 1, W), lambda i, k, p, f, s: (i, k, 0)),
+    )
+    # region is shard-invariant (global region == local region), so the
+    # owned/SECDED flags vectorise outside the grid walk
+    shard_v, local_v = _route(pages, num_rows, num_shards)
+    owned = shard_v == sid[0]
+    is_sec = (local_v >= boundary_local) & (local_v < rows_local)
+    flags = jnp.where(owned, jnp.where(is_sec, 2, 1), 0).astype(jnp.int32)
+    out = pl.pallas_call(
+        _read_routed_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, DATA_LANES, W), jnp.uint32),
+        interpret=use_interpret(),
+    )(pages, flags, sid, storage, storage)
     return out.reshape(n, DATA_LANES * W)

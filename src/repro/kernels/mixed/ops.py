@@ -25,6 +25,25 @@ def read_correct(storage: jax.Array, pages: jax.Array, layout: Layout,
     return ref.read_correct(storage, pages, layout, num_rows, boundary)
 
 
+def read_correct_routed(storage: jax.Array, pages: jax.Array, layout: Layout,
+                        num_rows: int, boundary: int, num_shards: int,
+                        shard_id: jax.Array,
+                        use_kernel: bool | None = None) -> jax.Array:
+    """Router-fused shard-local read of *global* page ids, one pass.
+
+    ``storage`` is one shard's ``(R_local, 9, W)`` slice; rows not owned by
+    ``shard_id`` return zeroed, so a ``psum`` over the ``banks`` axis
+    assembles the replicated batch (see
+    :func:`repro.shard.pool.read`). Kernel/oracle dispatch mirrors
+    :func:`read_correct`.
+    """
+    if use_kernel is None:
+        use_kernel = not use_interpret()
+    fn = kernel.read_correct_routed if use_kernel else ref.read_correct_routed
+    return fn(storage, pages, layout, num_rows, boundary, num_shards,
+              shard_id)
+
+
 def read_pool(state: PoolState, pages: jax.Array,
               use_kernel: bool | None = None) -> jax.Array:
     """Convenience wrapper taking a :class:`PoolState`."""

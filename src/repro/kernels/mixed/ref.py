@@ -26,3 +26,23 @@ def read_correct(storage: jax.Array, pages: jax.Array, layout: Layout,
         fixed, _, _ = secded.decode_block(data, storage[crow, CODE_LANE, :])
         data = jnp.where((region == REGION_SECDED)[:, None], fixed, data)
     return data
+
+
+def read_correct_routed(storage: jax.Array, pages: jax.Array, layout: Layout,
+                        num_rows: int, boundary: int, num_shards: int,
+                        shard_id: jax.Array) -> jax.Array:
+    """Unfused two-pass oracle for the router-fused shard-local read.
+
+    Pass 1 is the shard router's global-id -> (shard, local) translation
+    (:func:`repro.shard.router.route`); pass 2 the plain mixed-pool read of
+    the owned local ids against the shard's *local* geometry. Non-owned
+    rows come back zeroed, matching the kernel's psum-ready contract.
+    ``storage`` is one shard's ``(R_local, 9, W)`` slice; ``num_rows`` /
+    ``boundary`` are the *global* geometry.
+    """
+    from repro.shard import router
+    shard, local = router.route(pages, num_rows, num_shards)
+    owned = shard == jnp.asarray(shard_id, jnp.int32)
+    data = read_correct(storage, jnp.where(owned, local, 0), layout,
+                        num_rows // num_shards, boundary // num_shards)
+    return jnp.where(owned[:, None], data, 0)

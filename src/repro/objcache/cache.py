@@ -83,7 +83,7 @@ def _get_batch(state, index: HashIndex, queries: jax.Array,
             state.num_rows, state.boundary, index.probe,
             use_kernel=use_kernel)
     else:
-        data = state.read_any(page)
+        data = state.read(page)
     idx = jnp.minimum(off[:, None] + jnp.arange(max_len), data.shape[1] - 1)
     vals = jnp.take_along_axis(data, idx, axis=1)
     mask = (jnp.arange(max_len)[None, :] < length[:, None]) & found[:, None]
@@ -99,16 +99,16 @@ def _write_values(state, upages: jax.Array, inv: jax.Array,
     within them; distinct values sharing a page scatter into disjoint chunk
     spans of the same RMW image, so nothing clobbers. Codes (SECDED/parity)
     are maintained by the pool's engine on the write-back — local or
-    sharded alike (``PoolLike.read_any`` / ``write_any``).
+    sharded alike (``PoolLike.read`` / ``write``).
     """
-    imgs = state.read_any(upages)
+    imgs = state.read(upages)
     w = imgs.shape[1]
     span = values.shape[1]
     col = offs[:, None] + jnp.arange(span)
     col = jnp.where(jnp.arange(span)[None, :] < lens[:, None], col, w)
     imgs = imgs.at[inv[:, None], col].set(values.astype(jnp.uint32),
                                           mode="drop")
-    return state.write_any(upages, imgs)
+    return state.write(upages, imgs)
 
 
 _find_jit = jax.jit(hix.find)

@@ -183,7 +183,7 @@ def blocked_span(name: str, **args):
     Usage::
 
         with blocked_span("engine.step.gather") as hold:
-            pages = pool.read_pages(phys)
+            pages = pool.read(phys)
             hold(pages)
 
     ensures the span's duration covers device execution, not just async

@@ -14,11 +14,14 @@ The engine is vLLM-shaped but the data plane is this repo's:
     (admission, parking between turns, preempt-to-host under pressure);
   * a decode step is exactly three dispatches on any
     :class:`repro.core.pool.PoolLike` (local or CREAM-Shard): ONE batched
-    page gather (``read_pages`` with the flattened block tables as index
-    map — the mixed-pool engine's scalar-prefetch pattern), one fused
-    model step (:func:`repro.models.transformer.decode_step_paged` over
-    all slots), and ONE batched scatter of the updated current blocks
-    (``write_pages``). No Python per-sequence loop touches KV;
+    page gather (``pool.read`` with the flattened block tables as index
+    map — on a sharded pool the planned bank-aligned dispatch, ~``n/S``
+    pages per bank), one fused model step
+    (:func:`repro.models.transformer.decode_step_paged` over all slots,
+    optionally fused with the ``ppermute`` migration ring so scheduled
+    page moves overlap the attention compute), and ONE batched scatter of
+    the updated current blocks (``pool.write``). No Python per-sequence
+    loop touches KV;
   * prefill extracts the prompt's KV from the dense
     :func:`repro.models.transformer.prefill` state and packs it into the
     sequence's blocks with a single batched write.
@@ -152,6 +155,12 @@ class Engine:
         self._prefill = jax.jit(
             lambda p, toks: self.model.prefill(p, toks, max_len))
         self._attend = jax.jit(self._attend_fn)
+        # attend fused with the ppermute migration ring: ONE program, so
+        # XLA overlaps the ring's collectives with the attention matmuls
+        # (separate dispatches on the same devices would serialise)
+        self._attend_ring = jax.jit(self._attend_ring_fn,
+                                    donate_argnums=(4,))
+        self._pending_migration: tuple[np.ndarray, np.ndarray] | None = None
         self._pack = jax.jit(self._pack_fn)
         # the paged-attention gather: the kernels/mixed fused read with the
         # flattened block table as its scalar-prefetched index map (geometry
@@ -230,6 +239,36 @@ class Engine:
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return logits, nxt, cur_pages.reshape(B * L, -1)
 
+    def _attend_ring_fn(self, params, pages_u32, lens, toks, pool, src, dst):
+        """:meth:`_attend_fn` fused with the sharded pool's ``ppermute``
+        migration ring in ONE compiled program — the ring's cross-bank
+        exchange overlaps the attention compute instead of serialising
+        after it. ``pool``'s storage is donated (the caller installs the
+        returned pool). Contract: ``src``/``dst`` must not touch pages of
+        bound decode sequences (scheduled migrations are screened by
+        :meth:`schedule_migration`'s caller)."""
+        from repro.shard.pool import _migrate_impl
+        logits, nxt, cur_pages = self._attend_fn(params, pages_u32, lens,
+                                                 toks)
+        return logits, nxt, cur_pages, _migrate_impl(pool, src, dst)
+
+    def schedule_migration(self, src_pages, dst_pages) -> None:
+        """Queue a page migration to run overlapped with the next decode
+        step's compute (sharded pools: fused into the attend program so the
+        ring's ``ppermute`` steps interleave with the matmuls; local pools:
+        one fused migrate dispatch after compute). The pages must not
+        belong to bound decode sequences — relocating a bound page would
+        race the step's scatter; park or preempt the sequence first and
+        call :meth:`refresh_translation` after the step."""
+        src = np.asarray(src_pages, np.int32).reshape(-1)
+        dst = np.asarray(dst_pages, np.int32).reshape(-1)
+        if src.shape != dst.shape:
+            raise ValueError("src/dst page lists must match")
+        if self._pending_migration is not None:
+            src = np.concatenate([self._pending_migration[0], src])
+            dst = np.concatenate([self._pending_migration[1], dst])
+        self._pending_migration = (src, dst)
+
     def _pack_fn(self, k, v):
         """Prefill KV (L, S, Hkv, D) pair -> (L*maxB, page_words) pages."""
         L, maxB, bt = self.n_layers, self.kv.max_blocks, self._bt
@@ -249,19 +288,20 @@ class Engine:
         """The decode step's ONE page gather. Local pools take the
         :mod:`repro.kernels.mixed` fused read — the Pallas scalar-prefetch
         kernel on TPU, its vectorised jnp oracle (= the mixed-pool engine's
-        fast path) on CPU; sharded pools take the owner-select
-        ``read_pages`` dispatch."""
+        fast path) on CPU; sharded pools take the planned bank-aligned
+        dispatch behind ``pool.read`` (host stream planning + ONE jitted
+        per-bank gather, ~``n/S`` pages per bank)."""
         pool = self.pool
         if isinstance(pool, PoolState):
             # the fused read bypasses the pool's wrappers, so feed
-            # CREAM-Lens here (sharded pools record inside read_pages)
+            # CREAM-Lens here (sharded pools record inside pool.read)
             pool.memprof_record("gather", phys, stream="decode")
             return self._mixed_read(pool.storage,
                                     jnp.asarray(phys, jnp.int32),
                                     layout=pool.layout,
                                     num_rows=pool.num_rows,
                                     boundary=pool.boundary)
-        return pool.read_pages(phys)
+        return pool.read(phys)
 
     def _gather_pages_counts(self, phys: np.ndarray
                              ) -> tuple[jax.Array, jax.Array]:
@@ -273,7 +313,7 @@ class Engine:
         if isinstance(pool, PoolState):
             pool.memprof_record("gather", phys, stream="decode")
             return _read_correct_counts(pool, pages)
-        data, status = pool.read_pages_status(phys)
+        data, status = pool.read(phys, status=True)
         counts = _counts_only(pages, status, boundary=pool.boundary,
                               num_rows=pool.num_rows,
                               cream_idx=_cream_cls_index(pool.layout))
@@ -313,7 +353,7 @@ class Engine:
         ids = phys[:, :nb].reshape(-1)
         data = pages.reshape(self.n_layers, self.kv.max_blocks, -1)[:, :nb] \
             .reshape(len(ids), -1)
-        self.vm.pools[self.pool_name] = self.pool.write_pages(ids, data)
+        self.vm.pools[self.pool_name] = self.pool.write(ids, data)
         sess.cache_len = p
         sess.last_tok = int(jnp.argmax(logits[0, -1]))
         req.generated.append(sess.last_tok)
@@ -344,14 +384,39 @@ class Engine:
             else:
                 pages = self._gather_pages(phys.reshape(-1))  # ONE gather
             hold(pages)
-        with obs_tracing.blocked_span("engine.step.compute") as hold:
-            _, nxt, cur_pages = self._attend(self.params, pages,
-                                             jnp.asarray(lens),
-                                             jnp.asarray(toks))
-            hold(nxt)
+        pending = self._pending_migration
+        from repro.shard.pool import ShardedPool
+        if pending is not None and isinstance(self.pool, ShardedPool):
+            # ring overlapped with compute: ONE fused program
+            src, dst = pending
+            self._pending_migration = None
+            if obs_metrics.enabled():
+                obs_metrics.counter(
+                    obs_metrics.NAME_SHARD_RING_PAGES,
+                    "pages exchanged over the ppermute migration ring"
+                ).inc(int(src.shape[0]))
+            with obs_tracing.blocked_span("engine.step.compute_ring",
+                                          ring_pages=int(src.shape[0])) \
+                    as hold:
+                _, nxt, cur_pages, new_pool = self._attend_ring(
+                    self.params, pages, jnp.asarray(lens),
+                    jnp.asarray(toks), self.pool,
+                    jnp.asarray(src), jnp.asarray(dst))
+                self.vm.pools[self.pool_name] = new_pool
+                hold(nxt)
+        else:
+            with obs_tracing.blocked_span("engine.step.compute") as hold:
+                _, nxt, cur_pages = self._attend(self.params, pages,
+                                                 jnp.asarray(lens),
+                                                 jnp.asarray(toks))
+                hold(nxt)
+            if pending is not None:
+                self._pending_migration = None
+                self.vm.pools[self.pool_name] = self.pool.migrate(
+                    pending[0], pending[1])
         with obs_tracing.blocked_span("engine.step.scatter") as hold:
             cur_ids = self.kv.current_block_phys(rows, lens)  # (B, L)
-            self.vm.pools[self.pool_name] = self.pool.write_pages(
+            self.vm.pools[self.pool_name] = self.pool.write(
                 cur_ids.reshape(-1), cur_pages)             # ONE scatter
             hold(self.pool.storage)
         nxt = np.asarray(nxt)

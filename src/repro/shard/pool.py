@@ -13,23 +13,34 @@ gather/scatter, masked batched codecs — runs unchanged *inside each shard*
 under ``shard_map``. On TPU the per-shard read is the fused Pallas mixed
 kernel; on CPU it is the vectorised engine (the kernel's oracle).
 
-Three dispatch shapes, by locality:
+Every access is ONE device dispatch, in one of two shapes by id locality:
 
-  * :func:`read_any` / :func:`write_any` — arbitrary global page-id vectors.
-    The router (:mod:`repro.shard.router`) translates ids to (shard, local);
-    every shard traces the same program over the full batch and keeps only
-    the pages it owns (reads: owner-select on the stacked output; writes:
-    the engine's ``valid`` mask drops foreign pages). **No cross-shard
-    collectives** — the only inter-device motion is the final owner-select
-    gather that assembles the replicated result.
-  * :func:`read_streams` / :func:`write_streams` — bank-parallel hot path:
-    ``(S, n)`` page ids, stream ``s`` touching only shard ``s``'s pages
-    (``page % S == s``). Each bank serves its stream fully independently —
-    the measured Figs. 9–11 concurrency story (``benchmarks/bench_shard.py``).
-  * :func:`migrate_pages` — cross-shard relocation as an explicit
-    ``ppermute`` ring exchange: each shard reads its owned source pages,
-    the batch circulates around the ring, and every shard lands the pages
-    addressed to it with a masked code-maintaining write.
+  * **Fused traced dispatch** — :func:`read_any` / :func:`write_any`,
+    arbitrary (possibly traced) global page-id vectors. The router's
+    global-id -> (shard, local) translation is *fused into the access
+    itself*: reads dispatch the router-aware mixed kernel
+    (:func:`repro.kernels.mixed.ops.read_correct_routed`, whose
+    scalar-prefetch index map composes routing with the layout
+    translation), each shard zeroes the rows it does not own, and a single
+    ``psum`` over ``banks`` assembles the replicated batch. Writes compute
+    ownership in-body from ``axis_index`` and let the engine's ``valid``
+    mask drop foreign pages — no routed operands, no stacked outputs, no
+    owner-select chain.
+  * **Planned bank-aligned dispatch** — the concrete-id hot path behind
+    :meth:`ShardedPool.read` / :meth:`ShardedPool.write`. A host-side
+    numpy pass (:func:`repro.shard.router.plan_streams`) regroups the
+    batch into ``S`` padded per-bank streams plus one inverse permutation;
+    the single jitted program then does a per-bank gather of ~``n/S``
+    pages and the device-side permute back to batch order. Per-bank work
+    *shrinks* with ``S`` — the measured Figs. 9–11 concurrency story
+    (``benchmarks/bench_shard.py``). :func:`read_streams` /
+    :func:`write_streams` expose the aligned ``(S, n)`` form directly for
+    callers that already hold per-bank streams.
+
+:func:`migrate_pages` relocates pages across shard boundaries as an
+explicit ``ppermute`` ring exchange: each shard reads its owned source
+pages, the batch circulates around the ring, and every shard lands the
+pages addressed to it with a masked code-maintaining write.
 
 :func:`repartition` moves every shard's boundary in lockstep (one
 ``shard_map`` over the local repartition, which re-encodes in place), so
@@ -177,39 +188,105 @@ class ShardedPool:
     def capacity_gain(self) -> float:
         return self.num_extra_pages / self.num_rows
 
-    # -- PoolLike surface ---------------------------------------------------
+    # -- PoolLike surface (unified access API) ------------------------------
+    def _traced(self, *operands) -> bool:
+        return any(isinstance(x, jax.core.Tracer)
+                   for x in (self.storage, *operands))
+
+    def read(self, pages, *, status=False):
+        """Batch read for arbitrary global page ids — ONE device dispatch.
+
+        Traced ids compose into the enclosing trace via the fused
+        router-in-kernel path (:func:`read_any`). Concrete ids take the
+        planned bank-aligned path: host-side stream planning, then one
+        jitted program whose per-bank gather touches only ~``n/S`` pages.
+        """
+        if self._traced(pages):
+            return read_any_status(self, pages) if status \
+                else read_any(self, pages)
+        arr = pool_lib._as_page_array(self, pages)
+        op = "read_status" if status else "read"
+        _note_dispatch(op, arr.shape[0])
+        _memprof_routed(self, "gather", arr)
+        spages, _, inv = router.plan_streams(arr, self.num_rows,
+                                             self.num_shards)
+        fn = _read_planned_status_jitted if status else _read_planned_jitted
+        with obs_tracing.span("shard.fused.dispatch", op=op,
+                              pages=arr.shape[0], shards=self.num_shards):
+            return fn(self, jnp.asarray(spages), jnp.asarray(inv, jnp.int32))
+
+    def write(self, pages, data: jax.Array, *, valid=None) -> "ShardedPool":
+        """Code-maintaining batch write — ONE device dispatch.
+
+        ``valid`` optionally drops masked entries. Traced operands use the
+        fused in-body-ownership path (:func:`write_any`); concrete ids use
+        the planned bank-aligned path (pads and masked entries share the
+        engine's ``valid`` drop). The concrete path donates this pool's
+        storage — drop the old state immediately.
+        """
+        if self._traced(pages, data, valid):
+            return write_any(self, pages, data, valid=valid)
+        arr = pool_lib._as_page_array(self, pages)
+        n = arr.shape[0]
+        data = jnp.asarray(data).astype(jnp.uint32).reshape(n, -1)
+        if data.shape[1] != self.page_words:
+            raise ValueError(f"page data must be {self.page_words} words")
+        _note_dispatch("write", n)
+        _memprof_routed(self, "scatter", arr)
+        spages, svalid, inv = router.plan_streams(arr, self.num_rows,
+                                                  self.num_shards)
+        if valid is not None:
+            v = np.asarray(valid, bool).reshape(-1)
+            flat = svalid.reshape(-1)
+            flat[inv] &= v
+        with obs_tracing.span("shard.fused.dispatch", op="write",
+                              pages=n, shards=self.num_shards):
+            return _write_planned_jitted(self, jnp.asarray(spages),
+                                         jnp.asarray(svalid),
+                                         jnp.asarray(inv, jnp.int32), data)
+
+    def migrate(self, src_pages, dst_pages, *,
+                donate: bool = True) -> "ShardedPool":
+        """Cross-shard relocation over the ``ppermute`` ring
+        (see :func:`migrate_pages`)."""
+        return migrate_pages(self, src_pages, dst_pages, donate=donate)
+
+    def streams(self, pages, data=None, *, valid=None):
+        """Bank-aligned ``(S, n)`` stream access (see :func:`read_streams`).
+
+        With ``data=None`` reads, returning ``(S, n, page_words)`` still
+        sharded over ``banks``; with ``data`` writes (``valid`` optionally
+        masking entries) and returns the new pool.
+        """
+        if data is None:
+            return read_streams(self, pages)
+        return write_streams(self, pages, data, valid=valid)
+
+    # -- deprecated access surface (thin shims over the unified API) --------
+
     def read_any(self, pages) -> jax.Array:
+        pool_lib._warn_deprecated("read_any", "read(pages)")
         return read_any(self, pages)
 
     def read_any_status(self, pages) -> tuple[jax.Array, jax.Array]:
+        pool_lib._warn_deprecated("read_any_status", "read(pages, status=True)")
         return read_any_status(self, pages)
 
     def write_any(self, pages, data: jax.Array) -> "ShardedPool":
+        pool_lib._warn_deprecated("write_any", "write(pages, data)")
         return write_any(self, pages, data)
 
     def read_pages(self, pages) -> jax.Array:
-        arr = pool_lib._as_page_array(self, pages)
-        _note_dispatch("read", arr.shape[0])
-        _memprof_routed(self, "gather", arr)
-        with obs_tracing.span("shard.router.dispatch", op="read",
-                              pages=arr.shape[0], shards=self.num_shards):
-            return _read_any_jitted(self, arr)
+        pool_lib._warn_deprecated("read_pages", "read(pages)")
+        return self.read(pages)
 
     def read_pages_status(self, pages) -> tuple[jax.Array, jax.Array]:
-        arr = pool_lib._as_page_array(self, pages)
-        _note_dispatch("read_status", arr.shape[0])
-        _memprof_routed(self, "gather", arr)
-        with obs_tracing.span("shard.router.dispatch", op="read_status",
-                              pages=arr.shape[0], shards=self.num_shards):
-            return _read_any_status_jitted(self, arr)
+        pool_lib._warn_deprecated("read_pages_status", "read(pages, status=True)")
+        return self.read(pages, status=True)
 
     def write_pages(self, pages, data: jax.Array) -> "ShardedPool":
-        arr = pool_lib._as_page_array(self, pages)
-        _note_dispatch("write", arr.shape[0])
-        _memprof_routed(self, "scatter", arr)
-        with obs_tracing.span("shard.router.dispatch", op="write",
-                              pages=arr.shape[0], shards=self.num_shards):
-            return _write_any_jitted(self, arr, data)
+        pool_lib._warn_deprecated("write_pages", "write(pages, data)")
+        return self.write(pages, data)
 
     def evict_prediction(self, new_boundary: int) -> list[int]:
         return evicted_extra_pages(self, new_boundary)
@@ -268,65 +345,71 @@ def _local_state(state: ShardedPool, block: jax.Array) -> PoolState:
 
 def read_any_status(state: ShardedPool, pages
                     ) -> tuple[jax.Array, jax.Array]:
-    """Batch read + per-page status for arbitrary global page ids.
+    """Batch read + per-page status for arbitrary global page ids, fused.
 
-    Every shard runs the mixed-pool engine over the routed local ids (same
-    trace on every device — pages it does not own read harmless garbage),
-    and the owner's rows are selected from the stacked per-shard output.
-    Traceable; returns ``(data (n, page_words) uint32, status (n,) int32)``.
+    Every shard routes in-body (``axis_index`` ownership), reads its owned
+    local ids through the mixed-pool engine, zeroes foreign rows, and one
+    ``psum`` pair over ``banks`` assembles the replicated result — no
+    stacked per-shard output, no owner-select chain. Traceable; returns
+    ``(data (n, page_words) uint32, status (n,) int32)``.
     """
     pages = jnp.asarray(pages, jnp.int32).reshape(-1)
     n = pages.shape[0]
     if n == 0:
         return (jnp.zeros((0, state.page_words), jnp.uint32),
                 jnp.zeros((0,), jnp.int32))
-    shard, local = router.route(pages, state.num_rows, state.num_shards)
 
-    def body(block, loc):
+    def body(block, pg):
+        me = jax.lax.axis_index("banks")
+        shard, local = router.route(pg, state.num_rows, state.num_shards)
+        own = shard == me
         data, status = pool_lib.read_pages_any_status(
-            _local_state(state, block), loc)
-        return data[None], status[None]
+            _local_state(state, block), jnp.where(own, local, 0))
+        return (jax.lax.psum(jnp.where(own[:, None], data, 0), "banks"),
+                jax.lax.psum(jnp.where(own, status, 0), "banks"))
 
-    data_s, st_s = shard_map(
+    return shard_map(
         body, mesh=state.mesh, in_specs=(P("banks"), P(None)),
-        out_specs=(P("banks"), P("banks")))(state.storage, local)
-    pick = jnp.arange(n)
-    return data_s[shard, pick, :], st_s[shard, pick]
+        out_specs=(P(None), P(None)))(state.storage, pages)
 
 
 def read_any(state: ShardedPool, pages) -> jax.Array:
-    """Decode-corrected batch read (owner-selected per-shard fused read).
+    """Decode-corrected batch read: router fused into the kernel, one pass.
 
-    The per-shard read dispatches :mod:`repro.kernels.mixed` — the fused
-    Pallas mixed-pool kernel on TPU, its vectorised oracle elsewhere —
-    honouring ``state.use_kernel``.
+    Each shard dispatches the router-aware mixed kernel
+    (:func:`repro.kernels.mixed.ops.read_correct_routed` — the Pallas
+    scalar-prefetch index map composes the global-id -> (shard, local)
+    translation with the layout translation; the jnp oracle elsewhere),
+    zeroing rows it does not own, and a single ``psum`` over ``banks``
+    assembles the replicated batch. Honours ``state.use_kernel``.
     """
     from repro.kernels.mixed import ops as mixed_ops
     pages = jnp.asarray(pages, jnp.int32).reshape(-1)
     n = pages.shape[0]
     if n == 0:
         return jnp.zeros((0, state.page_words), jnp.uint32)
-    shard, local = router.route(pages, state.num_rows, state.num_shards)
 
-    def body(block, loc):
-        st = _local_state(state, block)
-        data = mixed_ops.read_correct(st.storage, loc, st.layout, st.num_rows,
-                                      st.boundary, use_kernel=state.use_kernel)
-        return data[None]
+    def body(block, pg):
+        me = jax.lax.axis_index("banks")
+        data = mixed_ops.read_correct_routed(
+            block[0], pg, state.layout, state.num_rows, state.boundary,
+            state.num_shards, me, use_kernel=state.use_kernel)
+        return jax.lax.psum(data, "banks")
 
-    data_s = shard_map(
+    return shard_map(
         body, mesh=state.mesh, in_specs=(P("banks"), P(None)),
-        out_specs=P("banks"))(state.storage, local)
-    return data_s[shard, jnp.arange(n), :]
+        out_specs=P(None))(state.storage, pages)
 
 
-def write_any(state: ShardedPool, pages, data: jax.Array) -> ShardedPool:
-    """Code-maintaining batch write for arbitrary global page ids.
+def write_any(state: ShardedPool, pages, data: jax.Array,
+              valid=None) -> ShardedPool:
+    """Code-maintaining batch write for arbitrary global page ids, fused.
 
-    Each shard traces the same masked engine write over the full batch; the
-    ``valid`` mask routes foreign pages' scatters out of range (dropped), so
-    no collectives are needed — each shard's storage slice is written purely
-    locally from the replicated data.
+    Each shard routes in-body and computes ownership from ``axis_index``;
+    the engine's ``valid`` mask routes foreign (and caller-masked) pages'
+    scatters out of range (dropped), so no collectives are needed — each
+    shard's storage slice is written purely locally from the replicated
+    data.
     """
     pages = jnp.asarray(pages, jnp.int32).reshape(-1)
     n = pages.shape[0]
@@ -335,18 +418,25 @@ def write_any(state: ShardedPool, pages, data: jax.Array) -> ShardedPool:
     data = data.astype(jnp.uint32).reshape(n, -1)
     if data.shape[1] != state.page_words:
         raise ValueError(f"page data must be {state.page_words} words")
-    shard, local = router.route(pages, state.num_rows, state.num_shards)
-    owned = router.owned_mask(shard, state.num_shards)
 
-    def body(block, loc, dat, own):
-        st = pool_lib.write_pages_any(_local_state(state, block), loc, dat,
-                                      valid=own[0])
+    def body(block, pg, dat, *vld):
+        me = jax.lax.axis_index("banks")
+        shard, local = router.route(pg, state.num_rows, state.num_shards)
+        own = shard == me
+        if vld:
+            own = own & vld[0]
+        st = pool_lib.write_pages_any(_local_state(state, block), local, dat,
+                                      valid=own)
         return st.storage[None]
 
+    operands = (state.storage, pages, data)
+    in_specs = [P("banks"), P(None), P(None)]
+    if valid is not None:
+        operands += (jnp.asarray(valid, bool).reshape(-1),)
+        in_specs.append(P(None))
     storage = shard_map(
-        body, mesh=state.mesh,
-        in_specs=(P("banks"), P(None), P(None), P("banks")),
-        out_specs=P("banks"))(state.storage, local, data, owned)
+        body, mesh=state.mesh, in_specs=tuple(in_specs),
+        out_specs=P("banks"))(*operands)
     return dataclasses.replace(state, storage=storage)
 
 
@@ -361,39 +451,91 @@ _write_any_jitted = jax.jit(write_any, donate_argnums=(0,))
 
 
 def _read_streams_impl(state: ShardedPool, pages: jax.Array) -> jax.Array:
-    S = state.num_shards
-    _, local = router.route(pages.reshape(-1), state.num_rows, S)
-    local = local.reshape(S, -1)
+    # Local translation happens in-body on each shard's own (1, n) slice —
+    # stream alignment guarantees ownership, so no shard id is needed.
+    from repro.kernels.mixed import ops as mixed_ops
 
-    def body(block, loc):
-        data, _ = pool_lib.read_pages_any_status(
-            _local_state(state, block), loc[0])
+    def body(block, pg):
+        _, local = router.route(pg[0], state.num_rows, state.num_shards)
+        data = mixed_ops.read_correct(
+            block[0], local, state.layout, state.rows_local,
+            state.boundary_local, use_kernel=state.use_kernel)
         return data[None]
 
     return shard_map(
         body, mesh=state.mesh, in_specs=(P("banks"), P("banks")),
-        out_specs=P("banks"))(state.storage, local)
+        out_specs=P("banks"))(state.storage, pages)
+
+
+def _read_streams_status_impl(state: ShardedPool, pages: jax.Array
+                              ) -> tuple[jax.Array, jax.Array]:
+    def body(block, pg):
+        _, local = router.route(pg[0], state.num_rows, state.num_shards)
+        data, status = pool_lib.read_pages_any_status(
+            _local_state(state, block), local)
+        return data[None], status[None]
+
+    return shard_map(
+        body, mesh=state.mesh, in_specs=(P("banks"), P("banks")),
+        out_specs=(P("banks"), P("banks")))(state.storage, pages)
 
 
 def _write_streams_impl(state: ShardedPool, pages: jax.Array,
-                        data: jax.Array) -> ShardedPool:
-    S = state.num_shards
-    _, local = router.route(pages.reshape(-1), state.num_rows, S)
-    local = local.reshape(S, -1)
-
-    def body(block, loc, dat):
-        st = pool_lib.write_pages_any(_local_state(state, block), loc[0],
-                                      dat[0].astype(jnp.uint32))
+                        data: jax.Array, valid=None) -> ShardedPool:
+    def body(block, pg, dat, *vld):
+        _, local = router.route(pg[0], state.num_rows, state.num_shards)
+        st = pool_lib.write_pages_any(
+            _local_state(state, block), local, dat[0].astype(jnp.uint32),
+            valid=vld[0][0] if vld else None)
         return st.storage[None]
 
+    operands = (state.storage, pages, data)
+    in_specs = [P("banks"), P("banks"), P("banks")]
+    if valid is not None:
+        operands += (valid,)
+        in_specs.append(P("banks"))
     storage = shard_map(
-        body, mesh=state.mesh, in_specs=(P("banks"), P("banks"), P("banks")),
-        out_specs=P("banks"))(state.storage, local, data)
+        body, mesh=state.mesh, in_specs=tuple(in_specs),
+        out_specs=P("banks"))(*operands)
     return dataclasses.replace(state, storage=storage)
 
 
 _read_streams_jitted = jax.jit(_read_streams_impl)
 _write_streams_jitted = jax.jit(_write_streams_impl)
+
+
+# The planned bank-aligned dispatch behind ShardedPool.read / .write:
+# plan_streams (host numpy) regroups the batch into (S, m) per-bank streams
+# + one inverse permutation; each program below is ONE jitted dispatch that
+# gathers ~n/S pages per bank and permutes back to batch order on device.
+
+def _read_planned_impl(state: ShardedPool, spages: jax.Array,
+                       inv: jax.Array) -> jax.Array:
+    data = _read_streams_impl(state, spages)
+    return data.reshape(-1, state.page_words)[inv]
+
+
+def _read_planned_status_impl(state: ShardedPool, spages: jax.Array,
+                              inv: jax.Array
+                              ) -> tuple[jax.Array, jax.Array]:
+    data, status = _read_streams_status_impl(state, spages)
+    return (data.reshape(-1, state.page_words)[inv],
+            status.reshape(-1)[inv])
+
+
+def _write_planned_impl(state: ShardedPool, spages: jax.Array,
+                        svalid: jax.Array, inv: jax.Array,
+                        data: jax.Array) -> ShardedPool:
+    S, m = spages.shape
+    sdata = jnp.zeros((S * m, state.page_words),
+                      jnp.uint32).at[inv].set(data.astype(jnp.uint32))
+    return _write_streams_impl(state, spages, sdata.reshape(S, m, -1),
+                               valid=svalid)
+
+
+_read_planned_jitted = jax.jit(_read_planned_impl)
+_read_planned_status_jitted = jax.jit(_read_planned_status_impl)
+_write_planned_jitted = jax.jit(_write_planned_impl, donate_argnums=(0,))
 
 
 def read_streams(state: ShardedPool, pages: jax.Array) -> jax.Array:
@@ -417,14 +559,18 @@ def read_streams(state: ShardedPool, pages: jax.Array) -> jax.Array:
 
 
 def write_streams(state: ShardedPool, pages: jax.Array,
-                  data: jax.Array) -> ShardedPool:
+                  data: jax.Array, valid=None) -> ShardedPool:
     """Per-bank scatter of ``S`` aligned streams (see :func:`read_streams`).
 
     ``pages`` is ``(S, n)`` shard-aligned global ids, ``data`` is
-    ``(S, n, page_words)``.
+    ``(S, n, page_words)``; ``valid`` (optional ``(S, n)`` bool) drops
+    masked entries via the engine's OOB-routing mask.
     """
     _memprof_routed(state, "scatter", pages, stream="streams")
-    return _write_streams_jitted(state, pages, data)
+    if valid is None:
+        return _write_streams_jitted(state, pages, data)
+    return _write_streams_jitted(state, pages, data,
+                                 jnp.asarray(valid, bool))
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.layouts import GROUP_ROWS
 
@@ -58,6 +59,52 @@ def unroute(shard, local, num_rows: int, num_shards: int) -> jax.Array:
     e_local = local - rows_local
     return jnp.where(is_extra, num_rows + e_local * num_shards + shard,
                      local * num_shards + shard).astype(jnp.int32)
+
+
+def route_np(pages: np.ndarray, num_rows: int, num_shards: int
+             ) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side (numpy) :func:`route` for concrete page-id vectors."""
+    p = np.asarray(pages, np.int64).reshape(-1)
+    rows_local = num_rows // num_shards
+    is_extra = p >= num_rows
+    e = p - num_rows
+    shard = np.where(is_extra, e % num_shards, p % num_shards)
+    local = np.where(is_extra, rows_local + e // num_shards, p // num_shards)
+    return shard, local
+
+
+def plan_streams(pages: np.ndarray, num_rows: int, num_shards: int
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Regroup concrete global ids into bank-aligned padded streams.
+
+    Returns ``(spages (S, m) int32, valid (S, m) bool, inv (n,) int64)``:
+    stream ``s`` holds exactly the batch entries shard ``s`` owns (original
+    order preserved within the stream), padded to a power-of-two width
+    ``m`` with shard ``s``'s own page id ``s`` (``valid`` False) so every
+    stream keeps the alignment invariant and pad reads are harmless.
+    ``inv[i] = s * m + pos`` recovers entry ``i`` from the flattened
+    ``(S * m, ...)`` stream output — the one device-side permute that
+    replaces the owner-select chain. This is the host half of the fused
+    dispatch: one numpy pass over ids the caller already holds, then ONE
+    jitted device program (see :meth:`repro.shard.ShardedPool.read`).
+    """
+    S = num_shards
+    p = np.asarray(pages, np.int64).reshape(-1)
+    shard, _ = route_np(p, num_rows, S)
+    counts = np.bincount(shard, minlength=S)
+    m = 1 << max(0, int(counts.max(initial=1) - 1)).bit_length()
+    order = np.argsort(shard, kind="stable")
+    starts = np.zeros(S, np.int64)
+    starts[1:] = np.cumsum(counts)[:-1]
+    within = np.arange(p.size) - np.repeat(starts, counts)
+    spages = np.broadcast_to(np.arange(S, dtype=np.int64)[:, None],
+                             (S, m)).copy()
+    valid = np.zeros((S, m), bool)
+    spages[shard[order], within] = p[order]
+    valid[shard[order], within] = True
+    inv = np.empty(p.size, np.int64)
+    inv[order] = shard[order] * m + within
+    return spages.astype(np.int32), valid, inv
 
 
 def owned_mask(shard: jax.Array, num_shards: int) -> jax.Array:

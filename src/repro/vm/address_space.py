@@ -342,7 +342,7 @@ class VirtualMemory:
             for pool_name, phys in picks:
                 by_pool.setdefault(pool_name, []).append(phys)
             for pool_name, phys_list in by_pool.items():
-                self.pools[pool_name] = self.pools[pool_name].write_pages(
+                self.pools[pool_name] = self.pools[pool_name].write(
                     phys_list,
                     jnp.zeros((len(phys_list), self.page_words), jnp.uint32))
         return vpns
@@ -387,7 +387,7 @@ class VirtualMemory:
             # uploads them once (no device round-trip before dispatch)
             with obs_tracing.span("vm.write", pool=pool_name,
                                   pages=len(items)):
-                self.pools[pool_name] = self.pools[pool_name].write_pages(
+                self.pools[pool_name] = self.pools[pool_name].write(
                     [p for _, p in items], data[idx])
             self.stats.device_writes += len(items)
         if obs_metrics.enabled():
@@ -429,7 +429,7 @@ class VirtualMemory:
             idx = jnp.asarray([i for i, _ in items], jnp.int32)
             with obs_tracing.span("vm.read", pool=pool_name,
                                   pages=len(items)):
-                data = self.pools[pool_name].read_pages([p for _, p in items])
+                data = self.pools[pool_name].read([p for _, p in items])
             out = out.at[idx].set(data)
             self.stats.device_reads += len(items)
         if obs_metrics.enabled():
@@ -480,7 +480,7 @@ class VirtualMemory:
             pool_name, phys = home
             self.allocators[pool_name].claim(phys, tenant, vpn)
             blob = self.swap.pop(pte.phys)
-            self.pools[pool_name] = self.pools[pool_name].write_pages(
+            self.pools[pool_name] = self.pools[pool_name].write(
                 [phys], jnp.asarray(blob)[None, :])
             space.entries[vpn] = PTE(pool_name, phys, pte.reliability,
                                      pte.segment)

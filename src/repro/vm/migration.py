@@ -16,7 +16,7 @@ The engine turns two events into zero-loss relocations:
 
 Destination writes for SECDED frames reuse the codes the kernel already
 computed (no second encode pass); everything else goes through the jitted
-mixed-pool engine (``write_pages_any_jit``), which maintains codes per
+mixed-pool engine (the unified ``pool.write``), which maintains codes per
 layout. Every step that touches pool storage — source gather, decode,
 re-encode, destination scatter — is a single traced dispatch per pool, so a
 migration transaction's data plane is jitted end-to-end; only the page-table
@@ -102,7 +102,7 @@ class MigrationEngine:
                 use_kernel=self.use_kernel)
             self.stats.kernel_batches += 1
             return data, codes
-        return state.read_pages(phys), None
+        return state.read(phys), None
 
     def _write_frames(self, pool_name: str, phys: list[int],
                       data: jnp.ndarray, codes: jnp.ndarray | None) -> None:
@@ -115,7 +115,7 @@ class MigrationEngine:
                 state.storage, jnp.asarray(phys, jnp.int32), data, codes)
             vm.pools[pool_name] = dataclasses.replace(state, storage=storage)
         else:
-            vm.pools[pool_name] = state.write_pages(phys, data)
+            vm.pools[pool_name] = state.write(phys, data)
 
     def _place(self, data: jnp.ndarray, codes: jnp.ndarray | None,
                victims: list[tuple[str, int, PTE]],

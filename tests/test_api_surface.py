@@ -1,0 +1,137 @@
+"""Unified pool access API: shims warn, internals never use old names.
+
+The api_redesign contract: every pool-like object exposes exactly
+``read(pages, *, status=False)`` / ``write(pages, data, *, valid=None)``
+/ ``migrate(src, dst, *, donate=True)`` / ``streams(pages, data=None,
+*, valid=None)``.  The six legacy names (``read_pages``,
+``read_pages_status``, ``write_pages``, ``read_any``,
+``read_any_status``, ``write_any``) survive one release as
+DeprecationWarning shims that forward bit-exactly — and nothing inside
+``src/`` or ``benchmarks/`` is allowed to call them.
+"""
+import os
+import re
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import pool as pool_lib  # noqa: E402
+from repro.core.layouts import Layout  # noqa: E402
+from repro.faults.shadow import ShadowedPool  # noqa: E402
+from repro.shard import make_sharded_pool  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEPRECATED = ("read_pages", "read_pages_status", "write_pages",
+              "read_any", "read_any_status", "write_any")
+
+
+def _local_pool():
+    p = pool_lib.make_pool(32, Layout.INTERWRAP, boundary=16, row_words=16)
+    return p.write(np.arange(p.num_pages),
+                   jnp.arange(p.num_pages * p.page_words,
+                              dtype=jnp.uint32).reshape(p.num_pages, -1))
+
+
+def _sharded_pool():
+    sp = make_sharded_pool(32, Layout.INTERWRAP, boundary=16, row_words=16,
+                           num_shards=2)
+    return sp.write(np.arange(sp.num_pages),
+                    jnp.arange(sp.num_pages * sp.page_words,
+                               dtype=jnp.uint32).reshape(sp.num_pages, -1))
+
+
+@pytest.fixture(params=["local", "sharded", "shadowed"])
+def pool(request):
+    if request.param == "local":
+        return _local_pool()
+    if request.param == "sharded":
+        return _sharded_pool()
+    sh = ShadowedPool(pool_lib.make_pool(32, Layout.INTERWRAP, boundary=16,
+                                         row_words=16))
+    return sh.write(np.arange(sh.num_pages),
+                    jnp.arange(sh.num_pages * sh.page_words,
+                               dtype=jnp.uint32).reshape(sh.num_pages, -1))
+
+
+def test_every_shim_warns_and_forwards(pool):
+    ids = np.arange(4)
+    want = np.asarray(pool.read(ids))
+    with pytest.warns(DeprecationWarning, match="read_pages is deprecated"):
+        got = pool.read_pages(ids)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    with pytest.warns(DeprecationWarning, match="read_any is deprecated"):
+        got = pool.read_any(ids)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+    _, want_st = pool.read(ids, status=True)
+    with pytest.warns(DeprecationWarning,
+                      match="read_pages_status is deprecated"):
+        d, st = pool.read_pages_status(ids)
+    np.testing.assert_array_equal(np.asarray(st), np.asarray(want_st))
+    with pytest.warns(DeprecationWarning,
+                      match="read_any_status is deprecated"):
+        d, st = pool.read_any_status(ids)
+    np.testing.assert_array_equal(np.asarray(st), np.asarray(want_st))
+
+    blob = jnp.full((4, pool.page_words), 7, jnp.uint32)
+    with pytest.warns(DeprecationWarning, match="write_pages is deprecated"):
+        pool = pool.write_pages(ids, blob)
+    np.testing.assert_array_equal(np.asarray(pool.read(ids)),
+                                  np.asarray(blob))
+    blob2 = jnp.full((4, pool.page_words), 9, jnp.uint32)
+    with pytest.warns(DeprecationWarning, match="write_any is deprecated"):
+        pool = pool.write_any(ids, blob2)
+    np.testing.assert_array_equal(np.asarray(pool.read(ids)),
+                                  np.asarray(blob2))
+
+
+def test_unified_api_is_warning_free(pool):
+    import warnings
+    ids = np.arange(4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        data = pool.read(ids)
+        pool.read(ids, status=True)
+        pool = pool.write(ids, data)
+        pool = pool.migrate(np.arange(2), np.arange(2, 4))
+        pool.streams(ids.reshape(2, 2))
+
+
+def test_no_internal_deprecated_call_sites():
+    """Nothing under src/ or benchmarks/ may call a deprecated name —
+    the shims exist for external callers only."""
+    rx = re.compile(r"\.(%s)\(" % "|".join(DEPRECATED))
+    offenders = []
+    for root in ("src", "benchmarks"):
+        for dirpath, _, files in os.walk(os.path.join(REPO, root)):
+            for fn in files:
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path) as f:
+                    for lineno, line in enumerate(f, 1):
+                        if rx.search(line):
+                            offenders.append(
+                                f"{os.path.relpath(path, REPO)}:{lineno}: "
+                                + line.strip())
+    assert not offenders, (
+        "deprecated pool API call sites in internal code:\n"
+        + "\n".join(offenders))
+
+
+def test_poollike_protocol_is_satisfied():
+    """Static-duck check: all three pool flavours carry the full unified
+    surface with keyword-only modifiers."""
+    import inspect
+    for obj in (_local_pool(), _sharded_pool(),
+                ShadowedPool(pool_lib.make_pool(16, Layout.PACKED,
+                                                boundary=8, row_words=16))):
+        for name in ("read", "write", "migrate", "streams"):
+            assert callable(getattr(obj, name)), (type(obj), name)
+        sig = inspect.signature(type(obj).read)
+        assert sig.parameters["status"].kind is inspect.Parameter.KEYWORD_ONLY
+        sig = inspect.signature(type(obj).write)
+        assert sig.parameters["valid"].kind is inspect.Parameter.KEYWORD_ONLY

@@ -142,3 +142,57 @@ def test_require_rows_respects_suite_filter(tmp_path):
     assert cr.check_required(fresh, r"fig9_.*_blp", suites={"shard"}) == []
     bad = cr.check_required(fresh, r"fig9_.*_blp", suites={"vm"})
     assert len(bad) == 1
+
+
+# ---------------------------------------------------------------------------
+# --require-min hard floor (Figs. 9–11 speedup gate)
+# ---------------------------------------------------------------------------
+
+
+def test_require_min_passes_above_floor(tmp_path, capsys):
+    fresh = str(tmp_path)
+    _write(fresh, "shard", {"fig9_real_ws_s8": 1.7, "fig9_real_ws_s4": 1.2})
+    assert cr.check_min(fresh, "fig9_real_ws_s8>1.0") == []
+    assert "all > 1.0" in capsys.readouterr().out
+
+
+def test_require_min_fails_below_floor(tmp_path):
+    fresh = str(tmp_path)
+    _write(fresh, "shard", {"fig9_real_ws_s8": 0.93})
+    bad = cr.check_min(fresh, "fig9_real_ws_s8>1.0")
+    assert len(bad) == 1 and "hard floor" in bad[0]
+
+
+def test_require_min_fails_at_exact_floor(tmp_path):
+    """The floor is strict: ws == 1.0 is parity, not a speedup."""
+    fresh = str(tmp_path)
+    _write(fresh, "shard", {"fig9_real_ws_s8": 1.0})
+    assert len(cr.check_min(fresh, "fig9_real_ws_s8>1.0")) == 1
+
+
+def test_require_min_fails_on_nonfinite(tmp_path):
+    """A NaN in a hard-gated row must fail, not compare False and pass."""
+    fresh = str(tmp_path)
+    _write(fresh, "shard", {"fig9_real_ws_s8": float("nan")})
+    bad = cr.check_min(fresh, "fig9_real_ws_s8>1.0")
+    assert len(bad) == 1 and "nan" in bad[0]
+
+
+def test_require_min_fails_when_row_family_missing(tmp_path):
+    fresh = str(tmp_path)
+    _write(fresh, "shard", {"other_metric": 2.0})
+    bad = cr.check_min(fresh, "fig9_real_ws_s8>1.0")
+    assert len(bad) == 1 and "no fresh rows match" in bad[0]
+
+
+def test_require_min_rejects_bad_spec(tmp_path):
+    assert len(cr.check_min(str(tmp_path), "fig9_real_ws_s8")) == 1
+    assert len(cr.check_min(str(tmp_path), "fig9>abc")) == 1
+
+
+def test_require_min_gates_every_match(tmp_path):
+    """A family pattern floors every matching row, not just one."""
+    fresh = str(tmp_path)
+    _write(fresh, "shard", {"fig9_real_ws_s8": 1.5, "fig9_real_ws_s4": 0.4})
+    bad = cr.check_min(fresh, r"fig9_real_ws_s\d+>0.5")
+    assert len(bad) == 1 and "ws_s4" in bad[0]

@@ -86,7 +86,7 @@ def _shadowed(num_rows, layout, boundary, seed=0):
     rng = np.random.default_rng(seed)
     data = rng.integers(0, 2**32, size=(sh.num_pages, sh.page_words),
                         dtype=np.uint32)
-    sh.write_pages(jnp.arange(sh.num_pages), jnp.asarray(data))
+    sh.write(jnp.arange(sh.num_pages), jnp.asarray(data))
     return sh
 
 
@@ -98,7 +98,7 @@ def _flip(sh, records):
 def _read_all(sh):
     import jax.numpy as jnp
     sh.census.clear()
-    return np.asarray(sh.read_pages(jnp.arange(sh.num_pages)))
+    return np.asarray(sh.read(jnp.arange(sh.num_pages)))
 
 
 def test_secded_adjacent_double_detected_never_silent():

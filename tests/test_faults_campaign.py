@@ -52,10 +52,10 @@ def test_step_pool_shard_local_parity():
     # part 1: all-SECDED pool, end-to-end page/status parity
     data = rng.integers(0, 2**32, size=(num_rows, 8 * 64), dtype=np.uint32)
     local = make_pool(num_rows, Layout.INTERWRAP, boundary=0, row_words=64)
-    local = local.write_pages(pages, jnp.asarray(data))
+    local = local.write(pages, jnp.asarray(data))
     sharded = make_sharded_pool(num_rows, Layout.INTERWRAP, boundary=0,
                                 num_shards=S, row_words=64)
-    sharded = sharded.write_pages(pages, jnp.asarray(data))
+    sharded = sharded.write(pages, jnp.asarray(data))
     fm_l = FaultModel.make(11, soft_rate=0.0, shape=(num_rows, 9, 64),
                            mix=mix, n_hard=3)
     fm_s = FaultModel.make(11, soft_rate=0.0, shape=(num_rows, 9, 64),
@@ -65,8 +65,8 @@ def test_step_pool_shard_local_parity():
     local, n_l = fm_l.step_pool(local)
     sharded, n_s = fm_s.step_pool(sharded)
     assert n_l == n_s > 0
-    got_l, st_l = local.read_pages_status(pages)
-    got_s, st_s = sharded.read_pages_status(pages)
+    got_l, st_l = local.read(pages, status=True)
+    got_s, st_s = sharded.read(pages, status=True)
     np.testing.assert_array_equal(np.asarray(got_l), np.asarray(got_s))
     np.testing.assert_array_equal(np.asarray(st_l), np.asarray(st_s))
 

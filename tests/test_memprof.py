@@ -39,15 +39,15 @@ class TestCapture:
     def test_disabled_by_default_records_nothing(self):
         assert not memprof.enabled()
         st = make_pool(16, Layout.INTERWRAP, boundary=8, row_words=16)
-        data = st.read_pages(np.arange(4))
-        st.write_pages(np.arange(4), data)
+        data = st.read(np.arange(4))
+        st.write(np.arange(4), data)
         assert memprof.records() == []
 
     def test_pool_wrappers_record_gather_and_scatter(self):
         memprof.enable()
         st = make_pool(16, Layout.INTERWRAP, boundary=8, row_words=16)
-        data = st.read_pages(np.arange(6))
-        st.write_pages(np.arange(6), data)
+        data = st.read(np.arange(6))
+        st.write(np.arange(6), data)
         recs = memprof.records()
         assert [(r.op, r.stream, len(r.pages)) for r in recs] == \
             [("gather", "main", 6), ("scatter", "main", 6)]
@@ -64,7 +64,7 @@ class TestCapture:
 
         @jax.jit
         def round_trip(state, pages):
-            return state.write_any(pages, state.read_any(pages))
+            return state.write(pages, state.read(pages))
 
         round_trip(st, np.arange(4))
         assert memprof.records() == []
@@ -266,8 +266,8 @@ class TestBankMachines:
 def _capture_small_pool():
     st = make_pool(16, Layout.INTERWRAP, boundary=8, row_words=16)
     memprof.enable()
-    data = st.read_pages(np.arange(st.num_pages))
-    st.write_pages(np.arange(st.num_pages), data)
+    data = st.read(np.arange(st.num_pages))
+    st.write(np.arange(st.num_pages), data)
     return st
 
 
@@ -449,8 +449,8 @@ class TestShardedWiring:
         sp = shard_pool.make_sharded_pool(32, Layout.INTERWRAP, boundary=16,
                                           num_shards=S, row_words=16)
         memprof.enable()
-        data = sp.read_pages(np.arange(32))
-        sp = sp.write_pages(np.arange(32), data)
+        data = sp.read(np.arange(32))
+        sp = sp.write(np.arange(32), data)
         recs = memprof.records()
         streams = {r.stream for r in recs}
         assert streams == {f"bank{s}" for s in range(S)}

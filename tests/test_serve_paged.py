@@ -101,11 +101,11 @@ def test_one_gather_one_scatter_per_step(monkeypatch):
     """A decode step touches the pool exactly twice: one batched read of
     every block, one batched write of the current blocks."""
     calls = {"read": 0, "write": 0}
-    orig_write = PoolState.write_pages
+    orig_write = PoolState.write
 
-    def counting_write(self, pages, data):
+    def counting_write(self, pages, data, **kw):
         calls["write"] += 1
-        return orig_write(self, pages, data)
+        return orig_write(self, pages, data, **kw)
 
     eng = Engine(CFG, max_batch=4, max_len=32, num_rows=64, row_words=64)
     for r in _reqs(_prompts(4), max_new=4):
@@ -118,7 +118,7 @@ def test_one_gather_one_scatter_per_step(monkeypatch):
         return orig_gather(phys)
 
     eng._gather_pages = counting_gather
-    monkeypatch.setattr(PoolState, "write_pages", counting_write)
+    monkeypatch.setattr(PoolState, "write", counting_write)
     eng.poll()                      # a pure decode step
     assert calls == {"read": 1, "write": 1}
     b, L, maxb = eng.max_batch, eng.n_layers, eng.kv.max_blocks
@@ -126,6 +126,38 @@ def test_one_gather_one_scatter_per_step(monkeypatch):
     rows = np.asarray([s.row if s is not None else -1
                        for s in eng.sched.slots])
     assert eng.kv.gather_phys(rows).shape == (b, L, maxb)
+
+
+def test_one_dispatch_per_step_sharded(monkeypatch):
+    """On a CREAM-Shard pool a decode step is ONE planned device dispatch
+    for the gather and ONE for the scatter — the fused path, not a
+    per-shard translate/select chain."""
+    if jax.device_count() < 2:
+        pytest.skip("needs multiple devices")
+    from repro.shard import pool as shard_pool
+
+    calls = {"read": 0, "write": 0}
+    orig_read = shard_pool._read_planned_jitted
+    orig_write = shard_pool._write_planned_jitted
+
+    def counting_read(*a, **kw):
+        calls["read"] += 1
+        return orig_read(*a, **kw)
+
+    def counting_write(*a, **kw):
+        calls["write"] += 1
+        return orig_write(*a, **kw)
+
+    vm = VirtualMemory(row_words=64)
+    vm.add_pool("kv", 64, Layout.INTERWRAP, boundary=None, shards=2)
+    eng = Engine(CFG, max_batch=4, max_len=32, vm=vm, seed=0)
+    for r in _reqs(_prompts(4), max_new=4):
+        eng.submit(r)
+    eng.poll()                      # admissions + prefill + first step
+    monkeypatch.setattr(shard_pool, "_read_planned_jitted", counting_read)
+    monkeypatch.setattr(shard_pool, "_write_planned_jitted", counting_write)
+    eng.poll()                      # a pure decode step
+    assert calls == {"read": 1, "write": 1}
 
 
 # ---------------------------------------------------------------------------
@@ -225,3 +257,82 @@ def test_paid_tier_lands_on_secded_frames():
         prot = {eng.vm.effective_protection(kv.tenant, int(v))
                 for v in vpns}
         assert prot <= want, f"{seq}: {prot}"
+
+
+# ---------------------------------------------------------------------------
+# Scheduled migration overlapped with decode compute
+# ---------------------------------------------------------------------------
+
+
+def _free_pages(vm, pool_name, n):
+    """Physical frames the KV allocator is NOT using, oldest first."""
+    alloc = vm.allocators[pool_name]
+    phys = [p for cls in alloc.free for p in alloc.free[cls]]
+    assert len(phys) >= n, "test needs spare frames"
+    return np.asarray(phys[:n], np.int32), np.asarray(phys[n:2 * n], np.int32)
+
+
+@pytest.mark.parametrize("shards", [1, 2])
+def test_schedule_migration_overlaps_decode(shards):
+    """A migration queued via :meth:`Engine.schedule_migration` runs during
+    the next decode step — fused into the attend program's ppermute ring on
+    sharded pools, one fused dispatch on local pools — moves the pages
+    bit-exactly, and leaves the decoded tokens untouched."""
+    if shards > 1 and jax.device_count() < shards:
+        pytest.skip("needs multiple devices")
+    prompts = _prompts(4)
+
+    def build():
+        if shards > 1:
+            vm = VirtualMemory(row_words=64)
+            vm.add_pool("kv", 64, Layout.INTERWRAP, boundary=None,
+                        shards=shards)
+            return Engine(CFG, max_batch=4, max_len=32, vm=vm, seed=0)
+        return Engine(CFG, max_batch=4, max_len=32, num_rows=64,
+                      row_words=64, seed=0)
+
+    # control: same prompts, no migration
+    ctl = build()
+    ctl_reqs = _reqs(prompts, max_new=6)
+    ctl.serve(ctl_reqs)
+
+    eng = build()
+    reqs = _reqs(prompts, max_new=6)
+    for r in reqs:
+        eng.submit(r)
+    eng.poll()                                  # admissions + prefill + step
+    src, dst = _free_pages(eng.vm, eng.pool_name, 3)
+    blob = np.arange(3 * eng.pool.page_words,
+                     dtype=np.uint32).reshape(3, -1) | 0xA0000000
+    eng.vm.pools[eng.pool_name] = eng.pool.write(src, jnp.asarray(blob))
+
+    ring_calls = {"n": 0}
+    orig_ring = eng._attend_ring
+
+    def counting_ring(*a):
+        ring_calls["n"] += 1
+        return orig_ring(*a)
+
+    eng._attend_ring = counting_ring
+    eng.schedule_migration(src, dst)
+    eng.poll()                                  # the overlapped step
+    assert eng._pending_migration is None
+    if shards > 1:
+        assert ring_calls["n"] == 1, "sharded pools must take the fused ring"
+    else:
+        assert ring_calls["n"] == 0
+    np.testing.assert_array_equal(np.asarray(eng.pool.read(dst)), blob)
+    while eng.sched.has_work():
+        eng.poll()
+    assert [r.generated for r in reqs] == [r.generated for r in ctl_reqs]
+
+
+def test_schedule_migration_coalesces_and_validates():
+    eng = Engine(CFG, max_batch=2, max_len=32, num_rows=64, row_words=64,
+                 seed=0)
+    eng.schedule_migration([1, 2], [3, 4])
+    eng.schedule_migration([5], [6])
+    src, dst = eng._pending_migration
+    assert src.tolist() == [1, 2, 5] and dst.tolist() == [3, 4, 6]
+    with pytest.raises(ValueError):
+        eng.schedule_migration([1, 2], [3])

@@ -54,12 +54,12 @@ def _spanning_ids(rng, npages, n=48):
 
 
 def _assert_parity(sp, lp, ids):
-    ds, ss = sp.read_pages_status(ids)
-    dl, sl = lp.read_pages_status(ids)
+    ds, ss = sp.read(ids, status=True)
+    dl, sl = lp.read(ids, status=True)
     np.testing.assert_array_equal(np.asarray(ds), np.asarray(dl))
     np.testing.assert_array_equal(np.asarray(ss), np.asarray(sl))
-    # the data-only path (per-shard fused mixed read) agrees too
-    np.testing.assert_array_equal(np.asarray(sp.read_pages(ids)),
+    # the data-only path (router-fused planned dispatch) agrees too
+    np.testing.assert_array_equal(np.asarray(sp.read(ids)),
                                   np.asarray(dl))
 
 
@@ -81,8 +81,8 @@ def test_read_write_repartition_parity(layout, num_shards):
     npages = min(sp.num_pages, lp.num_pages)
     ids = _spanning_ids(rng, npages)
     data = rng.integers(0, 2**32, (len(ids), sp.page_words), dtype=np.uint32)
-    sp = sp.write_pages(ids, jnp.asarray(data))
-    lp = lp.write_pages(ids, jnp.asarray(data))
+    sp = sp.write(ids, jnp.asarray(data))
+    lp = lp.write(ids, jnp.asarray(data))
     _assert_parity(sp, lp, ids)
 
     # boundary moves: surviving pages stay bit-exact; ids evicted along the
@@ -102,8 +102,8 @@ def test_read_write_repartition_parity(layout, num_shards):
         ids2 = _spanning_ids(rng, min(sp.num_pages, lp.num_pages))
         data2 = rng.integers(0, 2**32, (len(ids2), sp.page_words),
                              dtype=np.uint32)
-        sp = sp.write_pages(ids2, jnp.asarray(data2))
-        lp = lp.write_pages(ids2, jnp.asarray(data2))
+        sp = sp.write(ids2, jnp.asarray(data2))
+        lp = lp.write(ids2, jnp.asarray(data2))
         _assert_parity(sp, lp, ids2)
 
 
@@ -117,12 +117,12 @@ def test_migrate_pages_crosses_shards(num_shards):
     src = np.asarray([0, 1, 5, 9, 64, 65, 128, 130], np.int32)
     dst = np.asarray([3, 66, 10, 131, 2, 70, 11, 129], np.int32)
     data = rng.integers(0, 2**32, (len(src), sp.page_words), dtype=np.uint32)
-    sp = sp.write_pages(src, jnp.asarray(data))
-    lp = lp.write_pages(src, jnp.asarray(data))
-    sp = shard.migrate_pages(sp, src, dst)
-    lp = lp.write_pages(dst, lp.read_pages(src))   # local in-pool move
+    sp = sp.write(src, jnp.asarray(data))
+    lp = lp.write(src, jnp.asarray(data))
+    sp = sp.migrate(src, dst)
+    lp = lp.migrate(src, dst)                      # local in-pool move
     _assert_parity(sp, lp, dst)
-    np.testing.assert_array_equal(np.asarray(sp.read_pages(dst)), data)
+    np.testing.assert_array_equal(np.asarray(sp.read(dst)), data)
 
 
 @needs_devices
@@ -132,19 +132,19 @@ def test_stream_reads_match_general_path(num_shards):
     sp, _ = _pools(Layout.INTERWRAP, num_shards, 64)
     ids = rng.permutation(ROWS)[:ROWS // 2].astype(np.int32)
     data = rng.integers(0, 2**32, (len(ids), sp.page_words), dtype=np.uint32)
-    sp = sp.write_pages(ids, jnp.asarray(data))
+    sp = sp.write(ids, jnp.asarray(data))
     # bank-aligned streams: stream s gets pages with page % S == s
     n = ROWS // num_shards
     streams = np.stack([np.arange(n) * num_shards + s
                         for s in range(num_shards)]).astype(np.int32)
-    got = np.asarray(shard.read_streams(sp, jnp.asarray(streams)))
-    want = np.asarray(sp.read_pages(streams.reshape(-1))).reshape(got.shape)
+    got = np.asarray(sp.streams(jnp.asarray(streams)))
+    want = np.asarray(sp.read(streams.reshape(-1))).reshape(got.shape)
     np.testing.assert_array_equal(got, want)
-    # and write_streams lands where the general path reads it back
+    # and a streams write lands where the general path reads it back
     fresh = rng.integers(0, 2**32, got.shape, dtype=np.uint32)
-    sp = shard.write_streams(sp, jnp.asarray(streams), jnp.asarray(fresh))
+    sp = sp.streams(jnp.asarray(streams), jnp.asarray(fresh))
     np.testing.assert_array_equal(
-        np.asarray(sp.read_pages(streams.reshape(-1))),
+        np.asarray(sp.read(streams.reshape(-1))),
         fresh.reshape(-1, sp.page_words))
 
 
@@ -173,8 +173,8 @@ def _property_case(layout, S, boundary, seed, n_ops):
         ids = rng.permutation(npages)[:24].astype(np.int32)
         blob = rng.integers(0, 2**32, (len(ids), sp.page_words),
                             dtype=np.uint32)
-        sp = sp.write_pages(ids, jnp.asarray(blob))
-        lp = lp.write_pages(ids, jnp.asarray(blob))
+        sp = sp.write(ids, jnp.asarray(blob))
+        lp = lp.write(ids, jnp.asarray(blob))
         _assert_parity(sp, lp, ids)
         if layout != Layout.BASELINE_ECC and rng.random() < 0.5:
             nb = int(rng.choice([0, 64, 128]))
