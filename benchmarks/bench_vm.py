@@ -137,6 +137,53 @@ def migration_microbench(mode: str, rows: int, seed: int = 0) -> dict:
             "kernel_batches": engine.stats.kernel_batches}
 
 
+def scrub_writeback_microbench(rows: int, seed: int = 0) -> dict:
+    """Write-back scrub semantics, measured end to end: plant latent
+    single-bit errors across a SECDED + DAEC-tier pool, drive one
+    write-back read pass over every page, and verify storage is clean —
+    latent errors killed in one tick, not merely counted."""
+    rng = np.random.default_rng(seed)
+    boundary = ((rows // 4) // 8) * 8
+    daec = max(8, ((rows // 4) // 8) * 8)
+    pool = pool_lib.make_pool(rows, Layout.INTERWRAP, boundary=boundary,
+                              row_words=ROW_WORDS, daec_rows=daec)
+    ids = jnp.arange(pool.num_pages, dtype=jnp.int32)
+    data = _blob(rng, pool.num_pages, pool.page_words)
+    pool = pool.write(ids, data)
+
+    # plant latent single-bit errors only in correctable (protected) rows
+    protected = np.arange(boundary, rows)
+    rows_hit = rng.choice(protected, size=max(4, rows // 8), replace=False)
+    storage = np.array(pool.storage)
+    for r in rows_hit:
+        lane = int(rng.integers(0, 9))
+        word = int(rng.integers(0, ROW_WORDS))
+        storage[r, lane, word] ^= np.uint32(1 << int(rng.integers(0, 32)))
+    pool = dataclasses.replace(pool, storage=jnp.asarray(storage))
+
+    _, _, warm = pool.read_writeback(ids)           # warm the trace
+    del warm
+    pool = dataclasses.replace(pool, storage=jnp.asarray(storage))
+    t0 = time.perf_counter()
+    out, status, pool = pool.read_writeback(ids)
+    jax.block_until_ready((out, status, pool.storage))
+    dt = time.perf_counter() - t0
+
+    status = np.asarray(status)
+    killed = int(np.count_nonzero((status == 1) | (status == 2)))
+    assert (np.asarray(out) == np.asarray(data)).all(), \
+        "write-back read returned corrupted data"
+    # one campaign tick drove the planted latent errors to zero: a plain
+    # follow-up read must come back all-clean from the repaired storage
+    out2, status2 = pool.read(ids, status=True)
+    assert (np.asarray(status2) == 0).all(), "latent errors survived"
+    assert (np.asarray(out2) == np.asarray(data)).all()
+    n = pool.num_pages
+    return {"pages": n, "seconds": dt, "planted": len(rows_hit),
+            "killed": killed, "pages_s": n / dt if dt else 0.0,
+            "clean_after": int((np.asarray(status2) == 0).all())}
+
+
 def mixed_access_microbench(rows: int, seed: int = 0, reps: int = 10) -> dict:
     """Steady-state throughput of the jitted mixed-pool access engine."""
     rng = np.random.default_rng(seed)
@@ -181,6 +228,10 @@ def main():
     yield ("vm_mixed_access", x["seconds"] * 1e6 / x["pages"],
            f"us_per_page,pages_s={x['pages_s']:.1f},mb_s={x['mb_s']:.2f},"
            f"batch={x['batch']},roundtrip_ok={int(x['ok'])}")
+    s = scrub_writeback_microbench(rows)
+    yield ("vm_scrub_writeback", s["seconds"] * 1e6 / s["pages"],
+           f"us_per_page,planted={s['planted']},killed={s['killed']},"
+           f"clean_after={s['clean_after']}")
 
 
 if __name__ == "__main__":

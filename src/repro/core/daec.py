@@ -1,0 +1,221 @@
+"""SEC-DAEC(144,128) code — the ladder rung above SECDED.
+
+Dutta & Touba's SEC-DAEC class corrects any single-bit error AND any
+*adjacent* double-bit error (the dominant multi-bit upset shape in DRAM:
+two physically neighbouring cells of one word, `core.injection`'s
+``adjacent_double``). We realise it as **two bit-interleaved Hsiao(72,64)
+codewords per 128-bit superbeat** — the construction memory controllers
+actually ship, because interleaving turns adjacency into independence:
+
+  * A *superbeat* is 4 consecutive uint32 words (128 data bits). Even
+    physical bits (0, 2, 4, …) form codeword **A**, odd bits codeword
+    **B**; each codeword is a plain Hsiao(72,64) over its 64 bits.
+  * Any adjacent double-bit error hits one even and one odd bit — a
+    *single* error in each codeword — so both bits are corrected and the
+    data survives exact. (A direct (72,64) code cannot deliver this with
+    zero miscorrection: with odd-weight 8-bit columns every even-weight
+    syndrome is reachable by ≥16 distinct column pairs, so some double
+    would miscorrect. Doubling the syndrome space removes the collision.)
+  * A random double in the *same* codeword (two even bits, or two odd
+    bits) is Hsiao-detected — never silent, never miscorrected. A random
+    double split across codewords is corrected outright. Either way the
+    never-silent contract holds.
+  * The two 8-bit Hsiao codes bit-interleave into one 16-bit code field
+    (bit 2i = code-A bit i, bit 2i+1 = code-B bit i), two fields per
+    uint32 — so 128 data bits carry 16 code bits and the packed code
+    plane has EXACTLY the shapes of :mod:`repro.core.secded`
+    (``(..., D) -> (..., D//8)``). DAEC rows drop into the same code
+    lane, the same gathers, and the same kernels' tiling; the price is
+    compute (two Hsiao passes), not capacity.
+
+Everything here is pure jnp (usable inside Pallas kernels and as the
+oracle for ``repro.kernels.daec``). Status codes are shared with
+:mod:`repro.core.secded`; ``decode_block`` reports per-64-bit-beat status
+(the superbeat verdict broadcast to both constituent beats) so callers
+treat SECDED and DAEC blocks interchangeably.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import secded
+from repro.core.secded import (CLEAN, CORRECTED_CODE,  # noqa: F401
+                               CORRECTED_DATA, DETECTED_UNCORRECTABLE)
+
+NUM_DATA_BITS = 128
+NUM_CODE_BITS = 16
+SUPERBEAT_WORDS = 4        # uint32 words per superbeat
+
+
+def _compact_even(x: jax.Array) -> jax.Array:
+    """Gather the 16 even bits of a uint32 into its low half (Morton)."""
+    x = x & jnp.uint32(0x55555555)
+    x = (x | (x >> 1)) & jnp.uint32(0x33333333)
+    x = (x | (x >> 2)) & jnp.uint32(0x0F0F0F0F)
+    x = (x | (x >> 4)) & jnp.uint32(0x00FF00FF)
+    x = (x | (x >> 8)) & jnp.uint32(0x0000FFFF)
+    return x
+
+
+def _spread_even(x: jax.Array) -> jax.Array:
+    """Inverse of :func:`_compact_even`: low 16 bits -> even positions."""
+    x = x & jnp.uint32(0x0000FFFF)
+    x = (x | (x << 8)) & jnp.uint32(0x00FF00FF)
+    x = (x | (x << 4)) & jnp.uint32(0x0F0F0F0F)
+    x = (x | (x << 2)) & jnp.uint32(0x33333333)
+    x = (x | (x << 1)) & jnp.uint32(0x55555555)
+    return x
+
+
+def _spread16(v: int) -> int:
+    """Host-side 8->16 even-bit spread (H-matrix construction)."""
+    v &= 0xFF
+    v = (v | (v << 4)) & 0x0F0F
+    v = (v | (v << 2)) & 0x3333
+    v = (v | (v << 1)) & 0x5555
+    return v
+
+
+def _build_daec_columns() -> np.ndarray:
+    """The 144 H-matrix columns in the 16-bit interleaved-syndrome view.
+
+    Column ``p < 128`` is the syndrome of an error in data bit ``p`` of the
+    superbeat (Hsiao column ``p >> 1`` of codeword A or B, spread to the
+    even or odd syndrome bits); columns ``128 + q`` are the 16 check bits
+    (unit vectors). Invariants property-tested in
+    ``tests/test_codec_conformance.py``: all columns distinct and nonzero,
+    and every adjacent-column pair XORs to a value that is distinct across
+    pairs and collides with no single column — the defining SEC-DAEC
+    condition.
+    """
+    cols = [_spread16(int(secded._COLUMNS[p >> 1])) << (p & 1)
+            for p in range(NUM_DATA_BITS)]
+    cols += [1 << q for q in range(NUM_CODE_BITS)]
+    return np.asarray(cols, dtype=np.uint32)
+
+
+_COLUMNS = _build_daec_columns()
+H_COLUMNS = jnp.asarray(_COLUMNS.astype(np.int32))
+
+
+def split_superbeats(data: jax.Array
+                     ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """(..., 4k) uint32 -> (w0, w1, w2, w3) each (..., k): superbeat j =
+    words (4j, 4j+1, 4j+2, 4j+3)."""
+    if data.shape[-1] % SUPERBEAT_WORDS:
+        raise ValueError(f"last dim must be a multiple of 4, got {data.shape}")
+    g = data.reshape(*data.shape[:-1], data.shape[-1] // SUPERBEAT_WORDS,
+                     SUPERBEAT_WORDS)
+    return g[..., 0], g[..., 1], g[..., 2], g[..., 3]
+
+
+def merge_superbeats(w0, w1, w2, w3) -> jax.Array:
+    """Inverse of :func:`split_superbeats`."""
+    return jnp.stack([w0, w1, w2, w3], axis=-1).reshape(
+        *w0.shape[:-1], w0.shape[-1] * SUPERBEAT_WORDS)
+
+
+def _deinterleave(w0, w1, w2, w3):
+    """Superbeat words -> ((a_lo, a_hi), (b_lo, b_hi)) codeword planes."""
+    e = [_compact_even(w.astype(jnp.uint32)) for w in (w0, w1, w2, w3)]
+    o = [_compact_even(w.astype(jnp.uint32) >> 1) for w in (w0, w1, w2, w3)]
+    a_lo = e[0] | (e[1] << 16)
+    a_hi = e[2] | (e[3] << 16)
+    b_lo = o[0] | (o[1] << 16)
+    b_hi = o[2] | (o[3] << 16)
+    return (a_lo, a_hi), (b_lo, b_hi)
+
+
+def _interleave(a_lo, a_hi, b_lo, b_hi):
+    """Codeword planes -> superbeat words (inverse of :func:`_deinterleave`)."""
+    mask = jnp.uint32(0xFFFF)
+    w0 = _spread_even(a_lo & mask) | (_spread_even(b_lo & mask) << 1)
+    w1 = _spread_even(a_lo >> 16) | (_spread_even(b_lo >> 16) << 1)
+    w2 = _spread_even(a_hi & mask) | (_spread_even(b_hi & mask) << 1)
+    w3 = _spread_even(a_hi >> 16) | (_spread_even(b_hi >> 16) << 1)
+    return w0, w1, w2, w3
+
+
+def encode_words(w0, w1, w2, w3) -> jax.Array:
+    """16-bit DAEC code field for 128-bit superbeats given as 4 word planes.
+
+    Returns a uint32 array (same shape as each plane) with values in
+    [0, 65536): bit 2i = codeword-A Hsiao bit i, bit 2i+1 = codeword-B.
+    """
+    (a_lo, a_hi), (b_lo, b_hi) = _deinterleave(w0, w1, w2, w3)
+    code_a = secded.encode_words(a_lo, a_hi)
+    code_b = secded.encode_words(b_lo, b_hi)
+    return _spread_even(code_a) | (_spread_even(code_b) << 1)
+
+
+def decode_words(w0, w1, w2, w3, field) -> tuple[
+        jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Check + correct 128-bit superbeats against stored 16-bit code fields.
+
+    Returns ``(w0', w1', w2', w3', field', status)`` with ``status`` one
+    per superbeat: the worse of the two constituent Hsiao verdicts
+    (CLEAN / CORRECTED_DATA / CORRECTED_CODE / DETECTED_UNCORRECTABLE).
+    """
+    field = field.astype(jnp.uint32) & jnp.uint32(0xFFFF)
+    (a_lo, a_hi), (b_lo, b_hi) = _deinterleave(w0, w1, w2, w3)
+    code_a = _compact_even(field)
+    code_b = _compact_even(field >> 1)
+    a_lo, a_hi, code_a, st_a = secded.decode_words(a_lo, a_hi, code_a)
+    b_lo, b_hi, code_b, st_b = secded.decode_words(b_lo, b_hi, code_b)
+    w0, w1, w2, w3 = _interleave(a_lo, a_hi, b_lo, b_hi)
+    field = _spread_even(code_a) | (_spread_even(code_b) << 1)
+    return w0, w1, w2, w3, field, jnp.maximum(st_a, st_b)
+
+
+# ---------------------------------------------------------------------------
+# Block-level helpers — shape-identical to repro.core.secded so DAEC rows
+# share the SECDED code lane, gathers, and kernel tiling unchanged.
+# ---------------------------------------------------------------------------
+
+
+def pack_fields(fields: jax.Array) -> jax.Array:
+    """(..., k) uint32 16-bit values -> (..., k//2) uint32, 2 per word."""
+    if fields.shape[-1] % 2:
+        raise ValueError(f"field count must be even, got {fields.shape}")
+    g = fields.reshape(*fields.shape[:-1], fields.shape[-1] // 2, 2).astype(
+        jnp.uint32)
+    return (g[..., 0] | (g[..., 1] << 16)).astype(jnp.uint32)
+
+
+def unpack_fields(packed: jax.Array) -> jax.Array:
+    """(..., m) uint32 -> (..., 2m) uint32 16-bit values."""
+    shifts = jnp.asarray([0, 16], dtype=jnp.uint32)
+    fields = (packed[..., None] >> shifts) & jnp.uint32(0xFFFF)
+    return fields.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def encode_block(data: jax.Array) -> jax.Array:
+    """Encode a data block into its packed DAEC code plane.
+
+    Args:
+      data: uint32 (..., D) with D % 8 == 0 — same contract as
+            :func:`repro.core.secded.encode_block`.
+    Returns:
+      uint32 (..., D//8) packed 16-bit code fields (2 per word) — the same
+      shape SECDED packs, so the pool's code lane holds either.
+    """
+    w0, w1, w2, w3 = split_superbeats(data.astype(jnp.uint32))
+    return pack_fields(encode_words(w0, w1, w2, w3))
+
+
+def decode_block(data: jax.Array, packed_fields: jax.Array
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Check + correct a data block against its packed DAEC code plane.
+
+    Returns ``(data', packed_fields', status)`` — status is per 64-bit beat
+    (..., D//2) int32 (each superbeat's verdict broadcast to its two
+    beats), matching :func:`repro.core.secded.decode_block`'s shape.
+    """
+    w0, w1, w2, w3 = split_superbeats(data.astype(jnp.uint32))
+    fields = unpack_fields(packed_fields)
+    w0, w1, w2, w3, fields, st = decode_words(w0, w1, w2, w3, fields)
+    status = jnp.stack([st, st], axis=-1).reshape(
+        *st.shape[:-1], st.shape[-1] * 2)
+    return merge_superbeats(w0, w1, w2, w3), pack_fields(fields), status

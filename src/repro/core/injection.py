@@ -103,9 +103,12 @@ class ErrorMix:
 
     ``single`` flips one bit; ``adjacent_double`` flips two neighbouring
     bits of one uint32 word (one SECDED beat → detected-uncorrectable by
-    the Hsiao code, never miscorrected); ``random_double`` flips two
+    the Hsiao code, never miscorrected; *corrected* outright in the
+    SEC-DAEC tier, whose bit-interleaving splits the pair across two
+    codewords — see :mod:`repro.core.daec`); ``random_double`` flips two
     independent uniform bits (distinct beats with overwhelming probability
-    → each corrected). Weights need not sum to 1.
+    → each corrected; a same-beat pair under DAEC is detected, never
+    silent). Weights need not sum to 1.
     """
     single: float = 1.0
     adjacent_double: float = 0.0

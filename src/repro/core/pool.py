@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import parity8, secded
+from repro.core import daec, parity8, secded
 from repro.obs import memprof
 from repro.core.layouts import (CODE_LANE, DATA_LANES, DEFAULT_ROW_WORDS,
                                 GROUP_ROWS, LANES, REGION_SECDED, Layout,
@@ -50,15 +50,29 @@ def _warn_deprecated(old: str, new: str) -> None:
 @jax.tree_util.register_dataclass
 @dataclass
 class PoolState:
-    """Functional pool state. ``storage`` is the only traced leaf."""
+    """Functional pool state. ``storage`` is the only traced leaf.
+
+    ``daec_rows`` carves the TOP of the protected region into the SEC-DAEC
+    tier: pages ``[num_rows - daec_rows, num_rows)`` store
+    ``repro.core.daec`` 16-bit superbeat code fields in the same code lane
+    the SECDED rows use (identical shapes — see ``core/daec.py``), so the
+    ladder rung changes codec selection only, never placement. Invariant:
+    ``boundary <= num_rows - daec_rows``.
+    """
     storage: jax.Array  # (R, 9, W) uint32
     boundary: int = dataclasses.field(metadata=dict(static=True))
     layout: Layout = dataclasses.field(metadata=dict(static=True))
     row_words: int = dataclasses.field(metadata=dict(static=True))
+    daec_rows: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     @property
     def num_rows(self) -> int:
         return self.storage.shape[0]
+
+    @property
+    def daec_start(self) -> int:
+        """First DAEC-tier page id (== num_rows when the tier is empty)."""
+        return self.num_rows - self.daec_rows
 
     @property
     def page_words(self) -> int:
@@ -126,6 +140,16 @@ class PoolState:
         fn = _read_pages_any_status_jitted if status \
             else _read_pages_any_jitted
         return fn(self, arr)
+
+    def read_writeback(self, pages):
+        """Write-back read: like ``read(pages, status=True)`` but corrected
+        beats are persisted back to storage (latent errors killed in the
+        same pass). Returns ``(data, status, new_state)``."""
+        if self._traced(pages):
+            return read_pages_any_writeback(self, pages)
+        arr = _as_page_array(self, pages)
+        self.memprof_record("gather", arr)
+        return _read_pages_any_writeback_jitted(self, arr)
 
     def write(self, pages, data: jax.Array, *, valid=None) -> "PoolState":
         """Code-maintaining batch write; returns the new pool state.
@@ -210,6 +234,10 @@ class PoolState:
         """Repartition (see :func:`repartition`)."""
         return repartition(self, new_boundary)
 
+    def set_daec_rows(self, daec_rows: int) -> "PoolState":
+        """Resize the SEC-DAEC tier in place (see :func:`set_daec_rows`)."""
+        return set_daec_rows(self, daec_rows)
+
     def scrub(self, use_kernel: bool = False):
         """Sweep + repair in place; returns ``(new_state, ScrubStats)``."""
         from repro.core.scrubber import scrub as _scrub
@@ -253,6 +281,7 @@ class PoolLike(Protocol):
     num_extra_pages: int
     page_words: int
     boundary_step: int
+    daec_rows: int
 
     def read(self, pages, *, status=False): ...                     # noqa: E704
     def write(self, pages, data, *, valid=None) -> "PoolLike": ...  # noqa: E704
@@ -267,8 +296,11 @@ class PoolLike(Protocol):
 
 def make_pool(num_rows: int, layout: Layout = Layout.INTERWRAP,
               boundary: int | None = None,
-              row_words: int = DEFAULT_ROW_WORDS) -> PoolState:
-    """Create a zeroed pool. ``boundary=None`` puts the whole pool in CREAM mode."""
+              row_words: int = DEFAULT_ROW_WORDS,
+              daec_rows: int = 0) -> PoolState:
+    """Create a zeroed pool. ``boundary=None`` puts the whole pool in CREAM
+    mode; ``daec_rows`` carves the top of the protected region into the
+    SEC-DAEC tier (requires ``boundary <= num_rows - daec_rows``)."""
     if num_rows % GROUP_ROWS:
         raise ValueError(f"num_rows must be a multiple of {GROUP_ROWS}")
     boundary = num_rows if boundary is None else boundary
@@ -276,8 +308,12 @@ def make_pool(num_rows: int, layout: Layout = Layout.INTERWRAP,
         raise ValueError(f"bad boundary {boundary}")
     if layout == Layout.BASELINE_ECC and boundary != 0:
         boundary = 0  # whole pool SECDED
+    if not 0 <= daec_rows <= num_rows - boundary:
+        raise ValueError(
+            f"daec_rows ({daec_rows}) must fit the protected region "
+            f"[{boundary}, {num_rows})")
     storage = jnp.zeros((num_rows, LANES, row_words), dtype=jnp.uint32)
-    return PoolState(storage, boundary, layout, row_words)
+    return PoolState(storage, boundary, layout, row_words, daec_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -338,7 +374,8 @@ def read_page(state: PoolState, page: int) -> tuple[jax.Array, jax.Array]:
     data = _gather(state, pl)
     if page >= state.boundary and page < state.num_rows:
         codes = state.storage[pl.row0, CODE_LANE, :]
-        data, _, st = secded.decode_block(data, codes)
+        codec = daec if page >= state.daec_start else secded
+        data, _, st = codec.decode_block(data, codes)
         return data, jnp.max(st)
     if state.layout == Layout.PARITY and page < state.num_rows:
         prow = _parity_row_of_page(state.layout, state.boundary, page,
@@ -368,8 +405,8 @@ def write_page(state: PoolState, page: int, data: jax.Array) -> PoolState:
     pl = _placement(state, page)
     storage = _scatter(state, pl, data)
     if page >= state.boundary and page < state.num_rows:
-        codes = secded.encode_block(data)
-        storage = storage.at[pl.row0, CODE_LANE, :].set(codes)
+        codec = daec if page >= state.daec_start else secded
+        storage = storage.at[pl.row0, CODE_LANE, :].set(codec.encode_block(data))
     elif state.layout == Layout.PARITY:
         rel = page if page < state.num_rows else \
             state.boundary + (page - state.num_rows)
@@ -490,8 +527,14 @@ def read_pages_any_status(state: PoolState, pages
         crow = jnp.clip(pages, state.boundary, state.num_rows - 1)
         codes = state.storage[crow, CODE_LANE, :]
         fixed, _, st = secded.decode_block(data, codes)
+        pst = jnp.max(st, axis=-1)
+        if state.daec_rows > 0:               # DAEC tier atop the region
+            dfixed, _, dst = daec.decode_block(data, codes)
+            is_daec = is_sec & (pages >= state.daec_start)
+            fixed = jnp.where(is_daec[:, None], dfixed, fixed)
+            pst = jnp.where(is_daec, jnp.max(dst, axis=-1), pst)
         data = jnp.where(is_sec[:, None], fixed, data)
-        status = jnp.where(is_sec, jnp.max(st, axis=-1), 0).astype(jnp.int32)
+        status = jnp.where(is_sec, pst, 0).astype(jnp.int32)
     if state.layout == Layout.PARITY and state.boundary > 0:
         prow, off = parity_coords(state.num_rows, state.boundary, pages,
                                   state.row_words)
@@ -550,6 +593,9 @@ def write_pages_any(state: PoolState, pages, data: jax.Array,
             data.reshape(n, DATA_LANES, state.row_words), mode="drop")
     if state.boundary < state.num_rows:       # pool has SECDED rows
         codes = secded.encode_block(data)
+        if state.daec_rows > 0:               # DAEC tier atop the region
+            is_daec = is_sec & (pages >= state.daec_start)
+            codes = jnp.where(is_daec[:, None], daec.encode_block(data), codes)
         crow = jnp.where(is_sec, pages, state.num_rows)   # OOB -> dropped
         storage = storage.at[crow, CODE_LANE, :].set(codes, mode="drop")
     if state.layout == Layout.PARITY and state.boundary > 0:
@@ -565,6 +611,95 @@ def write_pages_any(state: PoolState, pages, data: jax.Array,
     return dataclasses.replace(state, storage=storage)
 
 
+def read_pages_any_writeback(state: PoolState, pages
+                             ) -> tuple[jax.Array, jax.Array, PoolState]:
+    """Write-back read: the fused read pass that *kills latent errors*.
+
+    Same gather + masked codecs as :func:`read_pages_any_status`, but
+    protected pages whose decode corrected a bit get their corrected data
+    AND corrected code scattered back to storage — the memory-controller
+    write-back scrub semantic ("correct on read, persist the fix") instead
+    of correct-and-forget. Returns ``(data, status, new_state)``; pages
+    that were clean or uncorrectable leave storage untouched, so the pass
+    is idempotent and a follow-up read of the same pages reports CLEAN for
+    everything it corrected.
+    """
+    pages = _as_page_array(state, pages)
+    state.memprof_record("gather", pages)
+    n = pages.shape[0]
+    if n == 0:
+        return (jnp.zeros((0, state.page_words), jnp.uint32),
+                jnp.zeros((0,), jnp.int32), state)
+    rows, lanes, region = page_coords(state.layout, state.num_rows,
+                                      state.boundary, pages, state.row_words)
+    data = state.storage[rows, lanes, :].reshape(n, -1)
+    is_sec = region == REGION_SECDED
+    status = jnp.zeros((n,), jnp.int32)
+    storage = state.storage
+    if state.boundary < state.num_rows:       # pool has protected rows
+        crow = jnp.clip(pages, state.boundary, state.num_rows - 1)
+        codes = storage[crow, CODE_LANE, :]
+        fixed, fcodes, st = secded.decode_block(data, codes)
+        pst = jnp.max(st, axis=-1)
+        if state.daec_rows > 0:
+            dfixed, dcodes, dst = daec.decode_block(data, codes)
+            is_daec = is_sec & (pages >= state.daec_start)
+            fixed = jnp.where(is_daec[:, None], dfixed, fixed)
+            fcodes = jnp.where(is_daec[:, None], dcodes, fcodes)
+            pst = jnp.where(is_daec, jnp.max(dst, axis=-1), pst)
+        data = jnp.where(is_sec[:, None], fixed, data)
+        status = jnp.where(is_sec, pst, 0).astype(jnp.int32)
+        # scatter the fix: only protected pages with a corrected beat
+        # (uncorrectable pages must keep their evidence for the monitor)
+        wb = is_sec & ((status == secded.CORRECTED_DATA)
+                       | (status == secded.CORRECTED_CODE))
+        wrow = jnp.where(wb, pages, state.num_rows)       # OOB -> dropped
+        storage = storage.at[wrow, :DATA_LANES, :].set(
+            data.reshape(n, DATA_LANES, state.row_words), mode="drop")
+        storage = storage.at[wrow, CODE_LANE, :].set(fcodes, mode="drop")
+    if state.layout == Layout.PARITY and state.boundary > 0:
+        prow, off = parity_coords(state.num_rows, state.boundary, pages,
+                                  state.row_words)
+        idx = off[:, None] + jnp.arange(state.row_words // 8)
+        packed = storage[jnp.clip(prow, 0, state.num_rows - 1)[:, None],
+                         CODE_LANE, idx]
+        pst = jnp.max(parity8.check_lines_packed(data, packed), axis=-1) * 3
+        status = jnp.where(is_sec, status, pst.astype(jnp.int32))
+    return data, status, dataclasses.replace(state, storage=storage)
+
+
+def set_daec_rows(state: PoolState, daec_rows: int) -> PoolState:
+    """Re-tier the top of the protected region to/from SEC-DAEC.
+
+    Converts the code lane of every affected row in place: decode with the
+    outgoing codec (last chance to correct), re-encode with the incoming
+    one. Data survives bit-exact — safe on occupied frames — because both
+    codecs share storage shapes and the decode corrects before re-encoding.
+    """
+    n = int(daec_rows)
+    R = state.num_rows
+    if not 0 <= n <= R - state.boundary:
+        raise ValueError(
+            f"daec_rows ({n}) must fit the protected region "
+            f"[{state.boundary}, {R})")
+    old = state.daec_rows
+    if n == old:
+        return state
+    rows = jnp.arange(R - max(old, n), R - min(old, n), dtype=jnp.int32)
+    data = state.storage[rows, :DATA_LANES, :].reshape(rows.shape[0], -1)
+    codes = state.storage[rows, CODE_LANE, :]
+    if n > old:   # SECDED -> DAEC
+        fixed, _, _ = secded.decode_block(data, codes)
+        new_codes = daec.encode_block(fixed)
+    else:         # DAEC -> SECDED
+        fixed, _, _ = daec.decode_block(data, codes)
+        new_codes = secded.encode_block(fixed)
+    storage = state.storage.at[rows, :DATA_LANES, :].set(
+        fixed.reshape(-1, DATA_LANES, state.row_words))
+    storage = storage.at[rows, CODE_LANE, :].set(new_codes)
+    return dataclasses.replace(state, storage=storage, daec_rows=n)
+
+
 # Pre-jitted engine entry points for the hot paths (the VM data plane).
 # ``boundary`` / ``layout`` / ``row_words`` are static pytree metadata, so
 # each pool mode compiles once; page ids and data stay dynamic. Each wrapper
@@ -573,6 +708,7 @@ def write_pages_any(state: PoolState, pages, data: jax.Array,
 # behaviour is preserved on the jitted paths too.
 _read_pages_any_jitted = jax.jit(read_pages_any)
 _read_pages_any_status_jitted = jax.jit(read_pages_any_status)
+_read_pages_any_writeback_jitted = jax.jit(read_pages_any_writeback)
 _write_pages_any_jitted = jax.jit(write_pages_any, donate_argnums=(0,))
 _write_pages_any_valid_jitted = jax.jit(
     lambda state, pages, data, valid: write_pages_any(state, pages, data,
@@ -672,6 +808,11 @@ def repartition(state: PoolState, new_boundary: int
     """
     if new_boundary % GROUP_ROWS or not 0 <= new_boundary <= state.num_rows:
         raise ValueError(f"bad boundary {new_boundary}")
+    if new_boundary > state.daec_start:
+        raise ValueError(
+            f"boundary {new_boundary} would overlap the DAEC tier "
+            f"[{state.daec_start}, {state.num_rows}) — shrink it first "
+            "(set_daec_rows)")
     old = state.boundary
     info = {"old_boundary": old, "new_boundary": new_boundary,
             "evicted_extra_pages": [], "pages_reencoded": 0}
@@ -709,12 +850,13 @@ def repartition(state: PoolState, new_boundary: int
             secded.encode_block(data))
         info["pages_reencoded"] = old - new_boundary
         new_state = PoolState(storage, new_boundary, state.layout,
-                              state.row_words)
+                              state.row_words, state.daec_rows)
     else:  # CREAM region grows -> reclaim code lanes
         # One batched decode of the surrendered span with its outgoing codes
         # (last chance to correct), then one batched re-place under the CREAM
         # layout (data scatter + code-lane scatter inside write_pages_any).
-        tmp = PoolState(storage, new_boundary, state.layout, state.row_words)
+        tmp = PoolState(storage, new_boundary, state.layout, state.row_words,
+                        state.daec_rows)
         affected = jnp.arange(old, new_boundary, dtype=jnp.int32)
         block = state.storage[affected, :DATA_LANES, :].reshape(
             affected.shape[0], -1)

@@ -14,6 +14,7 @@ from repro.core.layouts import CAPACITY_GAIN, Layout
 
 
 class Protection(enum.Enum):
+    DAEC = "daec"        # correct 1 + any adjacent 2 per 128-bit superbeat — 0%
     SECDED = "secded"    # correct 1 / detect 2 per 64-bit beat — 0% extra capacity
     PARITY = "parity"    # detect only, 8-bit parity per 64B line — +10.7%
     NONE = "none"        # no protection — +12.5%
@@ -21,8 +22,12 @@ class Protection(enum.Enum):
 
 #: Layouts admissible for each protection level. The first entry is the
 #: default (best-performing per the paper's evaluation: InterWrap for
-#: correction-free, rank-subset-based packing for parity).
+#: correction-free, rank-subset-based packing for parity). DAEC shares
+#: SECDED's physical layout — its 16-bit superbeat code fields pack into
+#: the same code lane (see ``repro.core.daec``), so the rung costs extra
+#: decode compute, not capacity.
 ADMISSIBLE_LAYOUTS = {
+    Protection.DAEC: (Layout.BASELINE_ECC,),
     Protection.SECDED: (Layout.BASELINE_ECC,),
     Protection.PARITY: (Layout.PARITY,),
     Protection.NONE: (Layout.INTERWRAP, Layout.RANK_SUBSET, Layout.PACKED),
@@ -63,7 +68,15 @@ class RegionSpec:
                           rows, **kw)
 
 
-_ORDER = [Protection.NONE, Protection.PARITY, Protection.SECDED]
+_ORDER = [Protection.NONE, Protection.PARITY, Protection.SECDED,
+          Protection.DAEC]
+
+
+def ladder() -> tuple[Protection, ...]:
+    """The full code ladder, strongest first — the single source of truth
+    for per-class plumbing (obs fold matrices, SLO class maps, dashboards).
+    Derive from this, never hardcode the class count."""
+    return tuple(reversed(_ORDER))
 
 
 def stronger(p: Protection) -> Protection:

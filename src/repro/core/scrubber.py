@@ -13,7 +13,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.core import parity8, secded
+from repro.core import daec, parity8, secded
 from repro.core.layouts import CODE_LANE, DATA_LANES, Layout
 from repro.core.pool import PoolState
 
@@ -28,6 +28,9 @@ class ScrubStats:
     parity_lines_checked: int = 0
     parity_corrupt_lines: int = 0
     corrupt_rows: tuple[int, ...] = ()
+    #: Corrections persisted back to storage this sweep — latent errors that
+    #: can no longer pair up with a future flip into an uncorrectable double.
+    latent_errors_killed: int = 0
 
     @property
     def corrected(self) -> int:
@@ -41,15 +44,18 @@ class ScrubStats:
         return errors / checked if checked else 0.0
 
 
-def _scrub_secded_rows(storage: jax.Array, start: int) -> tuple[
+def _scrub_secded_rows(storage: jax.Array, start: int,
+                       stop: int | None = None) -> tuple[
         jax.Array, jax.Array, jax.Array]:
-    """Decode+correct rows [start, R). Returns (storage', status, row_bad)."""
-    data = storage[start:, :DATA_LANES, :].reshape(storage.shape[0] - start, -1)
-    codes = storage[start:, CODE_LANE, :]
+    """Decode+correct rows [start, stop). Returns (storage', status, row_bad)."""
+    if stop is None:
+        stop = storage.shape[0]
+    data = storage[start:stop, :DATA_LANES, :].reshape(stop - start, -1)
+    codes = storage[start:stop, CODE_LANE, :]
     data2, codes2, status = secded.decode_block(data, codes)
-    storage = storage.at[start:, :DATA_LANES, :].set(
+    storage = storage.at[start:stop, :DATA_LANES, :].set(
         data2.reshape(-1, DATA_LANES, storage.shape[2]))
-    storage = storage.at[start:, CODE_LANE, :].set(codes2)
+    storage = storage.at[start:stop, CODE_LANE, :].set(codes2)
     row_bad = jnp.max(status, axis=-1) == secded.DETECTED_UNCORRECTABLE
     return storage, status, row_bad
 
@@ -57,6 +63,30 @@ def _scrub_secded_rows(storage: jax.Array, start: int) -> tuple[
 @jax.jit
 def _scrub_secded_jit(storage: jax.Array, start: int):
     return _scrub_secded_rows(storage, start)
+
+
+def _scrub_daec_rows(storage: jax.Array, start: int, use_kernel: bool
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode+correct the DAEC tier rows [start, R).
+
+    Per-row code volume is W words (= D//8 for D = 8W data words), so the
+    DAEC block codec consumes the rows' code lane directly — no dedicated
+    scrub kernel needed; the fused ``kernels/daec`` decode IS the kernel
+    path.
+    """
+    n = storage.shape[0] - start
+    data = storage[start:, :DATA_LANES, :].reshape(n, -1)
+    codes = storage[start:, CODE_LANE, :]
+    if use_kernel:
+        from repro.kernels.daec import ops as daec_ops
+        data2, codes2, status = daec_ops.decode(data, codes)
+    else:
+        data2, codes2, status = daec.decode_block(data, codes)
+    storage = storage.at[start:, :DATA_LANES, :].set(
+        data2.reshape(-1, DATA_LANES, storage.shape[2]))
+    storage = storage.at[start:, CODE_LANE, :].set(codes2)
+    row_bad = jnp.max(status, axis=-1) == daec.DETECTED_UNCORRECTABLE
+    return storage, status, row_bad
 
 
 def scrub(state: PoolState, use_kernel: bool = False
@@ -75,23 +105,31 @@ def _scrub_impl(state: PoolState, use_kernel: bool
                 ) -> tuple[PoolState, ScrubStats]:
     storage = state.storage
     B, R = state.boundary, state.num_rows
-    kw: dict = {}
+    D = state.daec_start            # SECDED span ends where the DAEC tier begins
 
     corrected_data = corrected_code = detected = 0
     beats = 0
     corrupt_rows: list[int] = []
 
-    if B < R:  # SECDED region
+    if B < D:  # SECDED region
         if use_kernel:
             from repro.kernels.scrub import ops as scrub_ops
-            storage, status, row_bad = scrub_ops.scrub_secded(storage, B)
+            storage, status, row_bad = scrub_ops.scrub_secded(storage, B, D)
         else:
-            storage, status, row_bad = _scrub_secded_rows(storage, B)
+            storage, status, row_bad = _scrub_secded_rows(storage, B, D)
         beats = int(status.size)
         corrected_data = int(jnp.sum(status == secded.CORRECTED_DATA))
         corrected_code = int(jnp.sum(status == secded.CORRECTED_CODE))
         detected = int(jnp.sum(status == secded.DETECTED_UNCORRECTABLE))
         corrupt_rows += [B + i for i in jnp.where(row_bad)[0].tolist()]
+
+    if D < R:  # DAEC tier (top rows) — stronger codec, same sweep semantics
+        storage, status, row_bad = _scrub_daec_rows(storage, D, use_kernel)
+        beats += int(status.size)
+        corrected_data += int(jnp.sum(status == secded.CORRECTED_DATA))
+        corrected_code += int(jnp.sum(status == secded.CORRECTED_CODE))
+        detected += int(jnp.sum(status == secded.DETECTED_UNCORRECTABLE))
+        corrupt_rows += [D + i for i in jnp.where(row_bad)[0].tolist()]
 
     parity_lines = parity_corrupt = 0
     if state.layout == Layout.PARITY and B > 0:
@@ -116,4 +154,5 @@ def _scrub_impl(state: PoolState, use_kernel: bool
         parity_lines_checked=parity_lines,
         parity_corrupt_lines=parity_corrupt,
         corrupt_rows=tuple(corrupt_rows),
+        latent_errors_killed=corrected_data + corrected_code,
     )

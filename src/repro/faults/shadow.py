@@ -114,6 +114,14 @@ class ShadowedPool:
         return self.inner.boundary_step
 
     @property
+    def daec_rows(self) -> int:
+        return self.inner.daec_rows
+
+    @property
+    def daec_start(self) -> int:
+        return self.inner.daec_start
+
+    @property
     def storage(self):
         return self.inner.storage
 
@@ -174,6 +182,13 @@ class ShadowedPool:
         data, st = self.inner.read(pages, status=True)
         self._classify(pages, data, st)
         return (data, st) if status else data
+
+    def read_writeback(self, pages):
+        # storage repairs toward the stored codewords; logical truth — and
+        # therefore the shadow — is unchanged, so the oracle still applies
+        data, st, self.inner = self.inner.read_writeback(pages)
+        self._classify(pages, data, st)
+        return data, st, self
 
     def write(self, pages, data, *, valid=None) -> "ShadowedPool":
         self.inner = self.inner.write(pages, data, valid=valid)
@@ -243,6 +258,11 @@ class ShadowedPool:
         # (what the system wrote) is unchanged, so the shadow stays put
         self.inner, stats = self.inner.scrub(use_kernel=use_kernel)
         return self, stats
+
+    def set_daec_rows(self, daec_rows: int) -> "ShadowedPool":
+        # re-encoding preserves logical contents, so the shadow stays put
+        self.inner = self.inner.set_daec_rows(daec_rows)
+        return self
 
     # -- injection -----------------------------------------------------------
     def inject(self, fault_model) -> int:

@@ -10,6 +10,7 @@ Kernels run natively on TPU and in interpret mode elsewhere
 
 Catalogue:
   secded           Hsiao(72,64) encode / fused check+correct
+  daec             SEC-DAEC(144,128) interleaved dual-Hsiao encode / correct
   parity8          8-bit-per-line detection code
   interwrap        Solution-3 wrap-around page gather/scatter (scalar prefetch)
   mixed            mixed-pool fused read: universal page_coords gather +

@@ -1,0 +1,163 @@
+"""Pallas TPU kernels for SEC-DAEC(144,128) encode / decode-correct.
+
+Same mapping as ``repro.kernels.secded`` — pure VPU work, memory-bound,
+one (BLOCK_ROWS, D) tile streamed HBM→VMEM per grid step — but every
+128-bit superbeat runs TWO Hsiao(72,64) passes over its bit-interleaved
+even/odd codewords (see ``repro.core.daec`` for the construction and why
+interleaving is what buys adjacent-double correction). The deinterleave /
+reinterleave steps are branch-free Morton shuffles (5 shift+mask rounds
+each), so the whole decode stays a select-tree + shifts on the VPU: no
+gathers, no tables. Code-plane shapes are identical to SECDED's
+(``(N, D) -> (N, D//8)``), so the tiling constants carry over unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import pick_block, use_interpret
+from repro.kernels.secded.kernel import _encode_beats, _syndrome_action
+
+DEFAULT_BLOCK_ROWS = 32
+
+
+def _compact_even(x: jax.Array) -> jax.Array:
+    """Even bits of a uint32 -> low 16 (Morton compaction, VPU-only)."""
+    x = x & jnp.uint32(0x55555555)
+    x = (x | (x >> 1)) & jnp.uint32(0x33333333)
+    x = (x | (x >> 2)) & jnp.uint32(0x0F0F0F0F)
+    x = (x | (x >> 4)) & jnp.uint32(0x00FF00FF)
+    x = (x | (x >> 8)) & jnp.uint32(0x0000FFFF)
+    return x
+
+
+def _spread_even(x: jax.Array) -> jax.Array:
+    """Low 16 bits -> even positions (inverse Morton)."""
+    x = x & jnp.uint32(0x0000FFFF)
+    x = (x | (x << 8)) & jnp.uint32(0x00FF00FF)
+    x = (x | (x << 4)) & jnp.uint32(0x0F0F0F0F)
+    x = (x | (x << 2)) & jnp.uint32(0x33333333)
+    x = (x | (x << 1)) & jnp.uint32(0x55555555)
+    return x
+
+
+def _split4(data: jax.Array):
+    """(BR, D) -> 4 superbeat word planes (BR, D//4)."""
+    g = data.reshape(data.shape[0], data.shape[1] // 4, 4)
+    return g[..., 0], g[..., 1], g[..., 2], g[..., 3]
+
+
+def _merge4(w0, w1, w2, w3, shape):
+    return jnp.stack([w0, w1, w2, w3], axis=-1).reshape(shape)
+
+
+def _deinterleave(w0, w1, w2, w3):
+    e = [_compact_even(w) for w in (w0, w1, w2, w3)]
+    o = [_compact_even(w >> 1) for w in (w0, w1, w2, w3)]
+    return ((e[0] | (e[1] << 16), e[2] | (e[3] << 16)),
+            (o[0] | (o[1] << 16), o[2] | (o[3] << 16)))
+
+
+def _interleave(a_lo, a_hi, b_lo, b_hi):
+    m = jnp.uint32(0xFFFF)
+    w0 = _spread_even(a_lo & m) | (_spread_even(b_lo & m) << 1)
+    w1 = _spread_even(a_lo >> 16) | (_spread_even(b_lo >> 16) << 1)
+    w2 = _spread_even(a_hi & m) | (_spread_even(b_hi & m) << 1)
+    w3 = _spread_even(a_hi >> 16) | (_spread_even(b_hi >> 16) << 1)
+    return w0, w1, w2, w3
+
+
+def _pack2(fields: jax.Array) -> jax.Array:
+    g = fields.reshape(fields.shape[0], fields.shape[1] // 2, 2)
+    return (g[..., 0] | (g[..., 1] << 16)).astype(jnp.uint32)
+
+
+def _unpack2(packed: jax.Array, beats: int) -> jax.Array:
+    parts = [(packed >> (16 * j)) & jnp.uint32(0xFFFF) for j in range(2)]
+    return jnp.stack(parts, axis=-1).reshape(packed.shape[0], beats)
+
+
+def _encode_fields(w0, w1, w2, w3) -> jax.Array:
+    (a_lo, a_hi), (b_lo, b_hi) = _deinterleave(w0, w1, w2, w3)
+    return _spread_even(_encode_beats(a_lo, a_hi)) | \
+        (_spread_even(_encode_beats(b_lo, b_hi)) << 1)
+
+
+def _correct_one(lo, hi, code, stored):
+    """One Hsiao codeword's fused check+correct (the secded select tree)."""
+    syndrome = (code ^ stored) & jnp.uint32(0xFF)
+    action = _syndrome_action(syndrome)
+    is_data = (action >= 0) & (action < 64)
+    is_code = action >= 64
+    bit = jnp.where(action >= 0, action, 0).astype(jnp.uint32)
+    lo = lo ^ jnp.where(is_data & (bit < 32), jnp.uint32(1) << (bit & 31), 0)
+    hi = hi ^ jnp.where(is_data & (bit >= 32), jnp.uint32(1) << (bit & 31), 0)
+    stored = stored ^ jnp.where(is_code, jnp.uint32(1) << ((bit - 64) & 7), 0)
+    status = jnp.where(
+        action == -1, 0,
+        jnp.where(is_data, 1, jnp.where(is_code, 2, 3))).astype(jnp.int32)
+    return lo, hi, stored, status
+
+
+def _encode_kernel(data_ref, codes_ref):
+    w0, w1, w2, w3 = _split4(data_ref[...])
+    codes_ref[...] = _pack2(_encode_fields(w0, w1, w2, w3))
+
+
+def _decode_kernel(data_ref, codes_ref, out_data_ref, out_codes_ref,
+                   status_ref):
+    data = data_ref[...]
+    w0, w1, w2, w3 = _split4(data)
+    fields = _unpack2(codes_ref[...], w0.shape[1])
+    (a_lo, a_hi), (b_lo, b_hi) = _deinterleave(w0, w1, w2, w3)
+    a_lo, a_hi, code_a, st_a = _correct_one(
+        a_lo, a_hi, _encode_beats(a_lo, a_hi), _compact_even(fields))
+    b_lo, b_hi, code_b, st_b = _correct_one(
+        b_lo, b_hi, _encode_beats(b_lo, b_hi), _compact_even(fields >> 1))
+    w0, w1, w2, w3 = _interleave(a_lo, a_hi, b_lo, b_hi)
+    out_data_ref[...] = _merge4(w0, w1, w2, w3, data.shape)
+    out_codes_ref[...] = _pack2(
+        _spread_even(code_a) | (_spread_even(code_b) << 1))
+    st = jnp.maximum(st_a, st_b)                   # per superbeat
+    status_ref[...] = jnp.stack([st, st], axis=-1).reshape(
+        st.shape[0], st.shape[1] * 2)              # broadcast to beats
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def encode(data: jax.Array, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """(N, D) uint32 -> (N, D//8) packed DAEC code fields."""
+    n, d = data.shape
+    br = pick_block(n, block_rows)
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=(n // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d // 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d // 8), jnp.uint32),
+        interpret=use_interpret(),
+    )(data)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def decode(data: jax.Array, codes: jax.Array,
+           block_rows: int = DEFAULT_BLOCK_ROWS
+           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused check+correct. (N,D),(N,D//8) -> (data', codes', status (N,D//2))."""
+    n, d = data.shape
+    br = pick_block(n, block_rows)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(n // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((br, d // 8), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                   pl.BlockSpec((br, d // 8), lambda i: (i, 0)),
+                   pl.BlockSpec((br, d // 2), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), jnp.uint32),
+                   jax.ShapeDtypeStruct((n, d // 8), jnp.uint32),
+                   jax.ShapeDtypeStruct((n, d // 2), jnp.int32)],
+        interpret=use_interpret(),
+    )(data, codes)

@@ -1,0 +1,21 @@
+"""Dispatch layer: DAEC Pallas kernel vs. jnp reference oracle."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.daec import kernel, ref
+
+
+def encode(data: jax.Array, use_kernel: bool = True) -> jax.Array:
+    """(N, D) uint32 -> (N, D//8) packed DAEC code fields."""
+    if use_kernel:
+        return kernel.encode(data)
+    return ref.encode(data)
+
+
+def decode(data: jax.Array, codes: jax.Array, use_kernel: bool = True
+           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused check+correct -> (data', codes', status per 64-bit beat)."""
+    if use_kernel:
+        return kernel.decode(data, codes)
+    return ref.decode(data, codes)

@@ -1,0 +1,15 @@
+"""jnp reference oracle for the DAEC kernels — delegates to the core codec."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import daec
+
+
+def encode(data: jax.Array) -> jax.Array:
+    return daec.encode_block(data)
+
+
+def decode(data: jax.Array, codes: jax.Array
+           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    return daec.decode_block(data, codes)

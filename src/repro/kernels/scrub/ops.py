@@ -15,15 +15,17 @@ def scrub_rows(storage: jax.Array, use_kernel: bool = True
     return ref.scrub_rows(storage)
 
 
-def scrub_secded(storage: jax.Array, start: int
+def scrub_secded(storage: jax.Array, start: int, stop: int | None = None
                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Adapter matching repro.core.scrubber's internal signature.
 
-    Scrubs rows [start, R) of a pool buffer; returns (storage', status,
-    row_bad).
+    Scrubs rows [start, stop) of a pool buffer (stop defaults to R, the
+    whole tail); returns (storage', status, row_bad).
     """
-    region = storage[start:]
+    if stop is None:
+        stop = storage.shape[0]
+    region = storage[start:stop]
     fixed, status = scrub_rows(region)
-    storage = storage.at[start:].set(fixed)
+    storage = storage.at[start:stop].set(fixed)
     row_bad = jnp.max(status, axis=-1) == DETECTED_UNCORRECTABLE
     return storage, status, row_bad

@@ -311,8 +311,15 @@ NAME_DRAM_QUEUE_P99 = "cream_dram_bank_queue_p99"
 NAME_DRAM_EXTRA_CHIP = "cream_dram_bank_extra_chip_frac"
 NAME_DRAM_ACCESSES = "cream_dram_bank_accesses_total"
 
+def _fold_classes() -> tuple[str, ...]:
+    from repro.core import protection
+    return tuple(p.value for p in protection.ladder())
+
+
 #: Storage classes in fold order (index into the device-side count matrix).
-FOLD_CLASSES = ("secded", "parity", "none")
+#: Derived from the Protection ladder (strongest first) — NEVER hardcode the
+#: class count; adding a rung must widen every consumer in lockstep.
+FOLD_CLASSES = _fold_classes()
 
 
 def read_status_counter() -> Metric:
@@ -376,13 +383,16 @@ def record_pool_capacity(pool_name: str, pool) -> None:
         cream_cls = "parity"
     else:
         cream_cls = "none"
-    secded_pages = pool.num_rows - pool.boundary
+    daec_pages = getattr(pool, "daec_rows", 0)
+    secded_pages = pool.num_rows - pool.boundary - daec_pages
     cream_pages = pool.boundary + pool.num_extra_pages
     if cream_cls == "secded":
         g.labels(pool=pool_name, cls="secded").set(secded_pages + cream_pages)
     else:
         g.labels(pool=pool_name, cls="secded").set(secded_pages)
         g.labels(pool=pool_name, cls=cream_cls).set(cream_pages)
+    if daec_pages:
+        g.labels(pool=pool_name, cls="daec").set(daec_pages)
     gauge(NAME_CAPACITY_RECLAIMED,
           "extra pages reclaimed from code lanes",
           labels=("pool",)).labels(pool=pool_name).set(pool.num_extra_pages)

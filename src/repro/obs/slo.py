@@ -85,9 +85,13 @@ class SLOTracker:
         self._default_classes()
 
     def _default_classes(self) -> None:
-        # the contract: SECDED reads must never be uncorrectable and never
-        # silently wrong; weaker classes tolerate errors (tracked, never
-        # breaching on their own — the per-tenant SLO escalates instead)
+        # the contract: DAEC/SECDED reads must never be uncorrectable and
+        # never silently wrong; weaker classes tolerate errors (tracked,
+        # never breaching on their own — the per-tenant SLO escalates
+        # instead). Every Protection-ladder rung gets a class here — the
+        # conformance suite asserts the two stay in sync.
+        self.classes.setdefault("daec",
+                                _ClassState(budget=0, silent_budget=0))
         self.classes.setdefault("secded",
                                 _ClassState(budget=0, silent_budget=0))
         self.classes.setdefault("parity", _ClassState(budget=None))

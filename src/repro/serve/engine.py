@@ -66,21 +66,27 @@ def _percentile(xs: list[float], q: float) -> float:
 def _cream_cls_index(layout: Layout) -> int:
     """Index into :data:`repro.obs.metrics.FOLD_CLASSES` for CREAM pages."""
     if layout == Layout.BASELINE_ECC:
-        return 0
-    return 1 if layout == Layout.PARITY else 2
+        return obs_metrics.FOLD_CLASSES.index("secded")
+    cls = "parity" if layout == Layout.PARITY else "none"
+    return obs_metrics.FOLD_CLASSES.index(cls)
 
 
 def _status_counts(pages: jax.Array, status: jax.Array, boundary: int,
-                   num_rows: int, cream_idx: int) -> jax.Array:
+                   num_rows: int, cream_idx: int,
+                   daec_start: int) -> jax.Array:
     """Per-class (corrected, uncorrectable) counts — the device-side
-    accumulator the registry folds between steps. Shape (3, 2) int32,
-    rows indexed by ``FOLD_CLASSES``."""
+    accumulator the registry folds between steps. Shape
+    ``(len(FOLD_CLASSES), 2)`` int32, rows indexed by ``FOLD_CLASSES`` —
+    derived from the Protection ladder, never a literal."""
+    classes = obs_metrics.FOLD_CLASSES
     is_sec = (pages >= boundary) & (pages < num_rows)
-    cls = jnp.where(is_sec, 0, cream_idx)
+    cls = jnp.where(is_sec, classes.index("secded"), cream_idx)
+    cls = jnp.where(is_sec & (pages >= daec_start),
+                    classes.index("daec"), cls)
     corrected = ((status == secded.CORRECTED_DATA)
                  | (status == secded.CORRECTED_CODE)).astype(jnp.int32)
     unc = (status == secded.DETECTED_UNCORRECTABLE).astype(jnp.int32)
-    counts = jnp.zeros((3, 2), jnp.int32)
+    counts = jnp.zeros((len(classes), 2), jnp.int32)
     counts = counts.at[cls, 0].add(corrected)
     return counts.at[cls, 1].add(unc)
 
@@ -90,19 +96,23 @@ def _read_correct_counts(state: PoolState, pages: jax.Array
                          ) -> tuple[jax.Array, jax.Array]:
     """Metrics-enabled gather for a local pool: the SAME fused mixed-pool
     read the plain path uses, except the per-page status it already
-    computes is kept and reduced to the (3, 2) class-count matrix inside
+    computes is kept and reduced to the per-class count matrix inside
     the same compiled program — still one gather dispatch per step."""
     data, status = pool_lib.read_pages_any_status(state, pages)
     counts = _status_counts(pages, status, state.boundary, state.num_rows,
-                            _cream_cls_index(state.layout))
+                            _cream_cls_index(state.layout),
+                            state.daec_start)
     return data, counts
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("boundary", "num_rows", "cream_idx"))
+                   static_argnames=("boundary", "num_rows", "cream_idx",
+                                    "daec_start"))
 def _counts_only(pages: jax.Array, status: jax.Array, boundary: int,
-                 num_rows: int, cream_idx: int) -> jax.Array:
-    return _status_counts(pages, status, boundary, num_rows, cream_idx)
+                 num_rows: int, cream_idx: int,
+                 daec_start: int) -> jax.Array:
+    return _status_counts(pages, status, boundary, num_rows, cream_idx,
+                          daec_start)
 
 
 class Engine:
@@ -292,9 +302,11 @@ class Engine:
         dispatch behind ``pool.read`` (host stream planning + ONE jitted
         per-bank gather, ~``n/S`` pages per bank)."""
         pool = self.pool
-        if isinstance(pool, PoolState):
+        if isinstance(pool, PoolState) and pool.daec_rows == 0:
             # the fused read bypasses the pool's wrappers, so feed
-            # CREAM-Lens here (sharded pools record inside pool.read)
+            # CREAM-Lens here (sharded pools record inside pool.read).
+            # A DAEC tier falls through to pool.read — the mixed kernel
+            # corrects with SECDED only and would mis-decode those rows.
             pool.memprof_record("gather", phys, stream="decode")
             return self._mixed_read(pool.storage,
                                     jnp.asarray(phys, jnp.int32),
@@ -316,7 +328,8 @@ class Engine:
         data, status = pool.read(phys, status=True)
         counts = _counts_only(pages, status, boundary=pool.boundary,
                               num_rows=pool.num_rows,
-                              cream_idx=_cream_cls_index(pool.layout))
+                              cream_idx=_cream_cls_index(pool.layout),
+                              daec_start=pool.daec_start)
         return data, counts
 
     # -- request intake ------------------------------------------------------

@@ -6,13 +6,14 @@ translation.
 """
 from repro.shard.pool import (ShardedPool, evicted_extra_pages,
                               make_sharded_pool, migrate_pages, read_any,
-                              read_any_status, read_streams, repartition,
-                              scrub, write_any, write_streams)
+                              read_any_status, read_any_writeback,
+                              read_streams, repartition, scrub,
+                              set_daec_rows, write_any, write_streams)
 from repro.shard.router import plan_streams, route, unroute
 
 __all__ = [
     "ShardedPool", "make_sharded_pool", "read_any", "read_any_status",
-    "write_any", "read_streams", "write_streams", "migrate_pages",
-    "repartition", "evicted_extra_pages", "scrub", "route", "unroute",
-    "plan_streams",
+    "read_any_writeback", "write_any", "read_streams", "write_streams",
+    "migrate_pages", "repartition", "evicted_extra_pages", "scrub",
+    "set_daec_rows", "route", "unroute", "plan_streams",
 ]

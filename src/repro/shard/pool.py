@@ -133,6 +133,12 @@ class ShardedPool:
     mesh: jax.sharding.Mesh = dataclasses.field(metadata=dict(static=True))
     use_kernel: bool | None = dataclasses.field(
         default=None, metadata=dict(static=True))
+    #: Per-shard DAEC-tier depth. Global DAEC rows stripe round-robin like
+    #: everything else, so the tier is the top ``daec_rows_local`` rows of
+    #: EVERY shard and global ``daec_rows = S * daec_rows_local`` — the
+    #: tier boundary needs no per-shard adjustment.
+    daec_rows_local: int = dataclasses.field(
+        default=0, metadata=dict(static=True))
 
     # -- geometry (global page-id convention, same as PoolState) ------------
     @property
@@ -155,6 +161,15 @@ class ShardedPool:
     def boundary_step(self) -> int:
         """Boundary moves in lockstep across shards: S * GROUP_ROWS rows."""
         return self.num_shards * GROUP_ROWS
+
+    @property
+    def daec_rows(self) -> int:
+        return self.num_shards * self.daec_rows_local
+
+    @property
+    def daec_start(self) -> int:
+        """First global row of the SEC-DAEC tier (= num_rows - daec_rows)."""
+        return self.num_rows - self.daec_rows
 
     @property
     def extra_pages_local(self) -> int:
@@ -294,6 +309,18 @@ class ShardedPool:
     def move_boundary(self, new_boundary: int) -> tuple["ShardedPool", dict]:
         return repartition(self, new_boundary)
 
+    def set_daec_rows(self, daec_rows: int) -> "ShardedPool":
+        return set_daec_rows(self, daec_rows)
+
+    def read_writeback(self, pages):
+        """Write-back read (see :meth:`repro.core.pool.PoolState.read_writeback`):
+        corrected beats are persisted to the owning shard in the same pass.
+        Returns ``(data, status, new_pool)``."""
+        arr = pool_lib._as_page_array(self, pages)
+        _note_dispatch("read_writeback", arr.shape[0])
+        _memprof_routed(self, "gather", arr)
+        return _read_writeback_jitted(self, arr)
+
     def scrub(self, use_kernel: bool = False):
         return scrub(self, use_kernel=use_kernel)
 
@@ -306,18 +333,28 @@ def make_sharded_pool(num_rows: int, layout: Layout = Layout.INTERWRAP,
                       boundary: int | None = None, *, num_shards: int,
                       row_words: int = 64,
                       mesh: jax.sharding.Mesh | None = None,
-                      use_kernel: bool | None = None) -> ShardedPool:
+                      use_kernel: bool | None = None,
+                      daec_rows: int = 0) -> ShardedPool:
     """Create a zeroed sharded pool of ``num_rows`` *global* rows.
 
     ``boundary`` is the global CREAM-region size (default: whole pool in
     CREAM mode); both must shard evenly (multiples of
-    ``num_shards * GROUP_ROWS``). ``mesh`` defaults to a fresh 1-D
+    ``num_shards * GROUP_ROWS``). ``daec_rows`` carves that many *global*
+    top rows into the SEC-DAEC tier (must be a multiple of ``num_shards``
+    and fit the protected region). ``mesh`` defaults to a fresh 1-D
     ``banks`` mesh over the first ``num_shards`` devices.
     """
     boundary = num_rows if boundary is None else boundary
     if layout == Layout.BASELINE_ECC:
         boundary = 0
     router.check_geometry(num_rows, boundary, num_shards)
+    if daec_rows % num_shards:
+        raise ValueError(
+            f"daec_rows ({daec_rows}) must shard evenly over {num_shards}")
+    if not 0 <= daec_rows <= num_rows - boundary:
+        raise ValueError(
+            f"daec_rows ({daec_rows}) must fit the protected region "
+            f"[{boundary}, {num_rows})")
     if mesh is None:
         from repro.launch.mesh import make_banks_mesh
         mesh = make_banks_mesh(num_shards)
@@ -329,13 +366,13 @@ def make_sharded_pool(num_rows: int, layout: Layout = Layout.INTERWRAP,
                   jnp.uint32),
         NamedSharding(mesh, P("banks")))
     return ShardedPool(storage, boundary // num_shards, layout, row_words,
-                       mesh, use_kernel)
+                       mesh, use_kernel, daec_rows // num_shards)
 
 
 def _local_state(state: ShardedPool, block: jax.Array) -> PoolState:
     """Per-shard view: ``block`` is the shard's ``(1, R_local, 9, W)`` slice."""
     return PoolState(block[0], state.boundary_local, state.layout,
-                     state.row_words)
+                     state.row_words, state.daec_rows_local)
 
 
 # ---------------------------------------------------------------------------
@@ -389,6 +426,11 @@ def read_any(state: ShardedPool, pages) -> jax.Array:
     if n == 0:
         return jnp.zeros((0, state.page_words), jnp.uint32)
 
+    if state.daec_rows_local > 0:
+        # The fused mixed kernel corrects with SECDED only — a DAEC tier
+        # would be mis-decoded. Route through the dual-codec engine instead.
+        return read_any_status(state, pages)[0]
+
     def body(block, pg):
         me = jax.lax.axis_index("banks")
         data = mixed_ops.read_correct_routed(
@@ -440,9 +482,43 @@ def write_any(state: ShardedPool, pages, data: jax.Array,
     return dataclasses.replace(state, storage=storage)
 
 
+def read_any_writeback(state: ShardedPool, pages
+                       ) -> tuple[jax.Array, jax.Array, ShardedPool]:
+    """Write-back batch read for arbitrary global page ids, fused.
+
+    Like :func:`read_any_status`, but each shard persists corrected beats
+    of the pages it owns back into its own storage slice in the same pass
+    (:func:`repro.core.pool.read_pages_any_writeback`); foreign pages are
+    masked out of range so only the owner writes. Returns
+    ``(data, status, new_pool)``.
+    """
+    pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+    n = pages.shape[0]
+    if n == 0:
+        return (jnp.zeros((0, state.page_words), jnp.uint32),
+                jnp.zeros((0,), jnp.int32), state)
+
+    def body(block, pg):
+        me = jax.lax.axis_index("banks")
+        shard, local = router.route(pg, state.num_rows, state.num_shards)
+        own = shard == me
+        st = _local_state(state, block)
+        data, status, st = pool_lib.read_pages_any_writeback(
+            st, jnp.where(own, local, st.num_pages))
+        return (jax.lax.psum(jnp.where(own[:, None], data, 0), "banks"),
+                jax.lax.psum(jnp.where(own, status, 0), "banks"),
+                st.storage[None])
+
+    data, status, storage = shard_map(
+        body, mesh=state.mesh, in_specs=(P("banks"), P(None)),
+        out_specs=(P(None), P(None), P("banks")))(state.storage, pages)
+    return data, status, dataclasses.replace(state, storage=storage)
+
+
 _read_any_jitted = jax.jit(read_any)
 _read_any_status_jitted = jax.jit(read_any_status)
 _write_any_jitted = jax.jit(write_any, donate_argnums=(0,))
+_read_writeback_jitted = jax.jit(read_any_writeback)
 
 
 # ---------------------------------------------------------------------------
@@ -454,6 +530,11 @@ def _read_streams_impl(state: ShardedPool, pages: jax.Array) -> jax.Array:
     # Local translation happens in-body on each shard's own (1, n) slice —
     # stream alignment guarantees ownership, so no shard id is needed.
     from repro.kernels.mixed import ops as mixed_ops
+
+    if state.daec_rows_local > 0:
+        # SECDED-only fused kernel would mis-decode the DAEC tier; fall
+        # back to the dual-codec engine (same dispatch shape, jnp body).
+        return _read_streams_status_impl(state, pages)[0]
 
     def body(block, pg):
         _, local = router.route(pg[0], state.num_rows, state.num_shards)
@@ -687,6 +768,38 @@ def repartition(state: ShardedPool, new_boundary: int
                                boundary_local=nb_local), info
 
 
+def set_daec_rows(state: ShardedPool, daec_rows: int) -> ShardedPool:
+    """Resize the SEC-DAEC tier: every shard re-encodes its own top span.
+
+    ``daec_rows`` is global and must shard evenly; semantics per shard
+    mirror :func:`repro.core.pool.set_daec_rows` (contents preserved —
+    decode under the old codec, re-encode under the new one).
+    """
+    S = state.num_shards
+    if daec_rows % S:
+        raise ValueError(
+            f"daec_rows ({daec_rows}) must shard evenly over {S}")
+    if not 0 <= daec_rows <= state.num_rows - state.boundary:
+        raise ValueError(
+            f"daec_rows ({daec_rows}) must fit the protected region "
+            f"[{state.boundary}, {state.num_rows})")
+    n_local = daec_rows // S
+    if n_local == state.daec_rows_local:
+        return state
+
+    def body(block):
+        st = pool_lib.set_daec_rows(_local_state(state, block), n_local)
+        return st.storage[None]
+
+    with obs_tracing.span("shard.set_daec_rows", old=state.daec_rows,
+                          new=daec_rows, shards=S):
+        storage = jax.jit(shard_map(
+            body, mesh=state.mesh, in_specs=P("banks"),
+            out_specs=P("banks")))(state.storage)
+    return dataclasses.replace(state, storage=storage,
+                               daec_rows_local=n_local)
+
+
 # ---------------------------------------------------------------------------
 # Scrubbing (background sweep; per-shard, host-driven)
 # ---------------------------------------------------------------------------
@@ -705,12 +818,12 @@ def scrub(state: ShardedPool, use_kernel: bool = False):
     blocks, merged, corrupt = [], {}, []
     for s in range(S):
         st = PoolState(state.storage[s], state.boundary_local, state.layout,
-                       state.row_words)
+                       state.row_words, state.daec_rows_local)
         new_st, stats = _scrub(st, use_kernel=use_kernel)
         blocks.append(new_st.storage)
         for f in ("beats_checked", "corrected_data", "corrected_code",
                   "detected_uncorrectable", "parity_lines_checked",
-                  "parity_corrupt_lines"):
+                  "parity_corrupt_lines", "latent_errors_killed"):
             merged[f] = merged.get(f, 0) + getattr(stats, f)
         corrupt.extend(r * S + s for r in stats.corrupt_rows)
     storage = jax.device_put(jnp.stack(blocks),

@@ -54,6 +54,8 @@ def cream_protection(layout: Layout) -> Protection:
 def frame_class(state: PoolLike, phys: int) -> Protection:
     """Storage class of frame ``phys`` under the pool's current boundary."""
     if state.boundary <= phys < state.num_rows:
+        if phys >= state.num_rows - state.daec_rows:
+            return Protection.DAEC
         return Protection.SECDED
     return cream_protection(state.layout)
 
@@ -195,13 +197,14 @@ class VirtualMemory:
     def add_pool(self, name: str, num_rows: int,
                  layout: Layout = Layout.INTERWRAP,
                  boundary: int | None = None, shards: int = 1,
-                 mesh=None) -> PoolLike:
+                 mesh=None, daec_rows: int = 0) -> PoolLike:
         """Create a pool under VM management.
 
         ``shards > 1`` builds a :class:`repro.shard.ShardedPool` over a
         ``banks`` mesh (CREAM-Shard) instead of a local pool; everything
         above the pool — tenants, allocator, data plane, migration — is
-        oblivious to the difference.
+        oblivious to the difference. ``daec_rows`` carves that many top
+        rows of the protected region into the SEC-DAEC tier.
         """
         if name in self.pools:
             raise ValueError(f"pool {name!r} exists")
@@ -209,10 +212,11 @@ class VirtualMemory:
             from repro.shard import make_sharded_pool
             state = make_sharded_pool(num_rows, layout, boundary,
                                       num_shards=shards,
-                                      row_words=self.row_words, mesh=mesh)
+                                      row_words=self.row_words, mesh=mesh,
+                                      daec_rows=daec_rows)
         else:
             state = make_pool(num_rows, layout, boundary=boundary,
-                              row_words=self.row_words)
+                              row_words=self.row_words, daec_rows=daec_rows)
         self.pools[name] = state
         self.allocators[name] = FrameAllocator(state)
         obs_metrics.record_pool_capacity(name, state)
@@ -267,6 +271,7 @@ class VirtualMemory:
                 "layout": state.layout.value,
                 "rows": state.num_rows,
                 "boundary": state.boundary,
+                "daec_rows": state.daec_rows,
                 "pages": state.num_pages,
                 "extra_pages": state.num_extra_pages,
                 "used": alloc.used,

@@ -109,8 +109,10 @@ class MigrationEngine:
         """Batch-write frames, reusing precomputed codes where they apply."""
         vm = self.vm
         state = vm.pools[pool_name]
+        # precomputed codes are SECDED — the DAEC tier re-encodes via write()
         if codes is not None and isinstance(state, PoolState) and all(
-                state.boundary <= p < state.num_rows for p in phys):
+                state.boundary <= p < state.num_rows - state.daec_rows
+                for p in phys):
             storage = _scatter_coded_rows(
                 state.storage, jnp.asarray(phys, jnp.int32), data, codes)
             vm.pools[pool_name] = dataclasses.replace(state, storage=storage)

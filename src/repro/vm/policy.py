@@ -112,6 +112,13 @@ class VMPolicy:
         space = self.vm.tenants[tenant]
         before = space.segments.get(segment, Protection.NONE)
         space.segments[segment] = target
+        if target == Protection.DAEC:
+            # DAEC frames exist only where a pool has carved its tier; make
+            # sure there is somewhere to land before computing the move set
+            # (carving may upgrade some of this segment's frames in place).
+            demand = sum(1 for pte in space.entries.values()
+                         if pte.segment == segment and pte.pool is not None)
+            self.ensure_daec_frames(demand)
         move: list[int] = []
         for vpn, pte in space.entries.items():
             if pte.segment != segment:
@@ -126,6 +133,34 @@ class VMPolicy:
         self.escalations.append(esc)
         self._observed.pop((tenant, segment), None)   # fresh window
         return esc
+
+    def ensure_daec_frames(self, count: int) -> int:
+        """Grow pools' SEC-DAEC tiers until ``count`` free DAEC frames exist.
+
+        Carving converts the top of a pool's SECDED span in place
+        (``set_daec_rows`` re-encodes contents, so mapped frames simply
+        *upgrade* — never a contract violation) and rebuilds the free
+        lists. Best effort: returns the free-DAEC-frame count afterwards,
+        which may fall short if no pool has SECDED rows left to convert.
+        """
+        def free_daec() -> int:
+            return sum(len(a.free.get(Protection.DAEC, {}))
+                       for a in self.vm.allocators.values())
+
+        free = free_daec()
+        for name, state in list(self.vm.pools.items()):
+            if free >= count:
+                break
+            step = state.boundary_step
+            avail = (state.num_rows - state.daec_rows) - state.boundary
+            if avail <= 0:
+                continue
+            want = min(avail, -((free - count) // step) * step)
+            new_state = state.set_daec_rows(state.daec_rows + want)
+            self.vm.pools[name] = new_state
+            self.vm.allocators[name].rebuild(new_state)
+            free = free_daec()
+        return free
 
     def auto_escalate(self) -> list[dict]:
         """Escalate every tenant segment whose observed rate crossed its SLO."""

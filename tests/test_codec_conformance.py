@@ -1,0 +1,538 @@
+"""Exhaustive codec conformance: one harness over the whole code ladder.
+
+Every correcting/detecting code in the repo — parity8 (detect-only),
+SECDED Hsiao(72,64), SEC-DAEC(144,128) — is run through the same
+enumeration harness and held to its *exact* contract:
+
+  ==========  =============  ==================  =====================
+  codec       single bit     adjacent double     random double (1 unit)
+  ==========  =============  ==================  =====================
+  parity8     detected       detected            detected iff the two
+                                                 bits differ mod 8;
+                                                 same class -> silent
+                                                 (the documented escape)
+  secded      corrected      same beat: detected corrected across
+              exactly        never silent;       beats; detected never
+                             across beats: both  silent within one
+                             corrected           beat
+  daec        corrected      corrected (inter-   split even/odd ->
+              exactly        leaving splits the  corrected; same
+                             pair)               codeword -> detected
+                                                 never silent
+  ==========  =============  ==================  =====================
+
+"Exhaustive" means every code-word position: every data bit and every
+live code bit of a block is flipped and the verdict checked *per beat*
+(the error must be flagged at the right position and nowhere else).
+Enumerations are vectorised — one batched decode over all flip variants
+— so the default run stays fast; the ``slow`` marker covers the full
+layout × shard sweep and the quadratic double-bit enumerations.
+
+Also here, because the codecs are only as good as their H-matrices and
+the plumbing that reports them:
+
+  * property tests of the Hsiao and DAEC column sets (odd weight,
+    distinct, and the defining SEC-DAEC adjacency condition);
+  * Pallas-kernel-vs-jnp-oracle bit-exactness, direct and through live
+    pools across all 5 layouts × shards {1, 2, 4, 8};
+  * the ladder-sync regression: obs fold matrices, SLO class maps, and
+    the serving engine's status fold all derive their shape from
+    ``Protection.ladder()`` — adding a rung cannot desynchronise them.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import daec, parity8, secded
+from repro.core.layouts import Layout
+from repro.core.protection import Protection, ladder
+from repro.core.secded import (CLEAN, CORRECTED_CODE, CORRECTED_DATA,
+                               DETECTED_UNCORRECTABLE)
+from repro.kernels.daec import ops as daec_ops
+from repro.kernels.parity8 import ops as parity8_ops
+from repro.kernels.secded import ops as secded_ops
+
+# ---------------------------------------------------------------------------
+# The harness: a uniform view of each codec over one enumeration block.
+#
+#   D          block width in uint32 words (data bits = 32 * D)
+#   code_bits  live code-bit positions, as (code-array word, bit) pairs
+#   encode     (n, D) uint32 -> code array
+#   decode     (data, code) -> (data', code', per-beat status) — for the
+#              detect-only codec data/code pass through and the status is
+#              per line
+#   beat_bits  data bits per status element (what "one beat" means)
+# ---------------------------------------------------------------------------
+
+
+def _parity_decode(data, code):
+    return data, code, parity8.check_lines(data, code)
+
+
+CODECS = {
+    "parity8": dict(
+        D=16, beat_bits=512,
+        encode=parity8.encode_lines, decode=_parity_decode,
+        code_bits=[(0, b) for b in range(8)],
+        corrects_singles=False, corrects_adjacent=False),
+    "secded": dict(
+        D=8, beat_bits=64,
+        encode=secded.encode_block, decode=secded.decode_block,
+        code_bits=[(0, b) for b in range(32)],
+        corrects_singles=True, corrects_adjacent=False),
+    "daec": dict(
+        D=8, beat_bits=64,
+        encode=daec.encode_block, decode=daec.decode_block,
+        code_bits=[(0, b) for b in range(32)],
+        corrects_singles=True, corrects_adjacent=True),
+}
+
+
+def _base_block(codec, seed=0):
+    rng = np.random.default_rng(seed)
+    data = jnp.asarray(rng.integers(0, 2**32, (1, codec["D"]),
+                                    dtype=np.uint32))
+    return data, codec["encode"](data)
+
+
+def _flip_batch(base, positions):
+    """Tile ``base`` (1, W) and XOR one bit per row at bit-positions
+    ``positions`` (global over the 32*W-bit little-endian bit string)."""
+    pos = np.asarray(positions)
+    batch = np.tile(np.asarray(base), (pos.size, 1))
+    np.bitwise_xor.at(batch, (np.arange(pos.size), pos // 32),
+                      np.uint32(1) << (pos % 32).astype(np.uint32))
+    return jnp.asarray(batch)
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive single-bit enumeration — every code-word position.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(CODECS))
+def test_single_bit_every_data_position(name):
+    codec = CODECS[name]
+    data, code = _base_block(codec)
+    nbits = 32 * codec["D"]
+    flipped = _flip_batch(data, np.arange(nbits))
+    codes = jnp.tile(code, (nbits, 1))
+    out, out_code, status = codec["decode"](flipped, codes)
+    out, out_code = np.asarray(out), np.asarray(out_code)
+    status = np.asarray(status)
+    if name == "daec":      # superbeat verdict broadcast to both beats
+        sb = np.arange(nbits) // 128
+        beats = np.stack([2 * sb, 2 * sb + 1], axis=1)
+    else:
+        beats = (np.arange(nbits) // codec["beat_bits"])[:, None]
+    hit = np.take_along_axis(status, beats, axis=1)
+    rest = status.copy()
+    np.put_along_axis(rest, beats, CLEAN, axis=1)
+    assert (rest == CLEAN).all(), "flag leaked to an unhit beat"
+    if codec["corrects_singles"]:
+        assert (hit == CORRECTED_DATA).all()
+        assert (out == np.asarray(data)).all(), "single not repaired exactly"
+        assert (out_code == np.asarray(codes)).all()
+    else:
+        assert (hit == parity8.LINE_CORRUPT).all(), \
+            "detect-only codec missed a single"
+
+
+@pytest.mark.parametrize("name", list(CODECS))
+def test_single_bit_every_code_position(name):
+    codec = CODECS[name]
+    data, code = _base_block(codec)
+    pos = np.asarray([32 * w + b for w, b in codec["code_bits"]])
+    datas = jnp.tile(data, (pos.size, 1))
+    flipped_codes = _flip_batch(code, pos)
+    out, out_code, status = codec["decode"](datas, flipped_codes)
+    status = np.asarray(status)
+    if codec["corrects_singles"]:
+        # a code-bit error is corrected in place and only its beat flags
+        beat = pos // (8 if name == "secded" else 16)
+        if name == "daec":                  # superbeat verdict -> 2 beats
+            beat = np.stack([2 * beat, 2 * beat + 1], axis=1)
+            hit = np.take_along_axis(status, beat, axis=1)
+            rest = status.copy()
+            np.put_along_axis(rest, beat, CLEAN, axis=1)
+        else:
+            hit = status[np.arange(pos.size), beat][:, None]
+            rest = status.copy()
+            rest[np.arange(pos.size), beat] = CLEAN
+        assert (hit == CORRECTED_CODE).all()
+        assert (rest == CLEAN).all()
+        assert (np.asarray(out) == np.asarray(data)).all()
+        assert (np.asarray(out_code) == np.asarray(code)).all(), \
+            "code plane not repaired"
+    else:
+        assert (status == parity8.LINE_CORRUPT).all()
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive adjacent-double enumeration — every physically adjacent pair
+# (bits p, p+1 of the block's bit string, including word-crossing pairs).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(CODECS))
+def test_adjacent_double_every_data_pair(name):
+    codec = CODECS[name]
+    data, code = _base_block(codec, seed=1)
+    nbits = 32 * codec["D"]
+    pos = np.arange(nbits - 1)
+    flipped = np.array(_flip_batch(data, pos))
+    np.bitwise_xor.at(flipped, (np.arange(pos.size), (pos + 1) // 32),
+                      np.uint32(1) << ((pos + 1) % 32).astype(np.uint32))
+    codes = jnp.tile(code, (pos.size, 1))
+    out, _, status = codec["decode"](jnp.asarray(flipped), codes)
+    out, status = np.asarray(out), np.asarray(status)
+    exact = (out == np.asarray(data)).all(axis=1)
+    worst = status.max(axis=1)
+    if name == "daec":
+        # interleaving splits every adjacent pair: all corrected, exactly
+        assert (worst == CORRECTED_DATA).all()
+        assert exact.all()
+    elif name == "secded":
+        same_beat = pos // 64 == (pos + 1) // 64
+        # within one beat: Hsiao detects every double — flagged, not fixed
+        assert (worst[same_beat] == DETECTED_UNCORRECTABLE).all()
+        assert not exact[same_beat].any()
+        # across beats: two singles, both corrected
+        assert (worst[~same_beat] == CORRECTED_DATA).all()
+        assert exact[~same_beat].all()
+    else:
+        # bits p, p+1 always differ mod 8 -> both parity lanes flip
+        assert (worst == parity8.LINE_CORRUPT).all()
+
+
+@pytest.mark.parametrize("name", ["secded", "daec"])
+def test_adjacent_double_every_code_pair(name):
+    codec = CODECS[name]
+    data, code = _base_block(codec, seed=2)
+    pos = np.arange(31)                       # pairs (b, b+1) in the word
+    datas = jnp.tile(data, (pos.size, 1))
+    flipped = np.array(_flip_batch(code, pos))
+    np.bitwise_xor.at(flipped, (np.arange(pos.size), (pos + 1) // 32),
+                      np.uint32(1) << ((pos + 1) % 32).astype(np.uint32))
+    out, out_code, status = codec["decode"](datas, jnp.asarray(flipped))
+    worst = np.asarray(status).max(axis=1)
+    data_ok = (np.asarray(out) == np.asarray(data)).all(axis=1)
+    assert data_ok.all(), "code-plane errors must never touch data"
+    if name == "daec":
+        # within one 16-bit field, bits 2i|2i+1 belong to codewords A|B —
+        # an adjacent pair always splits across them -> both corrected;
+        # a pair crossing a field boundary hits two superbeats -> ditto
+        assert (worst == CORRECTED_CODE).all()
+        assert (np.asarray(out_code) == np.asarray(code)).all()
+    else:
+        same_byte = pos // 8 == (pos + 1) // 8
+        # two code bits of one Hsiao codeword: even-weight syndrome ->
+        # detected, never miscorrected into the data
+        assert (worst[same_byte] == DETECTED_UNCORRECTABLE).all()
+        assert (worst[~same_byte] == CORRECTED_CODE).all()
+
+
+# ---------------------------------------------------------------------------
+# Random-double sampling — never silent within one protection unit.
+# The numpy-seeded sweep always runs; hypothesis (if installed) fuzzes on
+# top with shrinking.
+# ---------------------------------------------------------------------------
+
+
+def _double_verdict(codec, b0, b1, seed=3):
+    data, code = _base_block(codec, seed=seed)
+    flipped = np.array(_flip_batch(data, np.asarray([b0])))
+    flipped[0, b1 // 32] ^= np.uint32(1) << np.uint32(b1 % 32)
+    out, _, status = codec["decode"](jnp.asarray(flipped), code)
+    exact = bool((np.asarray(out) == np.asarray(data)).all())
+    return int(np.asarray(status).max()), exact
+
+
+def _assert_double_contract(name, b0, b1):
+    codec = CODECS[name]
+    worst, exact = _double_verdict(codec, b0, b1)
+    if name == "secded":
+        if b0 // 64 == b1 // 64:                 # same beat: every double
+            assert worst == DETECTED_UNCORRECTABLE and not exact
+        else:                                    # two beats: two singles
+            assert worst == CORRECTED_DATA and exact
+    elif name == "daec":
+        if b0 // 128 != b1 // 128 or b0 % 2 != b1 % 2:
+            # different superbeats, or split across the even/odd
+            # codewords: corrected outright
+            assert worst == CORRECTED_DATA and exact
+        else:                                    # same codeword: detected
+            assert worst == DETECTED_UNCORRECTABLE and not exact
+        # the headline contract: silent is impossible
+        assert exact or worst == DETECTED_UNCORRECTABLE
+    else:                                        # parity8
+        if b0 % 8 == b1 % 8:                     # same congruence class:
+            assert worst == parity8.LINE_OK      # the documented escape
+        else:
+            assert worst == parity8.LINE_CORRUPT
+
+
+@pytest.mark.parametrize("name", list(CODECS))
+def test_random_double_sampled(name):
+    nbits = 32 * CODECS[name]["D"]
+    rng = np.random.default_rng(4)
+    for _ in range(64):
+        b0, b1 = rng.choice(nbits, size=2, replace=False)
+        _assert_double_contract(name, int(b0), int(b1))
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(name=st.sampled_from(sorted(CODECS)), b0=st.integers(0, 511),
+           b1=st.integers(0, 511))
+    def test_random_double_hypothesis(name, b0, b1):
+        nbits = 32 * CODECS[name]["D"]
+        b0, b1 = b0 % nbits, b1 % nbits
+        if b0 == b1:
+            return
+        _assert_double_contract(name, b0, b1)
+except ImportError:                                 # pragma: no cover
+    pass   # the seeded numpy sweep above still proves the contract
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["secded", "daec"])
+def test_exhaustive_double_never_silent_one_unit(name):
+    """Every 2-bit pattern inside one protection unit, not a sample:
+    all C(64,2) beat pairs for SECDED, all C(128,2) superbeat pairs for
+    DAEC — silent corruption must be *impossible*, not just unlikely."""
+    codec = CODECS[name]
+    unit = 64 if name == "secded" else 128
+    data, code = _base_block(codec, seed=5)
+    pairs = np.asarray([(i, j) for i in range(unit)
+                        for j in range(i + 1, unit)])
+    flipped = np.array(_flip_batch(data, pairs[:, 0]))
+    np.bitwise_xor.at(flipped, (np.arange(len(pairs)), pairs[:, 1] // 32),
+                      np.uint32(1) << (pairs[:, 1] % 32).astype(np.uint32))
+    codes = jnp.tile(code, (len(pairs), 1))
+    out, _, status = codec["decode"](jnp.asarray(flipped), codes)
+    exact = (np.asarray(out) == np.asarray(data)).all(axis=1)
+    worst = np.asarray(status).max(axis=1)
+    silent = ~exact & (worst != DETECTED_UNCORRECTABLE)
+    assert not silent.any(), f"{silent.sum()} silent double(s)"
+    if name == "secded":
+        assert (worst == DETECTED_UNCORRECTABLE).all()
+    else:
+        split = pairs[:, 0] % 2 != pairs[:, 1] % 2
+        assert (worst[split] == CORRECTED_DATA).all() and exact[split].all()
+        assert (worst[~split] == DETECTED_UNCORRECTABLE).all()
+
+
+# ---------------------------------------------------------------------------
+# H-matrix invariants — the properties the contracts above rest on.
+# ---------------------------------------------------------------------------
+
+
+def test_hsiao_matrix_invariants():
+    data_cols = [int(c) for c in secded._COLUMNS]
+    code_cols = [1 << p for p in range(secded.NUM_CODE_BITS)]
+    cols = data_cols + code_cols
+    assert len(cols) == 72
+    assert all(c != 0 for c in cols), "zero column: undetectable single"
+    assert len(set(cols)) == len(cols), "duplicate column: miscorrection"
+    assert all(bin(c).count("1") % 2 == 1 for c in cols), \
+        "even-weight column breaks Hsiao double detection"
+
+
+def test_daec_matrix_invariants():
+    cols = [int(c) for c in daec._COLUMNS]
+    assert len(cols) == 144
+    assert all(c != 0 for c in cols)
+    assert len(set(cols)) == len(cols)
+    # the defining SEC-DAEC condition: every adjacent-pair syndrome is
+    # nonzero, unique across pairs, and collides with no single column
+    sums = [cols[p] ^ cols[p + 1] for p in range(143)]
+    assert all(s != 0 for s in sums), "adjacent double aliases clean"
+    assert len(set(sums)) == len(sums), "two adjacent doubles alias"
+    assert not set(sums) & set(cols), \
+        "adjacent double aliases a single: miscorrection"
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle — Pallas must be bit-identical to the jnp reference.
+# ---------------------------------------------------------------------------
+
+_KERNELS = {"parity8": parity8_ops, "secded": secded_ops,
+            "daec": daec_ops}
+
+
+def _corrupt(rng, data, n):
+    arr = np.array(data)
+    rows = rng.integers(0, arr.shape[0], n)
+    words = rng.integers(0, arr.shape[1], n)
+    bits = rng.integers(0, 32, n).astype(np.uint32)
+    np.bitwise_xor.at(arr, (rows, words), np.uint32(1) << bits)
+    return jnp.asarray(arr)
+
+
+@pytest.mark.parametrize("name", list(CODECS))
+def test_kernel_matches_oracle_direct(name):
+    rng = np.random.default_rng(6)
+    data = jnp.asarray(rng.integers(0, 2**32, (64, 64), dtype=np.uint32))
+    ops = _KERNELS[name]
+    code_k = ops.encode(data, use_kernel=True)
+    code_r = ops.encode(data, use_kernel=False)
+    assert (np.asarray(code_k) == np.asarray(code_r)).all()
+    bad = _corrupt(rng, data, 40)
+    if name == "parity8":
+        st_k = ops.check(bad, code_k, use_kernel=True)
+        st_r = ops.check(bad, code_r, use_kernel=False)
+        assert (np.asarray(st_k) == np.asarray(st_r)).all()
+        return
+    out_k, oc_k, st_k = ops.decode(bad, code_k, use_kernel=True)
+    out_r, oc_r, st_r = ops.decode(bad, code_r, use_kernel=False)
+    assert (np.asarray(out_k) == np.asarray(out_r)).all()
+    assert (np.asarray(oc_k) == np.asarray(oc_r)).all()
+    assert (np.asarray(st_k) == np.asarray(st_r)).all()
+
+
+def _daec_tier_rows(pool):
+    """Extract the DAEC tier's (data, codes) planes from raw storage."""
+    from repro.core.pool import CODE_LANE, DATA_LANES
+    stor = np.asarray(pool.storage)
+    if stor.ndim == 3:                                  # local pool
+        rows = stor[pool.daec_start:]
+    else:                                               # sharded (S, R, 9, W)
+        n_local = pool.daec_rows_local
+        rows = stor[:, stor.shape[1] - n_local:].reshape(-1, *stor.shape[2:])
+    data = rows[:, :DATA_LANES].transpose(0, 2, 1).reshape(rows.shape[0], -1)
+    return jnp.asarray(np.ascontiguousarray(data)), \
+        jnp.asarray(rows[:, CODE_LANE])
+
+
+def _pool_kernel_oracle_case(layout, num_shards, seed=7):
+    """Build a live pool with a DAEC tier, corrupt it, and check the
+    Pallas kernel and the jnp oracle agree bit-for-bit on its rows."""
+    from repro.core.pool import make_pool
+    from repro.shard import make_sharded_pool
+
+    rng = np.random.default_rng(seed)
+    step = 8 * num_shards
+    rows, daec_rows = max(64, 2 * step), 16
+    boundary = 0 if layout == Layout.BASELINE_ECC else step
+    if num_shards == 1:
+        pool = make_pool(rows, layout, boundary=boundary, row_words=64,
+                         daec_rows=daec_rows)
+    else:
+        pool = make_sharded_pool(rows, layout, boundary=boundary,
+                                 num_shards=num_shards, row_words=64,
+                                 daec_rows=daec_rows)
+    ids = jnp.arange(pool.num_pages, dtype=jnp.int32)
+    written = jnp.asarray(rng.integers(
+        0, 2**32, (pool.num_pages, pool.page_words), dtype=np.uint32))
+    pool = pool.write(ids, written)
+
+    import dataclasses
+
+    from repro.core.injection import FlipRecord, apply_flips
+    flips = [FlipRecord(int(r), int(rng.integers(0, 9)),
+                        int(rng.integers(0, 64)), int(rng.integers(0, 32)))
+             for r in range(pool.daec_start, pool.num_rows)]
+    if num_shards == 1:
+        pool = dataclasses.replace(
+            pool, storage=apply_flips(pool.storage, flips))
+    else:                         # global row r -> (shard r%S, local r//S)
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        arr = np.asarray(pool.storage).copy()
+        for f in flips:
+            arr[f.row % num_shards, f.row // num_shards,
+                f.lane, f.word] ^= np.uint32(1 << f.bit)
+        pool = dataclasses.replace(pool, storage=jax.device_put(
+            jnp.asarray(arr), NamedSharding(pool.mesh, P("banks"))))
+
+    data, codes = _daec_tier_rows(pool)
+    out_k, oc_k, st_k = daec_ops.decode(data, codes, use_kernel=True)
+    out_r, oc_r, st_r = daec_ops.decode(data, codes, use_kernel=False)
+    assert (np.asarray(out_k) == np.asarray(out_r)).all(), \
+        f"kernel/oracle data mismatch ({layout.value}, S={num_shards})"
+    assert (np.asarray(oc_k) == np.asarray(oc_r)).all()
+    assert (np.asarray(st_k) == np.asarray(st_r)).all()
+    # and the pool's own read path agrees with both: every single-bit
+    # flip in the tier is corrected back to the written content
+    got, st = pool.read(ids, status=True)
+    got, st = np.asarray(got), np.asarray(st)
+    tier = np.arange(pool.daec_start, pool.num_rows)
+    assert (got[tier] == np.asarray(written)[tier]).all()
+    assert (st[tier] <= CORRECTED_CODE).all() and (st[tier] > CLEAN).any()
+
+
+def test_kernel_matches_oracle_live_pool_fast():
+    _pool_kernel_oracle_case(Layout.INTERWRAP, 1)
+    _pool_kernel_oracle_case(Layout.BASELINE_ECC, 2)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("layout", list(Layout))
+@pytest.mark.parametrize("num_shards", [1, 2, 4, 8])
+def test_kernel_matches_oracle_all_layouts_all_shards(layout, num_shards):
+    _pool_kernel_oracle_case(layout, num_shards)
+
+
+# ---------------------------------------------------------------------------
+# Ladder-sync regression: adding a Protection member must flow into every
+# per-class surface automatically. Each assert below was a hardcoded
+# ``(3, 2)`` (or a literal class list) before the DAEC rung landed.
+# ---------------------------------------------------------------------------
+
+
+def test_fold_classes_derive_from_ladder():
+    from repro.obs import metrics
+    assert metrics.FOLD_CLASSES == tuple(p.value for p in ladder())
+    assert metrics.FOLD_CLASSES[0] == "daec"      # strongest first
+    assert len(metrics.FOLD_CLASSES) == len(Protection)
+
+
+def test_slo_tracker_covers_every_ladder_rung():
+    from repro.obs.slo import SLOTracker
+    tracker = SLOTracker()
+    for p in ladder():
+        assert p.value in tracker.classes, \
+            f"SLO tracker missing default class for {p.value}"
+    # the strong rungs carry the zero-tolerance contract
+    for cls in ("daec", "secded"):
+        assert tracker.classes[cls].budget == 0
+        assert tracker.classes[cls].silent_budget == 0
+
+
+def test_engine_status_fold_shape_tracks_ladder():
+    from repro.obs import metrics
+    from repro.serve.engine import _cream_cls_index, _status_counts
+    for layout in Layout:
+        idx = _cream_cls_index(layout)
+        assert 0 <= idx < len(metrics.FOLD_CLASSES)
+    pages = jnp.asarray([0, 8, 56], jnp.int32)       # cream, secded, daec
+    status = jnp.asarray([0, 1, 3], jnp.int32)
+    counts = np.asarray(_status_counts(
+        pages, status, boundary=8, num_rows=64,
+        cream_idx=_cream_cls_index(Layout.INTERWRAP), daec_start=48))
+    assert counts.shape == (len(metrics.FOLD_CLASSES), 2)
+    assert counts[metrics.FOLD_CLASSES.index("secded"), 0] == 1
+    assert counts[metrics.FOLD_CLASSES.index("daec"), 1] == 1
+    assert counts.sum() == 2                          # clean read not counted
+
+
+def test_fold_read_status_accepts_ladder_shaped_counts():
+    import copy
+
+    from repro.obs import metrics, slo
+    saved = copy.deepcopy(slo.TRACKER.classes)
+    try:
+        counts = np.zeros((len(metrics.FOLD_CLASSES), 2), np.int32)
+        counts[metrics.FOLD_CLASSES.index("daec")] = (5, 1)
+        before = copy.deepcopy(slo.TRACKER.classes.get("daec"))
+        metrics.fold_read_status(counts)
+        st = slo.TRACKER.classes["daec"]
+        assert st.corrected - (before.corrected if before else 0) == 5
+        assert st.uncorrectable - (before.uncorrectable if before else 0) == 1
+    finally:
+        slo.TRACKER.classes = saved

@@ -64,6 +64,11 @@ def test_rung5_cold_restart(trainer):
 # Each reliability class meets each multi-bit error shape; the verdict is
 # asserted against the ground-truth ShadowedPool oracle:
 #
+#   DAEC    single / adjacent double     -> corrected, data exact (the
+#           (one superbeat)                 interleaved dual-Hsiao splits
+#                                           any adjacent pair)
+#   DAEC    random double in one         -> detected, NEVER silent
+#           codeword (bits b, b+2)
 #   SECDED  adjacent double (one beat)   -> detected, NEVER silent (Hsiao
 #           detects every 2-bit beat error — no miscorrection; the data
 #           surfaces wrong but flagged)
@@ -76,12 +81,13 @@ def test_rung5_cold_restart(trainer):
 #   NONE    anything                     -> silent, every time
 
 
-def _shadowed(num_rows, layout, boundary, seed=0):
+def _shadowed(num_rows, layout, boundary, seed=0, daec_rows=0):
     import jax.numpy as jnp
     from repro.core.layouts import Layout  # noqa: F401
     from repro.core.pool import make_pool
     from repro.faults import ShadowedPool
-    pool = make_pool(num_rows, layout, boundary=boundary)
+    pool = make_pool(num_rows, layout, boundary=boundary,
+                     daec_rows=daec_rows)
     sh = ShadowedPool(pool)
     rng = np.random.default_rng(seed)
     data = rng.integers(0, 2**32, size=(sh.num_pages, sh.page_words),
@@ -99,6 +105,111 @@ def _read_all(sh):
     import jax.numpy as jnp
     sh.census.clear()
     return np.asarray(sh.read(jnp.arange(sh.num_pages)))
+
+
+def test_daec_single_corrected():
+    from repro.core.layouts import Layout
+    # rows [8, 16) are the SEC-DAEC tier of an all-protected pool
+    sh = _shadowed(16, Layout.INTERWRAP, boundary=0, daec_rows=8)
+    _flip(sh, [injection.FlipRecord(12, 3, 5, 17)])
+    data = _read_all(sh)
+    cen = sh.census["daec"]
+    assert cen.corrected == 1 and cen.detected == 0 and cen.silent == 0
+    assert (data[12] == sh._shadow[12]).all()            # exact recovery
+
+
+def test_daec_adjacent_double_corrected():
+    from repro.core.layouts import Layout
+    sh = _shadowed(16, Layout.INTERWRAP, boundary=0, daec_rows=8)
+    # the exact shape SECDED can only flag: two neighbouring bits of one
+    # word. Interleaving splits them across the A/B codewords -> corrected
+    _flip(sh, [injection.FlipRecord(10, 0, 10, 7),
+               injection.FlipRecord(10, 0, 10, 8)])
+    data = _read_all(sh)
+    cen = sh.census["daec"]
+    assert cen.corrected == 1 and cen.detected == 0 and cen.silent == 0
+    assert (data[10] == sh._shadow[10]).all()
+    # same shape, same pool, SECDED span below the tier: flagged, not fixed
+    _flip(sh, [injection.FlipRecord(3, 0, 10, 7),
+               injection.FlipRecord(3, 0, 10, 8)])
+    data = _read_all(sh)
+    cen = sh.census["secded"]
+    assert cen.detected == 1 and cen.silent == 0
+    assert (data[3] != sh._shadow[3]).any()
+
+
+def test_daec_random_double_detected_never_silent():
+    from repro.core.layouts import Layout
+    sh = _shadowed(16, Layout.INTERWRAP, boundary=0, daec_rows=8)
+    # bits b and b+2 of one word share parity -> same Hsiao codeword of
+    # one superbeat: beyond DAEC's correction radius, flagged not silent
+    _flip(sh, [injection.FlipRecord(9, 2, 4, 5),
+               injection.FlipRecord(9, 2, 4, 7)])
+    data = _read_all(sh)
+    cen = sh.census["daec"]
+    assert cen.detected == 1 and cen.silent == 0 and cen.corrected == 0
+    assert (data[9] != sh._shadow[9]).any()
+
+
+def test_campaign_escalates_to_daec_with_zero_silent_reads():
+    """Acceptance: at memcached FIT (70k) under an adjacent-double error
+    mix, the closed loop escalates SECDED -> DAEC (the SLO ceiling) and
+    the shadow oracle observes zero silent reads across the whole run."""
+    import jax.numpy as jnp
+    from repro.core.injection import ErrorMix
+    from repro.core.layouts import Layout
+    from repro.core.protection import Protection
+    from repro.faults import (FaultCampaign, MEMCACHED_FIT,
+                              hours_for_expected_flips)
+    from repro.vm import VirtualMemory, VMPolicy
+    from repro.vm.policy import TenantSLO
+
+    rng = np.random.default_rng(11)
+    vm = VirtualMemory(row_words=64)
+    vm.add_pool("p", 32, Layout.INTERWRAP, boundary=0)     # all SECDED
+    vm.create_tenant("t", segments={"seg": Protection.SECDED})
+    policy = VMPolicy(vm)
+    policy.set_tenant_slo("t", "seg",
+                          TenantSLO(max_error_rate=1e-3, min_reads=32,
+                                    ceiling=Protection.DAEC))
+    vpns = vm.alloc("t", 8, segment="seg")
+    payload = rng.integers(0, 2**32, (8, vm.page_words), dtype=np.uint32)
+    vm.write("t", vpns, jnp.asarray(payload))
+
+    hours = hours_for_expected_flips(
+        MEMCACHED_FIT, int(np.asarray(vm.pools["p"].storage).nbytes), 6.0)
+    campaign = FaultCampaign(vm, "p", policy=policy,
+                             fit_per_mbit=MEMCACHED_FIT,
+                             hours_per_step=hours,
+                             mix=ErrorMix(single=0.0, adjacent_double=1.0),
+                             seed=11)
+    escalated = []
+    for _ in range(40):
+        campaign.inject()
+        vm.read("t", vpns)
+        campaign.observe()
+        escalated = campaign.escalate()
+        if escalated:
+            break
+    assert escalated, "SLO loop never escalated under adjacent doubles"
+    assert escalated[0]["to"] == Protection.DAEC
+    assert vm.tenants["t"].segments["seg"] == Protection.DAEC
+    for v in vpns:
+        assert vm.effective_protection("t", v) == Protection.DAEC
+    # keep the pressure on: post-escalation reads ride the DAEC tier
+    for _ in range(6):
+        campaign.inject()
+        vm.read("t", vpns)
+        campaign.observe()
+    report = campaign.report()
+    campaign.detach()
+    assert campaign.injected > 0
+    assert report.census["daec"].reads > 0
+    # the headline contract, across every class the run touched
+    for cls, cen in report.census.items():
+        assert cen.silent == 0, f"silent read under {cls}"
+    # adjacent doubles are *corrected* in the DAEC tier, never detected
+    assert report.census["daec"].detected == 0
 
 
 def test_secded_adjacent_double_detected_never_silent():

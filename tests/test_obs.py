@@ -98,9 +98,10 @@ class TestRegistry:
     def test_fold_read_status(self):
         metrics.enable()
         metrics.touch_read_status()
-        counts = np.zeros((3, 2), np.int32)
-        counts[0, 0] = 4        # secded corrected
-        counts[2, 1] = 2        # none uncorrectable
+        # shape derives from the Protection ladder — never a literal
+        counts = np.zeros((len(metrics.FOLD_CLASSES), 2), np.int32)
+        counts[metrics.FOLD_CLASSES.index("secded"), 0] = 4
+        counts[metrics.FOLD_CLASSES.index("none"), 1] = 2
         metrics.fold_read_status(counts)
         assert metrics.REGISTRY.value(metrics.NAME_READ_STATUS,
                                       cls="secded", status="corrected") == 4
